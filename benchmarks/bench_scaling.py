@@ -1,0 +1,70 @@
+"""Section 3.1 claim: O(r(n+m)) vs O(nm) per-iteration scaling in n.
+
+Fixed iteration count (tol=0, max_iter fixed) isolates per-iteration cost;
+the log-log slope of time vs n should be ~1 for RF and ~2 for Sin.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    gaussian_features,
+    sinkhorn_factored,
+    sinkhorn_quadratic,
+    squared_euclidean,
+)
+from repro.core.features import GaussianFeatureMap
+from repro.data import gaussian_clouds
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready()        # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)[0].block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def main(n_list=(500, 1000, 2000, 4000), r: int = 256, eps: float = 0.5,
+         iters: int = 50):
+    rows = []
+    for n in n_list:
+        x, y = gaussian_clouds(0, n, 2)
+        a = jnp.full((n,), 1.0 / n)
+        b = jnp.full((n,), 1.0 / n)
+        R = 4.0
+        fm = GaussianFeatureMap(r=r, d=2, eps=eps, R=R)
+        U = fm.init(jax.random.PRNGKey(0))
+        xi = gaussian_features(x, U, eps=eps, q=fm.q)
+        zt = gaussian_features(y, U, eps=eps, q=fm.q)
+        K = jnp.exp(-squared_euclidean(x, y) / eps)
+
+        rf = jax.jit(lambda xi_, zt_: (sinkhorn_factored(
+            xi_, zt_, a, b, eps=eps, tol=0.0, max_iter=iters).u,))
+        sin = jax.jit(lambda K_: (sinkhorn_quadratic(
+            K_, a, b, eps=eps, tol=0.0, max_iter=iters).u,))
+        t_rf = _time(rf, xi, zt)
+        t_sin = _time(sin, K)
+        rows.append((n, t_rf, t_sin))
+
+    ns = np.array([r[0] for r in rows], float)
+    slope = lambda ts: np.polyfit(np.log(ns), np.log(np.array(ts)), 1)[0]
+    s_rf = slope([r[1] for r in rows])
+    s_sin = slope([r[2] for r in rows])
+    print("name,us_per_call,derived")
+    for n, t_rf, t_sin in rows:
+        print(f"scaling/RF/n{n},{t_rf * 1e6:.1f},iters={iters};r={r}")
+        print(f"scaling/Sin/n{n},{t_sin * 1e6:.1f},iters={iters}")
+    print(f"scaling/RF/slope,0,loglog_slope={s_rf:.2f}")
+    print(f"scaling/Sin/slope,0,loglog_slope={s_sin:.2f}")
+    return s_rf, s_sin
+
+
+if __name__ == "__main__":
+    main()

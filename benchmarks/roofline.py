@@ -1,0 +1,117 @@
+"""§Roofline report: aggregate the dry-run artifacts into the per-cell
+table (three terms, dominant bottleneck, MODEL_FLOPS utilization)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config, get_shape
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6 N D (dense) / 6 N_active D (MoE); D = tokens processed per step."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    d, L = cfg.d_model, cfg.n_layers
+    # active params per token (rough, embedding excluded)
+    if cfg.attention == "mla":
+        attn = (cfg.q_lora * d + cfg.q_lora * cfg.n_heads *
+                (cfg.qk_nope + cfg.qk_rope)
+                + d * (cfg.kv_lora + cfg.qk_rope)
+                + cfg.kv_lora * cfg.n_heads * (cfg.qk_nope + cfg.v_head)
+                + cfg.n_heads * cfg.v_head * d)
+    elif cfg.attention == "gqa":
+        hd = cfg.head_dim
+        attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    else:
+        attn = 0
+    if cfg.ssm_state:
+        d_in = cfg.d_inner
+        ssm = d * (2 * d_in + 2 * cfg.ssm_state + cfg.ssm_heads) + d_in * d
+    else:
+        ssm = 0
+    if cfg.n_experts:
+        ffn = 3 * d * cfg.moe_d_ff * (cfg.top_k + cfg.n_shared_experts)
+    elif cfg.d_ff:
+        ffn = 3 * d * cfg.d_ff
+    else:
+        ffn = 0
+    if cfg.family == "ssm":
+        per_layer = ssm
+    elif cfg.family == "hybrid":
+        plan = cfg.layer_plan()
+        n_attn = sum(1 for k in plan if k == "shared_attn")
+        n_mamba = len(plan) - n_attn
+        per_layer = (n_mamba * ssm + n_attn * (attn + 3 * d * cfg.d_ff)) / L
+    elif cfg.n_experts:
+        plan = cfg.layer_plan()
+        n_dense = sum(1 for k in plan if not k.endswith("_moe"))
+        dense_ffn = 3 * d * cfg.d_ff
+        per_layer = attn + (n_dense * dense_ffn +
+                            (L - n_dense) * ffn) / L
+    else:
+        per_layer = attn + ffn
+    n_active = per_layer * L
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode"
+                                   else 1)
+    mult = 6.0 if shape.mode == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def load_cells(mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR,
+                                              f"*_{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get("applicable", False):
+            continue
+        rec["arch"] = get_config(rec["arch"]).name   # canonical id
+        mf = model_flops(rec["arch"], rec["shape"])
+        hlo_total = rec["flops_per_device"] * rec["n_devices"]
+        rec["model_flops"] = mf
+        rec["useful_frac"] = mf / hlo_total if hlo_total else float("nan")
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rec["roofline_frac"] = (r["compute_s"] / bound) if bound else 0.0
+        rows.append(rec)
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for mesh in ("pod16x16", "pod2x16x16"):
+        for rec in load_cells(mesh):
+            r = rec["roofline"]
+            name = f"roofline/{rec['arch']}/{rec['shape']}/{mesh}"
+            bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            print(f"{name},{bound_s * 1e6:.1f},"
+                  f"dominant={r['dominant']};"
+                  f"compute_s={r['compute_s']:.3e};"
+                  f"memory_s={r['memory_s']:.3e};"
+                  f"collective_s={r['collective_s']:.3e};"
+                  f"useful_frac={rec['useful_frac']:.3f}")
+
+
+def markdown_table(mesh: str = "pod16x16") -> str:
+    rows = load_cells(mesh)
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | MODEL_FLOPS/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for rec in rows:
+        r = rec["roofline"]
+        out.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {rec['useful_frac']:.3f} | "
+            f"{rec['roofline_frac']:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits ``name,us_per_call,derived`` CSV rows:
+  tradeoff/*   — Fig. 1/3/5  RF vs Nys vs Sin time-accuracy
+  scaling/*    — §3.1        O(r(n+m)) vs O(nm) per-iteration scaling
+  gan_grad/*   — §4          GAN gradient cost vs batch size
+  solver/*     — Alg. 1      fused-kernel iteration microbench
+  roofline/*   — §Roofline   dry-run derived terms per (arch x shape x mesh)
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import io
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def bench_solver_iteration():
+    """Microbench of the paper's hot loop at production-ish sizes."""
+    from repro.core import sinkhorn_factored
+    key = jax.random.PRNGKey(0)
+    print_rows = []
+    for n, r in ((4096, 256), (16384, 256), (16384, 1024)):
+        xi = jax.random.uniform(key, (n, r)) + 0.05
+        zt = jax.random.uniform(jax.random.fold_in(key, 1), (n, r)) + 0.05
+        a = jnp.full((n,), 1.0 / n)
+        iters = 20
+        fn = jax.jit(lambda xi_, zt_: sinkhorn_factored(
+            xi_, zt_, a, a, eps=0.5, tol=0.0, max_iter=iters).u)
+        fn(xi, zt).block_until_ready()
+        t0 = time.perf_counter()
+        fn(xi, zt).block_until_ready()
+        dt = (time.perf_counter() - t0) / iters
+        flops = 4.0 * n * r  # 2 thin matvecs fwd
+        print_rows.append(
+            f"solver/iter/n{n}_r{r},{dt * 1e6:.1f},gflops_s="
+            f"{flops / dt / 1e9:.2f}")
+    return print_rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-tradeoff", action="store_true")
+    args = ap.parse_args()
+
+    def section(title):
+        print(f"# --- {title} ---", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+
+    section("solver microbench")
+    for row in bench_solver_iteration():
+        print(row)
+
+    section("scaling (linear vs quadratic, Sec 3.1)")
+    from . import bench_scaling
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        bench_scaling.main(n_list=(500, 1000, 2000) if args.quick
+                           else (500, 1000, 2000, 4000))
+    print("\n".join(l for l in buf.getvalue().splitlines()
+                    if not l.startswith("name,")))
+
+    if not args.skip_tradeoff:
+        section("tradeoff (Fig 1/3/5)")
+        from . import bench_tradeoff
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            bench_tradeoff.main(n=1000 if args.quick else 1200,
+                                quick=args.quick)
+        print("\n".join(l for l in buf.getvalue().splitlines()
+                        if not l.startswith("name,")))
+
+    section("gan gradient cost (Sec 4)")
+    from . import bench_gan
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        bench_gan.main(batch_sizes=(250, 500) if args.quick
+                       else (250, 500, 1000, 2000))
+    print("\n".join(l for l in buf.getvalue().splitlines()
+                    if not l.startswith("name,")))
+
+    section("roofline (from dry-run artifacts)")
+    try:
+        from . import roofline
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            roofline.main()
+        print("\n".join(l for l in buf.getvalue().splitlines()
+                        if not l.startswith("name,")))
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline/unavailable,0,reason={e!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""OT-GAN with adversarially-learned positive-feature kernels (paper §4).
+
+    PYTHONPATH=src python examples/ot_gan.py [--steps 300] [--pixels]
+
+Reproduces the paper's Eq. (18) objective at container scale:
+
+    min_rho  max_{gamma, theta}  (1/B) sum_b  Wbar_{eps, c_theta o h_gamma}
+
+* g_rho   — generator MLP z -> x
+* f_gamma — adversarial embedding x -> R^d_latent  (the "cost" tower)
+* phi_theta — Lemma-1 Gaussian positive features with LEARNED anchors
+
+The Sinkhorn divergence is evaluated with the linear-time factored solver,
+and its gradients flow through the envelope-theorem VJP — both of the
+paper's claimed advantages (linear batch cost; no unrolled loop in the
+backward graph).
+
+Default target: 8-mode Gaussian ring in R^2 (mode coverage printed).
+--pixels switches to a 12x12 synthetic "two-moons pixels" image domain to
+exercise the DCGAN-shaped pipeline (conv stubs replaced by MLPs on CPU).
+
+--eval-kernel prints the Table-1 analogue: learned kernel values between
+data/data, data/noise, noise/noise pairs.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rot_log_factored
+from repro.core.features import GaussianFeatureMap, gaussian_log_features
+from repro.models.layers import init_linear, linear
+
+LATENT_Z = 16
+LATENT_D = 8         # f_gamma output dim (the paper embeds into R^d)
+EPS = 0.5
+R_BALL = 3.0
+
+
+def init_mlp_stack(key, dims, std=None):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [init_linear(k, a, b, bias=True,
+                        std=(std or (2.0 / a) ** 0.5))
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def mlp_apply(stack, x, final_tanh=False):
+    for i, p in enumerate(stack):
+        x = linear(p, x)
+        if i < len(stack) - 1:
+            x = jax.nn.gelu(x)
+    return jnp.tanh(x) if final_tanh else x
+
+
+def make_data(key, n, pixels=False):
+    if pixels:
+        # two-moons rendered to 12x12 binary-ish images
+        k1, k2 = jax.random.split(key)
+        t = jnp.pi * jax.random.uniform(k1, (n,))
+        moon = jax.random.bernoulli(k2, 0.5, (n,))
+        cx = jnp.where(moon, 0.5 + 0.4 * jnp.cos(t), 0.5 - 0.4 * jnp.cos(t))
+        cy = jnp.where(moon, 0.35 + 0.3 * jnp.sin(t), 0.65 - 0.3 * jnp.sin(t))
+        gx, gy = jnp.meshgrid(jnp.linspace(0, 1, 12), jnp.linspace(0, 1, 12))
+        img = jnp.exp(-(((gx[None] - cx[:, None, None]) ** 2
+                         + (gy[None] - cy[:, None, None]) ** 2) / 0.01))
+        return img.reshape(n, 144)
+    # ring of 8 gaussians
+    k1, k2 = jax.random.split(key)
+    mode = jax.random.randint(k1, (n,), 0, 8)
+    ang = 2 * jnp.pi * mode / 8
+    centers = jnp.stack([jnp.cos(ang), jnp.sin(ang)], -1) * 2.0
+    return centers + 0.05 * jax.random.normal(k2, (n, 2))
+
+
+def gan_losses(params, key, data, fm: GaussianFeatureMap, n_iter=40):
+    g, f, anchors = params["gen"], params["emb"], params["anchors"]
+    B = data.shape[0]
+    z = jax.random.normal(key, (B, LATENT_Z))
+    fake = mlp_apply(g, z)
+    a = jnp.full((B,), 1.0 / B)
+
+    def embed(pts):
+        h = mlp_apply(f, pts, final_tanh=True) * R_BALL   # h_gamma into B(0,R)
+        return h
+
+    def div(p, q_):
+        lx = gaussian_log_features(embed(p), anchors, eps=EPS, q=fm.q)
+        ly = gaussian_log_features(embed(q_), anchors, eps=EPS, q=fm.q)
+        w_xy = rot_log_factored(lx, ly, a, a, EPS, 0.0, n_iter)
+        w_xx = rot_log_factored(lx, lx, a, a, EPS, 0.0, n_iter)
+        w_yy = rot_log_factored(ly, ly, a, a, EPS, 0.0, n_iter)
+        return w_xy - 0.5 * (w_xx + w_yy)
+
+    d = div(fake, data)
+    return d, fake
+
+
+def mode_coverage(fake):
+    ang = jnp.arctan2(fake[:, 1], fake[:, 0])
+    mode = jnp.round(ang / (2 * jnp.pi / 8)).astype(jnp.int32) % 8
+    radius_ok = jnp.abs(jnp.linalg.norm(fake[:, :2], axis=1) - 2.0) < 0.5
+    covered = jnp.zeros((8,)).at[mode].max(radius_ok.astype(jnp.float32))
+    return int(jnp.sum(covered))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--r", type=int, default=128)
+    ap.add_argument("--nc", type=int, default=3,
+                    help="adversary steps per generator step (paper's n_c)")
+    ap.add_argument("--pixels", action="store_true")
+    ap.add_argument("--eval-kernel", action="store_true")
+    args = ap.parse_args()
+
+    x_dim = 144 if args.pixels else 2
+    key = jax.random.PRNGKey(0)
+    kg, ke, ka, kd = jax.random.split(key, 4)
+    fm = GaussianFeatureMap(r=args.r, d=LATENT_D, eps=EPS, R=R_BALL)
+    params = {
+        "gen": init_mlp_stack(kg, [LATENT_Z, 128, 128, x_dim]),
+        "emb": init_mlp_stack(ke, [x_dim, 64, LATENT_D]),
+        "anchors": fm.init(ka),
+    }
+
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("adv",))
+    def train_step(params, key, data, lr_g=3e-3, lr_adv=1e-3, adv=False):
+        def loss_fn(p):
+            d, fake = gan_losses(p, key, data, fm)
+            return d, fake
+        (d, fake), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        sign = {"gen": -1.0, "emb": +1.0, "anchors": +1.0}
+        new = {}
+        for name in params:
+            lr = lr_g if name == "gen" else lr_adv
+            s = sign[name] * lr
+            upd = (lambda p_, g_: p_ + s * g_)
+            if adv and name == "gen":
+                new[name] = params[name]
+            elif (not adv) and name != "gen":
+                new[name] = params[name]
+            else:
+                new[name] = jax.tree.map(upd, params[name], grads[name])
+        return new, d, fake
+
+    t0 = time.time()
+    for step in range(args.steps):
+        kd, ks, kb = jax.random.split(kd, 3)
+        data = make_data(kb, args.batch, pixels=args.pixels)
+        adv = bool((step % (args.nc + 1)) != args.nc)  # n_c adversary : 1 gen
+        params, d, fake = train_step(params, ks, data, adv=adv)
+        if step % 50 == 0 or step == args.steps - 1:
+            msg = f"[ot-gan] step {step:4d} Wbar={float(d):+.4f}"
+            if not args.pixels:
+                msg += f" modes={mode_coverage(fake)}/8"
+            print(msg + f" ({time.time() - t0:.1f}s)")
+
+    if args.eval_kernel:
+        # Table-1 analogue: learned kernel geometry
+        kd1, kd2 = jax.random.split(kd)
+        data = make_data(kd1, 64, pixels=args.pixels)
+        noise = jax.random.normal(kd2, (64, x_dim))
+        def k_mean(p, q_):
+            lp = gaussian_log_features(
+                jnp.tanh(mlp_apply(params["emb"], p, final_tanh=True)) * R_BALL
+                if False else mlp_apply(params["emb"], p, final_tanh=True) * R_BALL,
+                params["anchors"], eps=EPS, q=fm.q)
+            lq = gaussian_log_features(
+                mlp_apply(params["emb"], q_, final_tanh=True) * R_BALL,
+                params["anchors"], eps=EPS, q=fm.q)
+            return float(jnp.mean(jnp.exp(lp) @ jnp.exp(lq).T))
+        print("learned kernel k_theta(f(x), f(y)) means "
+              "(Table 1 analogue):")
+        print(f"  data/data   = {k_mean(data, data):.4e}")
+        print(f"  data/noise  = {k_mean(data, noise):.4e}")
+        print(f"  noise/noise = {k_mean(noise, noise):.4e}")
+
+
+if __name__ == "__main__":
+    main()

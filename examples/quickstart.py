@@ -1,0 +1,74 @@
+"""Quickstart: linear-time Sinkhorn divergence between two point clouds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's pipeline end to end:
+  1. sample two clouds;
+  2. build Lemma-1 positive random features for the Gaussian kernel at eps;
+  3. run the factored O(r(n+m)) Sinkhorn (Alg. 1);
+  4. compare against the exact dense solver;
+  5. differentiate the divergence w.r.t. the cloud (envelope theorem).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    data_radius,
+    gaussian_log_features,
+    sinkhorn_divergence_gaussian,
+    sinkhorn_log_factored,
+    sinkhorn_log_quadratic,
+    squared_euclidean,
+)
+from repro.core.features import GaussianFeatureMap
+from repro.data import gaussian_clouds
+
+
+def main():
+    n, d, eps, r = 4000, 2, 0.5, 500
+    x, y = gaussian_clouds(seed=0, n=n, d=d)
+    a = jnp.full((n,), 1.0 / n)
+    R = float(data_radius(x, y))
+    print(f"clouds: n={n}, d={d}, radius={R:.2f}, eps={eps}, r={r}")
+
+    # --- exact (quadratic) reference ---
+    t0 = time.perf_counter()
+    C = squared_euclidean(x, y)
+    ref = sinkhorn_log_quadratic(C, a, a, eps=eps, tol=1e-6, max_iter=5000)
+    t_ref = time.perf_counter() - t0
+    print(f"exact ROT   = {float(ref.cost):+.5f}   ({t_ref:.2f}s, "
+          f"{int(ref.n_iter)} iters, O(n^2) per iter)")
+
+    # --- linear-time positive features (the paper) ---
+    fm = GaussianFeatureMap(r=r, d=d, eps=eps, R=R)
+    U = fm.init(jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    lxi = gaussian_log_features(x, U, eps=eps, q=fm.q)
+    lzt = gaussian_log_features(y, U, eps=eps, q=fm.q)
+    rf = sinkhorn_log_factored(lxi, lzt, a, a, eps=eps, tol=1e-6,
+                               max_iter=5000)
+    t_rf = time.perf_counter() - t0
+    dev = abs(float(rf.cost - ref.cost) / ref.cost) * 100
+    print(f"RF ROT      = {float(rf.cost):+.5f}   ({t_rf:.2f}s, "
+          f"{int(rf.n_iter)} iters, O(nr) per iter) — {dev:.2f}% off")
+
+    # --- differentiable Sinkhorn divergence ---
+    div_fn = jax.jit(lambda x_: sinkhorn_divergence_gaussian(
+        x_, y, U, eps=eps, q=fm.q, tol=1e-6, max_iter=2000))
+    grad_fn = jax.jit(jax.grad(lambda x_: sinkhorn_divergence_gaussian(
+        x_, y, U, eps=eps, q=fm.q, tol=1e-6, max_iter=2000)))
+    div = float(div_fn(x))
+    g = grad_fn(x)
+    print(f"divergence  = {div:+.5f}; |grad wrt locations| = "
+          f"{float(jnp.linalg.norm(g)):.4f} "
+          f"(envelope theorem — no backprop through the loop)")
+
+    # gradient step moves the cloud closer
+    x2 = x - 50.0 * g
+    print(f"after one gradient step: divergence = {float(div_fn(x2)):+.5f}")
+
+
+if __name__ == "__main__":
+    main()

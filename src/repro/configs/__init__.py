@@ -1,0 +1,14 @@
+from .base import ArchConfig, get_config, list_archs, register
+from .shapes import SHAPES, ShapeSpec, all_cells, cell_applicable, get_shape
+
+__all__ = [
+    "ArchConfig",
+    "SHAPES",
+    "ShapeSpec",
+    "all_cells",
+    "cell_applicable",
+    "get_config",
+    "get_shape",
+    "list_archs",
+    "register",
+]

@@ -1,0 +1,46 @@
+"""The four assigned input shapes + per-(arch x shape) applicability."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from .base import ArchConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "get_shape", "cell_applicable", "all_cells"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runs?, reason). long_500k needs a sub-quadratic serving path."""
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return False, (
+            "skip: pure full-attention arch — 500k decode would need the "
+            "entire quadratic-cost KV cache (DESIGN.md §Arch-applicability)"
+        )
+    if shape.mode == "decode" and not cfg.supports_decode():
+        return False, "skip: encoder-only arch has no decode step"
+    return True, "run"
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    from .base import list_archs
+    return [(a, s) for a in list_archs() for s in SHAPES]

@@ -1,0 +1,70 @@
+"""Core of the reproduction: linear-time Sinkhorn with positive features.
+
+Public API:
+  features    — Lemma-1 Gaussian / Lemma-3 arc-cosine / learnable feature maps
+  sinkhorn    — factored + quadratic + log-domain solvers (Alg. 1)
+  grad        — envelope-theorem custom VJPs (Prop. 3.2)
+  divergence  — Sinkhorn divergence (Eq. 2)
+  nystrom     — the paper's Nys baseline
+  sharded     — shard_map distributed solver (r-vector psum per iteration)
+  routing     — Sinkhorn-balanced MoE routing
+"""
+from .accelerated import accelerated_sinkhorn_log_factored
+from .barycenter import BarycenterResult, barycenter_log_factored
+from .features import (
+    ArcCosineFeatureMap,
+    GaussianFeatureMap,
+    arccos_features,
+    gaussian_features,
+    gaussian_log_features,
+    gaussian_q,
+    lambert_w0,
+)
+from .geometry import data_radius, gibbs_kernel, squared_euclidean
+from .grad import rot_factored, rot_log_factored
+from .nystrom import nystrom_factors, sinkhorn_nystrom
+from .routing import sinkhorn_route
+from .sharded import make_sharded_sinkhorn, sharded_sinkhorn_factored
+from .sinkhorn import (
+    SinkhornResult,
+    sinkhorn_factored,
+    sinkhorn_log_factored,
+    sinkhorn_log_quadratic,
+    sinkhorn_operator,
+    sinkhorn_quadratic,
+)
+from .divergence import (
+    sinkhorn_divergence_features,
+    sinkhorn_divergence_gaussian,
+)
+
+__all__ = [
+    "ArcCosineFeatureMap",
+    "BarycenterResult",
+    "accelerated_sinkhorn_log_factored",
+    "barycenter_log_factored",
+    "GaussianFeatureMap",
+    "SinkhornResult",
+    "arccos_features",
+    "data_radius",
+    "gaussian_features",
+    "gaussian_log_features",
+    "gaussian_q",
+    "gibbs_kernel",
+    "lambert_w0",
+    "make_sharded_sinkhorn",
+    "nystrom_factors",
+    "rot_factored",
+    "rot_log_factored",
+    "sharded_sinkhorn_factored",
+    "sinkhorn_divergence_features",
+    "sinkhorn_divergence_gaussian",
+    "sinkhorn_factored",
+    "sinkhorn_log_factored",
+    "sinkhorn_log_quadratic",
+    "sinkhorn_nystrom",
+    "sinkhorn_operator",
+    "sinkhorn_quadratic",
+    "sinkhorn_route",
+    "squared_euclidean",
+]

@@ -1,0 +1,70 @@
+"""Wasserstein barycenters through factored kernels (paper Fig. 6 / App C).
+
+Iterative Bregman projections [Benamou et al. '15] where every kernel
+application is O(r n) via K = Xi Xi^T. The paper's positive-sphere
+demonstration uses the ultimate special case phi(x) = x (linear kernel,
+r = d); the general entry point accepts any positive feature matrix —
+including Lemma-1 Gaussian features — so barycenters inherit the paper's
+linear-time scaling. Log-domain throughout (stable at small eps).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["BarycenterResult", "barycenter_log_factored"]
+
+
+def _lse(x, axis):
+    return jax.scipy.special.logsumexp(x, axis=axis)
+
+
+class BarycenterResult(NamedTuple):
+    weights: jax.Array       # (n,) the barycenter histogram
+    n_iter: jax.Array
+    err: jax.Array           # L1 change of the barycenter per iteration
+    converged: jax.Array
+
+
+def barycenter_log_factored(
+    log_xi: jax.Array,       # (n, r) log-features of the COMMON support
+    hists: jax.Array,        # (k, n) input histograms on that support
+    *,
+    eps: float,
+    weights: Optional[jax.Array] = None,   # (k,) barycentric weights
+    tol: float = 1e-7,
+    max_iter: int = 500,
+) -> BarycenterResult:
+    k, n = hists.shape
+    lam = jnp.full((k,), 1.0 / k) if weights is None else weights
+    log_hists = jnp.log(jnp.maximum(hists, 1e-38))
+
+    def log_K(s):            # log(K e^{s}) with K = Xi Xi^T, per problem
+        t = _lse(log_xi[None, :, :] + s[:, :, None], axis=1)   # (k, r)
+        return _lse(log_xi[None, :, :] + t[:, None, :], axis=2)
+
+    def body(state):
+        it, lf, lg, _, logb_prev = state
+        # project onto column constraints: g-update toward each a_i
+        lKf = log_K(lf)                                 # (k, n)
+        lg = log_hists - lKf
+        # barycenter = weighted geometric mean of the row marginals
+        lKg = log_K(lg)
+        logb = jnp.sum(lam[:, None] * (lKg + lf), axis=0)
+        logb = logb - _lse(logb, axis=0)                # normalize
+        lf = logb[None, :] - lKg
+        err = jnp.sum(jnp.abs(jnp.exp(logb) - jnp.exp(logb_prev)))
+        return it + 1, lf, lg, err, logb
+
+    def cond(state):
+        it, _, _, err, _ = state
+        return (it < max_iter) & (err > tol) & jnp.isfinite(err)
+
+    lf0 = jnp.zeros((k, n))
+    lg0 = jnp.zeros((k, n))
+    logb0 = jnp.full((n,), -jnp.log(n))
+    state = body((jnp.array(0, jnp.int32), lf0, lg0, jnp.inf, logb0))
+    it, lf, lg, err, logb = jax.lax.while_loop(cond, body, state)
+    return BarycenterResult(jnp.exp(logb), it, err, err <= tol)

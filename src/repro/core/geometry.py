@@ -1,0 +1,37 @@
+"""Ground costs, Gibbs kernels and exact references for benchmarking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "squared_euclidean",
+    "gibbs_kernel",
+    "neglog_kernel_cost",
+    "data_radius",
+]
+
+
+def squared_euclidean(x: jax.Array, y: jax.Array) -> jax.Array:
+    """C_ij = ||x_i - y_j||^2, shapes (n,d),(m,d) -> (n,m)."""
+    x2 = jnp.sum(x * x, axis=-1)[:, None]
+    y2 = jnp.sum(y * y, axis=-1)[None, :]
+    C = x2 + y2 - 2.0 * (x @ y.T)
+    return jnp.maximum(C, 0.0)
+
+
+def gibbs_kernel(C: jax.Array, eps: float) -> jax.Array:
+    """K = exp(-C / eps)."""
+    return jnp.exp(-C / eps)
+
+
+def neglog_kernel_cost(k_matrix: jax.Array, eps: float) -> jax.Array:
+    """c(x,y) = -eps log k(x,y) — the kernel-first cost of Eq. (7)."""
+    return -eps * jnp.log(k_matrix)
+
+
+def data_radius(*point_sets: jax.Array) -> jax.Array:
+    """R = max_i ||p_i||_2 over all supplied supports (for Lemma 1's q)."""
+    return jnp.max(
+        jnp.stack([jnp.max(jnp.linalg.norm(p, axis=-1)) for p in point_sets])
+    )

@@ -1,0 +1,104 @@
+"""Distributed linear Sinkhorn via ``shard_map``.
+
+The factored kernel is what makes Sinkhorn *distributable*: shard the
+SUPPORT of each measure over the ``data`` mesh axis —
+
+    Xi   : (n/p, r) per device        Zeta : (m/p, r) per device
+    u,a  : (n/p,)   per device        v,b  : (m/p,)   per device
+
+Each half-iteration is a LOCAL thin contraction followed by ONE tiny
+all-reduce of an r-vector:
+
+    t = psum_data( Xi_loc^T u_loc )          # (r,)  <- r floats on the wire
+    v_loc = b_loc / (Zeta_loc @ t)
+
+Quadratic Sinkhorn would instead need every device to see all n columns of
+K (an O(n m / p) all-to-all per iteration). The r-vector psum is the entire
+communication cost of the paper's method — this is the collective-term win
+quantified in EXPERIMENTS.md §Roofline.
+
+Convergence is checked with a psum'd local L1 error, so the while_loop
+carries a replicated scalar and all devices exit together (no divergence of
+control flow — a requirement for SPMD).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .sinkhorn import SinkhornResult
+
+__all__ = ["sharded_sinkhorn_factored", "make_sharded_sinkhorn"]
+
+
+def _sharded_body(xi, zeta, a, b, *, eps, tol, max_iter, axis):
+    """Runs INSIDE shard_map. All arrays are per-device shards."""
+    n_loc = a.shape[0]
+    m_loc = b.shape[0]
+    dtype = a.dtype
+
+    def rmatvec(u):                              # K^T u, sharded (m/p,)
+        t = jax.lax.psum(xi.T @ u, axis)         # (r,) replicated
+        return zeta @ t
+
+    def matvec(v):                               # K v, sharded (n/p,)
+        t = jax.lax.psum(zeta.T @ v, axis)
+        return xi @ t
+
+    def body(state):
+        it, u, v, s, _ = state
+        v = b / s
+        u = a / matvec(v)
+        s = rmatvec(u)
+        err = jax.lax.psum(jnp.sum(jnp.abs(v * s - b)), axis)
+        return it + 1, u, v, s, err
+
+    def cond(state):
+        it, _, _, _, err = state
+        return (it < max_iter) & (err > tol) & jnp.isfinite(err)
+
+    u0 = jnp.ones((n_loc,), dtype)
+    v0 = jnp.ones((m_loc,), dtype)
+    state = body((jnp.array(0, jnp.int32), u0, v0, rmatvec(u0),
+                  jnp.asarray(jnp.inf, dtype)))
+    it, u, v, s, err = jax.lax.while_loop(cond, body, state)
+    cost = eps * jax.lax.psum(
+        jnp.vdot(a, jnp.log(u)) + jnp.vdot(b, jnp.log(v)), axis
+    )
+    f, g = eps * jnp.log(u), eps * jnp.log(v)
+    return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
+
+
+def make_sharded_sinkhorn(mesh, *, axis: str = "data", eps: float,
+                          tol: float = 1e-6, max_iter: int = 2000):
+    """Build a shard_map'd solver bound to ``mesh``.
+
+    Inputs are globally-shaped; supports shard over ``axis``; the feature
+    dimension r and the result replicate.
+    """
+    body = partial(_sharded_body, eps=eps, tol=tol, max_iter=max_iter,
+                   axis=axis)
+    out_specs = SinkhornResult(
+        u=P(axis), v=P(axis), f=P(axis), g=P(axis),
+        cost=P(), n_iter=P(), marginal_err=P(), converged=P(),
+    )
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis), P(axis)),
+        out_specs=out_specs,
+        check_vma=False,
+    )
+
+
+def sharded_sinkhorn_factored(
+    mesh, xi, zeta, a, b, *, eps: float, axis: str = "data",
+    tol: float = 1e-6, max_iter: int = 2000
+) -> SinkhornResult:
+    fn = make_sharded_sinkhorn(mesh, axis=axis, eps=eps, tol=tol,
+                               max_iter=max_iter)
+    return fn(xi, zeta, a, b)

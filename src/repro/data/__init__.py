@@ -1,0 +1,18 @@
+from .pipeline import DataConfig, DataPipeline
+from .synthetic import (
+    gaussian_clouds,
+    highdim_clouds,
+    lm_batch,
+    sphere_clouds,
+    token_batch,
+)
+
+__all__ = [
+    "DataConfig",
+    "DataPipeline",
+    "gaussian_clouds",
+    "highdim_clouds",
+    "lm_batch",
+    "sphere_clouds",
+    "token_batch",
+]

@@ -1,0 +1,15 @@
+from .sharding import (
+    MeshContext,
+    current_mesh_context,
+    logical_spec,
+    shard,
+    use_mesh_context,
+)
+
+__all__ = [
+    "MeshContext",
+    "current_mesh_context",
+    "logical_spec",
+    "shard",
+    "use_mesh_context",
+]

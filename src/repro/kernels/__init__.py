@@ -1,0 +1,26 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  feature_map  — fused Gaussian positive-feature map (Lemma 1)
+  kermatvec    — factored-kernel contraction + fused Sinkhorn half-step
+  logmatvec    — stabilized log-space matvec (small-eps path)
+
+Each kernel ships with a pure-jnp oracle in ``ref.py``; tests sweep shapes
+and dtypes in interpret mode. ``ops.py`` holds the jitted public wrappers.
+"""
+from .ops import (
+    default_interpret,
+    feature_contract,
+    fused_sinkhorn_iteration,
+    gaussian_feature_map,
+    log_matvec,
+    sinkhorn_halfstep,
+)
+
+__all__ = [
+    "default_interpret",
+    "feature_contract",
+    "fused_sinkhorn_iteration",
+    "gaussian_feature_map",
+    "log_matvec",
+    "sinkhorn_halfstep",
+]

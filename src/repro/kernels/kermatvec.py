@@ -1,0 +1,127 @@
+"""Pallas TPU kernels for the factored-kernel Sinkhorn half-step.
+
+One half-step  v <- b / (Zeta (Xi^T u))  splits into:
+
+  phase 1  feature_contract : t = Xi^T u        (r, B) — reduction over n
+  phase 2  sinkhorn_halfstep: v = b / (Zeta t)  (m, B) — matvec + divide FUSED
+
+Fusing the marginal divide into phase 2 saves an HBM round-trip of the
+(m, B) product — on a v5e at 819 GB/s that round-trip is the dominant cost
+of the whole iteration once r is small (the op is memory-bound; see
+EXPERIMENTS.md §Perf napkin math).
+
+The batch dim B (independent Sinkhorn problems — GAN minibatch pairs) rides
+whole in both kernels; the MXU sees (bn x r) @ (r x B) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "feature_contract_pallas",
+    "sinkhorn_halfstep_pallas",
+]
+
+
+def _feature_contract_kernel(xi_ref, u_ref, t_ref):
+    """t += Xi_blk^T u_blk; n is the innermost (sequential) grid axis."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    t_ref[...] += jax.lax.dot_general(
+        xi_ref[...],
+        u_ref[...],
+        (((0,), (0,)), ((), ())),          # contract the n axis
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pad0(arr, mult, value=0.0):
+    pad = (-arr.shape[0]) % mult
+    if pad == 0:
+        return arr
+    widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_r", "interpret")
+)
+def feature_contract_pallas(
+    xi: jax.Array,          # (n, r)
+    u: jax.Array,           # (n, B)
+    *,
+    block_n: int = 512,
+    block_r: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """t = Xi^T u, shape (r, B). Zero-padded rows contribute nothing."""
+    n, r = xi.shape
+    B = u.shape[1]
+    xp = _pad0(xi, block_n)
+    up = _pad0(u, block_n)
+    rpad = (-r) % block_r
+    if rpad:
+        xp = jnp.pad(xp, ((0, 0), (0, rpad)))
+    grid = (xp.shape[1] // block_r, xp.shape[0] // block_n)
+    t = pl.pallas_call(
+        _feature_contract_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_r), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, B), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, B), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[1], B), jnp.float32),
+        interpret=interpret,
+    )(xp, up)
+    return t[:r]
+
+
+def _halfstep_kernel(xi_ref, t_ref, marg_ref, o_ref):
+    """o = marg / (Xi_blk @ t) — matvec + divide in one VMEM pass."""
+    kv = jax.lax.dot_general(
+        xi_ref[...],
+        t_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = marg_ref[...] / kv
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def sinkhorn_halfstep_pallas(
+    xi: jax.Array,          # (n, r) features of the side being updated
+    t: jax.Array,           # (r, B)
+    marg: jax.Array,        # (n, B)
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """out = marg / (Xi @ t), shape (n, B). r rides whole in VMEM (r<=4096)."""
+    n, r = xi.shape
+    B = marg.shape[1]
+    xp = _pad0(xi, block_n)
+    # padded rows: marg=1 so the divide yields finite garbage we slice away
+    mp = _pad0(marg, block_n, value=1.0)
+    grid = (xp.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _halfstep_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, r), lambda i: (i, 0)),
+            pl.BlockSpec((r, B), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, B), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], B), jnp.float32),
+        interpret=interpret,
+    )(xp, t, mp)
+    return out[:n]

@@ -1,0 +1,100 @@
+"""Jitted public wrappers over the Pallas kernels.
+
+On CPU (this container) every kernel runs in ``interpret=True`` mode — the
+kernel body executes in Python/XLA-CPU for correctness validation; on TPU
+the same BlockSpecs compile to Mosaic. ``interpret`` is resolved once from
+the backend unless overridden.
+
+``fused_sinkhorn_iteration`` composes the kernels into one full Alg.-1
+iteration (v then u) — this is the paper's O(r(n+m)) hot loop as it would
+run on hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .feature_map import gaussian_feature_map_pallas
+from .kermatvec import feature_contract_pallas, sinkhorn_halfstep_pallas
+from .logmatvec import log_matvec_pallas
+
+__all__ = [
+    "default_interpret",
+    "gaussian_feature_map",
+    "feature_contract",
+    "sinkhorn_halfstep",
+    "log_matvec",
+    "fused_sinkhorn_iteration",
+]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode iff we're not actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def gaussian_feature_map(
+    x: jax.Array,
+    anchors: jax.Array,
+    log_const: jax.Array,
+    *,
+    inv_eps: float,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    return gaussian_feature_map_pallas(
+        x, anchors, log_const, inv_eps=inv_eps, interpret=interpret
+    )
+
+
+def feature_contract(
+    xi: jax.Array, u: jax.Array, *, interpret: Optional[bool] = None
+) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    return feature_contract_pallas(xi, u, interpret=interpret)
+
+
+def sinkhorn_halfstep(
+    xi: jax.Array,
+    t: jax.Array,
+    marg: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    return sinkhorn_halfstep_pallas(xi, t, marg, interpret=interpret)
+
+
+def log_matvec(
+    log_m: jax.Array, t: jax.Array, *, interpret: Optional[bool] = None
+) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    return log_matvec_pallas(log_m, t, interpret=interpret)
+
+
+def fused_sinkhorn_iteration(
+    xi: jax.Array,          # (n, r)
+    zeta: jax.Array,        # (m, r)
+    a: jax.Array,           # (n, B)
+    b: jax.Array,           # (m, B)
+    u: jax.Array,           # (n, B) current scaling
+    *,
+    interpret: Optional[bool] = None,
+):
+    """One full Sinkhorn iteration on the factored kernel, Pallas end to end.
+
+        t   = Xi^T u            (contract)
+        v   = b / (Zeta t)      (fused halfstep)
+        s   = Zeta^T v          (contract)
+        u'  = a / (Xi s)        (fused halfstep)
+
+    Returns (u', v).
+    """
+    t = feature_contract(xi, u, interpret=interpret)
+    v = sinkhorn_halfstep(zeta, t, b, interpret=interpret)
+    s = feature_contract(zeta, v, interpret=interpret)
+    u_new = sinkhorn_halfstep(xi, s, a, interpret=interpret)
+    return u_new, v

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Tests sweep shapes/dtypes and assert_allclose(kernel(interpret=True), ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "gaussian_feature_map_ref",
+    "feature_contract_ref",
+    "sinkhorn_halfstep_ref",
+    "log_matvec_ref",
+]
+
+
+def gaussian_feature_map_ref(
+    x: jax.Array,          # (n, d)
+    anchors: jax.Array,    # (r, d)
+    log_const: jax.Array,  # (r,)  per-anchor additive log offset (incl -log r / 2)
+    *,
+    inv_eps: float,
+) -> jax.Array:
+    """Xi[i,k] = exp(log_const[k] - 2/eps ||x_i - u_k||^2), shape (n, r)."""
+    x2 = jnp.sum(x * x, axis=-1)[:, None]
+    u2 = jnp.sum(anchors * anchors, axis=-1)[None, :]
+    sq = x2 + u2 - 2.0 * (x @ anchors.T)
+    return jnp.exp(log_const[None, :] - 2.0 * inv_eps * sq)
+
+
+def feature_contract_ref(xi: jax.Array, u: jax.Array) -> jax.Array:
+    """t = Xi^T u : (n, r), (n, B) -> (r, B). Phase 1 of a Sinkhorn half-step."""
+    return xi.T @ u
+
+
+def sinkhorn_halfstep_ref(
+    xi: jax.Array,         # (n, r) features of the side being updated
+    t: jax.Array,          # (r, B) pre-contracted other side
+    marg: jax.Array,       # (n, B) target marginal
+) -> jax.Array:
+    """out = marg / (Xi @ t) : the fused matvec + marginal divide."""
+    return marg / (xi @ t)
+
+
+def log_matvec_ref(log_m: jax.Array, t: jax.Array) -> jax.Array:
+    """out_j = logsumexp_k(log_m[j, k] + t[k]) : (m, r), (r,) -> (m,)."""
+    return jax.scipy.special.logsumexp(log_m + t[None, :], axis=1)

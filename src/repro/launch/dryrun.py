@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we:
+  1. build the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lower jax.jit(train_step | serve_step) on ShapeDtypeStruct stand-ins
+     (zero allocation — params, optimizer state and caches are abstract),
+  3. compile, print compiled.memory_analysis() (proves the program fits)
+     and compiled.cost_analysis() (FLOPs / bytes for §Roofline),
+  4. parse the partitioned HLO for collective traffic,
+  5. dump a JSON artifact to artifacts/dryrun/ for the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, cell_applicable, get_config, get_shape, list_archs
+from .hlo_analysis import HW, parse_collectives, roofline_terms
+from .mesh import make_production_mesh
+from .specs import cache_specs, input_specs
+from .steps import abstract_state, make_serve_step, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             artifact_dir: str = ARTIFACT_DIR) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = cell_applicable(cfg, shape)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "applicable": ok, "reason": reason,
+    }
+    if not ok:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_tag}: {reason}")
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    with mesh:
+        if shape.mode == "train":
+            step, shapes, shards = make_train_step(cfg, mesh, shape)
+            p_shape, o_shape, in_specs = shapes
+            lowered = step.lower(p_shape, o_shape, in_specs)
+        elif shape.mode == "prefill":
+            step, shapes, shards = make_serve_step(cfg, mesh, shape)
+            p_shape, in_specs = shapes
+            lowered = step.lower(p_shape, in_specs)
+        else:
+            step, shapes, shards = make_serve_step(cfg, mesh, shape)
+            p_shape, in_specs, c_specs = shapes
+            lowered = step.lower(p_shape, in_specs, c_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    mem_stats = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_stats[attr] = int(v)
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_tag}: "
+          f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    print(f"  memory_analysis: {mem_stats}")
+    flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    hbm = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    print(f"  cost_analysis: flops={flops:.3e} bytes={hbm:.3e}")
+
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, n_dev)
+
+    # loop-aware analysis: cost_analysis counts while bodies ONCE; re-derive
+    # FLOPs + collective bytes with trip-count multipliers (hlo_loops.py).
+    from .hlo_loops import analyze_hlo
+    loop = analyze_hlo(hlo, n_dev)
+    flops_la = max(loop["flops_per_device"], flops)
+    wire_la = max(loop["wire_bytes_per_device"], coll.wire_bytes)
+    # HBM bytes: scale the (per-body) cost_analysis number by the measured
+    # flops correction — an estimate, flagged as such in EXPERIMENTS.md.
+    hbm_la = hbm * (flops_la / flops if flops else 1.0)
+    terms = roofline_terms(flops_la, hbm_la, wire_la)
+    print(f"  collectives(loop-aware): "
+          f"{ {k: int(v) for k, v in loop['collective_counts'].items()} } "
+          f"wire_bytes/dev={wire_la:.3e}")
+    print(f"  loop-aware flops/dev={flops_la:.3e} (raw {flops:.3e}); "
+          f"hbm est={hbm_la:.3e}")
+    print(f"  roofline: compute={terms['compute_s']:.3e}s "
+          f"memory={terms['memory_s']:.3e}s "
+          f"collective={terms['collective_s']:.3e}s "
+          f"-> {terms['dominant']}-bound")
+
+    result.update({
+        "n_devices": n_dev,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "memory": mem_stats,
+        "flops_per_device": flops_la,
+        "flops_per_device_raw": flops,
+        "hbm_bytes_per_device": hbm_la,
+        "hbm_bytes_per_device_raw": hbm,
+        "collective_counts": {k: int(v) for k, v in
+                              loop["collective_counts"].items()},
+        "collective_result_bytes": coll.bytes_by_kind,
+        "wire_bytes_per_device": wire_la,
+        "wire_bytes_per_device_raw": coll.wire_bytes,
+        "roofline": terms,
+    })
+    os.makedirs(artifact_dir, exist_ok=True)
+    out = os.path.join(artifact_dir, f"{arch}_{shape_name}_{mesh_tag}.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = []
+    for a, s, mp in cells:
+        tag = "pod2x16x16" if mp else "pod16x16"
+        if args.skip_done:
+            p = os.path.join(ARTIFACT_DIR, f"{a}_{s}_{tag}.json")
+            if os.path.exists(p):
+                print(f"[dryrun] skip (done): {a} x {s} x {tag}")
+                continue
+        try:
+            run_cell(a, s, multi_pod=mp)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((a, s, tag, repr(e)))
+    if failures:
+        print(f"\n[dryrun] FAILURES ({len(failures)}):")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\n[dryrun] all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Parse lowered/compiled HLO text for collective traffic + roofline terms.
+
+cost_analysis() gives FLOPs and HBM bytes; collective bytes are NOT in it,
+so we regex the (SPMD-partitioned, per-device) HLO module: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+result shape is converted to wire bytes with ring-algorithm factors.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "HW",
+    "CollectiveStats",
+    "parse_collectives",
+    "roofline_terms",
+]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 / chip
+    hbm_bw: float = 819e9             # B/s / chip
+    ici_bw: float = 50e9              # B/s / link
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]   # result-shape bytes (per device)
+    wire_bytes: float                 # ring-model bytes on the wire / device
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ARR_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len(first.split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    bytes_by_kind: Dict[str, float] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue                      # count async pairs once (at -start)
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        g = _group_size(line, n_devices)
+        frac = (g - 1) / max(g, 1)
+        if kind == "all-gather":
+            w = nbytes * frac             # result is the gathered buffer
+        elif kind == "reduce-scatter":
+            w = nbytes * (g - 1)          # result is the scattered shard
+        elif kind == "all-reduce":
+            w = 2.0 * nbytes * frac       # ring RS+AG
+        elif kind == "all-to-all":
+            w = nbytes * frac
+        else:                             # collective-permute
+            w = nbytes
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + nbytes
+        wire += w
+    return CollectiveStats(counts, bytes_by_kind, wire)
+
+
+def roofline_terms(
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    wire_bytes_per_device: float,
+    hw: HW = HW(),
+) -> Dict[str, float]:
+    """The three roofline terms, in seconds (per step, per device)."""
+    compute_s = flops_per_device / hw.peak_flops
+    memory_s = hbm_bytes_per_device / hw.hbm_bw
+    collective_s = wire_bytes_per_device / hw.ici_bw
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+    }

@@ -1,0 +1,40 @@
+"""Production mesh builders. Functions, not module constants — importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """(2, 16, 16) pod x data x model multi-pod, or (16, 16) single-pod.
+
+    Single-pod uses the first 256 devices so the same
+    ``--xla_force_host_platform_device_count=512`` process serves both.
+    """
+    if multi_pod:
+        shape = (2, 16, 16)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (16, 16)
+        axes = ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)} — set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax"
+        )
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over available devices (smoke tests / examples)."""
+    n = data * model
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]).reshape(data, model), ("data", "model"))

@@ -1,0 +1,229 @@
+"""ShapeDtypeStruct input specs + parameter sharding rules.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable stand-ins
+for every model input — no device allocation (the dry-run contract).
+``param_shardings`` maps every parameter leaf onto the production mesh:
+
+  experts  (L, E, d, f)  ->  E over 'model' (EP), d/f over 'data' (FSDP)
+  embed    (V, d)        ->  vocab over 'model', d over 'data'
+  lm_head  (d, V)        ->  d over 'data', vocab over 'model'
+  generic  (..., a, b)   ->  'data' on the first divisible trailing dim
+                             (+ 'model' on the other when divisible and the
+                              arch is zero3) — ZeRO-3 weight sharding; the
+                             per-layer all-gather is amortized by the scan.
+  1-D / tiny leaves      ->  replicated
+
+Optimizer moments inherit their parameter's sharding (ZeRO-1/2 comes free).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ArchConfig, ShapeSpec
+from ..distributed.sharding import MeshContext
+from ..models import cache_logical_axes, init_caches
+from ..models.model import effective_window
+
+__all__ = [
+    "input_specs",
+    "input_shardings",
+    "param_shardings",
+    "cache_shardings",
+    "cache_specs",
+]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs for the given (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.mode == "train":
+        if cfg.input_kind == "embeds":
+            return {"embeds": _sds((B, S, d), cfg.compute_dtype),
+                    "labels": _sds((B, S), "int32")}
+        if cfg.input_kind == "encdec":
+            return {"enc_embeds": _sds((B, S, d), cfg.compute_dtype),
+                    "tokens": _sds((B, S), "int32"),
+                    "labels": _sds((B, S), "int32")}
+        return {"tokens": _sds((B, S), "int32"),
+                "labels": _sds((B, S), "int32")}
+    if shape.mode == "prefill":
+        if cfg.input_kind == "embeds":
+            return {"embeds": _sds((B, S, d), cfg.compute_dtype)}
+        if cfg.input_kind == "encdec":
+            return {"enc_embeds": _sds((B, S, d), cfg.compute_dtype),
+                    "tokens": _sds((B, S), "int32")}
+        return {"tokens": _sds((B, S), "int32")}
+    # decode: one new token against an S-long cache
+    out: Dict[str, Any] = {}
+    if cfg.input_kind == "embeds":
+        out["embeds"] = _sds((B, 1, d), cfg.compute_dtype)
+    else:
+        out["tokens"] = _sds((B, 1), "int32")
+    if cfg.input_kind == "encdec":
+        out["enc_kv"] = {
+            "k": _sds((cfg.n_layers, B, S, cfg.n_heads, cfg.head_dim),
+                      cfg.compute_dtype),
+            "v": _sds((cfg.n_layers, B, S, cfg.n_heads, cfg.head_dim),
+                      cfg.compute_dtype),
+        }
+    return out
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Cache ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def _resolve(ctx: MeshContext, logical):
+    return tuple(ctx.resolve(a) for a in logical)
+
+
+def _axis_ok(mesh: Mesh, axis, size: int) -> bool:
+    if axis is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return size % total == 0
+
+
+def input_shardings(mesh: Mesh, cfg: ArchConfig, shape: ShapeSpec,
+                    specs: Dict[str, Any]):
+    """NamedSharding tree matching input_specs."""
+    ctx = MeshContext(mesh)
+    dp = ctx.dp_axes if ctx.dp_axes else None
+    tp = ctx.tp_axis
+
+    def batch_axis(B):
+        return dp if (dp and _axis_ok(mesh, dp, B)) else None
+
+    def spec_for(path: str, s) -> NamedSharding:
+        dims = s.shape
+        if path in ("tokens", "labels"):
+            ax = [batch_axis(dims[0])] + [None] * (len(dims) - 1)
+            if shape.mode != "decode" and len(dims) > 1 and _axis_ok(mesh, tp, dims[1]):
+                ax[1] = tp
+            return NamedSharding(mesh, P(*ax))
+        if path in ("embeds", "enc_embeds"):
+            ax = [batch_axis(dims[0]), None, None]
+            if shape.mode != "decode" and _axis_ok(mesh, tp, dims[1]):
+                ax[1] = tp
+            return NamedSharding(mesh, P(*ax))
+        if path in ("enc_kv.k", "enc_kv.v"):
+            # (L, B, S, H, D): shard encoder length over 'model'
+            ax = [None, batch_axis(dims[1]),
+                  tp if _axis_ok(mesh, tp, dims[2]) else None, None, None]
+            return NamedSharding(mesh, P(*ax))
+        return NamedSharding(mesh, P())
+
+    out = {}
+    for k, v in specs.items():
+        if isinstance(v, dict):
+            out[k] = {kk: spec_for(f"{k}.{kk}", vv) for kk, vv in v.items()}
+        else:
+            out[k] = spec_for(k, v)
+    return out
+
+
+def cache_shardings(mesh: Mesh, cfg: ArchConfig, shape: ShapeSpec):
+    """NamedSharding tree matching cache_specs (decode contract)."""
+    ctx = MeshContext(mesh, mode="decode")
+    specs = cache_specs(cfg, shape)
+    logical = cache_logical_axes(cfg)
+    leaves, treedef = jax.tree.flatten(specs)
+    from ..models.attention import GQACache, MLACache
+    from ..models.ssm import Mamba2Cache
+    lg_leaves = jax.tree.flatten(
+        logical,
+        is_leaf=lambda x: isinstance(x, str)
+        or (isinstance(x, tuple) and not isinstance(
+            x, (GQACache, MLACache, Mamba2Cache))),
+    )[0]
+    out = []
+    for leaf, lg in zip(leaves, lg_leaves):
+        if lg == "skip":
+            out.append(NamedSharding(mesh, P()))
+            continue
+        ax = []
+        for dim, name in zip(leaf.shape, lg):
+            a = ctx.resolve(name)
+            ax.append(a if _axis_ok(mesh, a, dim) else None)
+        out.append(NamedSharding(mesh, P(*ax)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_shardings(mesh: Mesh, cfg: ArchConfig, params_shape) -> Any:
+    """Sharding tree for a params (or optimizer moment) shape-tree.
+
+    The ZeRO 'data' direction spans ('pod', 'data') on the multi-pod mesh —
+    optimizer state and FSDP weight shards shrink with the FULL
+    data-parallel world size, which is what makes the 671B fit as pods are
+    added (EXPERIMENTS.md §Dry-run)."""
+    model_ok = "model" in mesh.axis_names
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def rule(path: Tuple, leaf) -> NamedSharding:
+        keys = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+        name = "/".join(keys)
+        dims = leaf.shape
+        ax: list = [None] * len(dims)
+
+        def try_assign(dim_idx: int, axis) -> bool:
+            if axis == "data":
+                if not dp_axes:
+                    return False
+                axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            elif axis == "model" and not model_ok:
+                return False
+            if ax[dim_idx] is not None:
+                return False
+            size = 1
+            for a in (axis if isinstance(axis, tuple) else (axis,)):
+                size *= mesh.shape[a]
+            if dims[dim_idx] % size == 0 and dims[dim_idx] >= size:
+                ax[dim_idx] = axis
+                return True
+            return False
+
+        if "moe" in name and any(k in name for k in ("up", "gate", "down")):
+            # (L, E, d, f) or (E, d, f): E -> model (EP), then FSDP on d/f
+            e_dim = len(dims) - 3
+            try_assign(e_dim, "model")
+            if cfg.zero3:
+                if "down" in name:
+                    try_assign(len(dims) - 1, "data")   # (f, d): shard d
+                else:
+                    try_assign(len(dims) - 2, "data")   # (d, f): shard d
+            return NamedSharding(mesh, P(*ax))
+        if "embed" in name and "table" in name:
+            try_assign(0, "model")
+            try_assign(1, "data")
+            return NamedSharding(mesh, P(*ax))
+        if "lm_head" in name:
+            if len(dims) == 2:
+                try_assign(1, "model")
+                try_assign(0, "data")
+            return NamedSharding(mesh, P(*ax))
+        if "router" in name or len(dims) <= 1 or leaf.size < 65536:
+            return NamedSharding(mesh, P(*ax))
+        # generic FSDP: 'data' on the first divisible trailing dim
+        for dim_idx in range(len(dims) - 2, len(dims)):
+            if try_assign(dim_idx, "data"):
+                break
+        return NamedSharding(mesh, P(*ax))
+
+    paths = jax.tree_util.tree_flatten_with_path(params_shape)
+    leaves = [rule(p, l) for p, l in paths[0]]
+    return jax.tree_util.tree_unflatten(paths[1], leaves)

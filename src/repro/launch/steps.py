@@ -1,0 +1,163 @@
+"""jit-able train / prefill / decode step factories with full shardings."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ArchConfig, ShapeSpec
+from ..distributed.sharding import MeshContext, use_mesh_context
+from ..models import decode_step, init_params, prefill, train_loss
+from ..models.model import effective_window
+from ..optim import AdamWConfig, adamw_update, init_adamw, linear_warmup_cosine
+from . import specs as S
+
+__all__ = ["make_train_step", "make_serve_step", "abstract_state"]
+
+
+def abstract_state(cfg: ArchConfig, opt: Optional[AdamWConfig] = None):
+    """(params, opt_state) as ShapeDtypeStructs — no allocation."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    p_shape = jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    if opt is None:
+        return p_shape, None
+    o_shape = jax.eval_shape(lambda p: init_adamw(p, opt), p_shape)
+    return p_shape, o_shape
+
+
+def make_train_step(
+    cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec,
+    opt: AdamWConfig = AdamWConfig(),
+    total_steps: int = 10000,
+    micro_batches: int = 0,
+):
+    """Returns (jitted step fn, in_shardings tuple). Step signature:
+    (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``micro_batches`` > 1 enables gradient accumulation: the global batch
+    is split on its leading dim and scanned, cutting activation memory by
+    ~M while the weights/optimizer traffic is paid once (§Perf hillclimb).
+    0 = auto (on for the ZeRO-3 giants, off otherwise).
+    """
+    ctx = MeshContext(mesh, mode="train")
+    sched = linear_warmup_cosine(opt.lr, min(200, total_steps // 10 + 1),
+                                 total_steps)
+    import dataclasses as _dc
+    if cfg.zero3 and opt.moment_dtype == "float32":
+        # optimizer HBM is the binding constraint at 100B+ scale
+        opt = _dc.replace(opt, moment_dtype="bfloat16")
+    if micro_batches == 0:
+        micro_batches = 4 if cfg.zero3 else 1
+    # each microbatch's leading dim must still shard over the DP axes
+    dp_size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp_size *= mesh.shape[a]
+    B = shape.global_batch
+    while micro_batches > 1 and (
+        B % micro_batches != 0 or (B // micro_batches) % dp_size != 0
+    ):
+        micro_batches //= 2
+
+    def step(params, opt_state, batch):
+        with use_mesh_context(ctx):
+            grad_fn = jax.value_and_grad(
+                lambda p, b: train_loss(p, cfg, b), has_aux=True
+            )
+            if micro_batches > 1:
+                micro = jax.tree.map(
+                    lambda x: x.reshape((micro_batches,
+                                         x.shape[0] // micro_batches)
+                                        + x.shape[1:]),
+                    batch,
+                )
+
+                def accum(carry, mb):
+                    g_acc, m_acc = carry
+                    (_, metrics), g = grad_fn(params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b_: a + b_.astype(a.dtype), g_acc, g)
+                    m_acc = jax.tree.map(lambda a, b_: a + b_, m_acc,
+                                         metrics)
+                    return (g_acc, m_acc), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.param_dtype)),
+                    params)
+                m0 = jax.eval_shape(lambda b: grad_fn(params, b)[0][1],
+                                    jax.tree.map(lambda x: x[0], micro))
+                m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+                (grads, metrics), _ = jax.lax.scan(
+                    accum, (g0, m0), micro)
+                inv = 1.0 / micro_batches
+                grads = jax.tree.map(lambda g: g * inv, grads)
+                metrics = jax.tree.map(lambda m: m * inv, metrics)
+            else:
+                (_, metrics), grads = grad_fn(params, batch)
+            params, opt_state, om = adamw_update(
+                params, grads, opt_state, opt, lr_schedule=sched
+            )
+            metrics.update(om)
+        return params, opt_state, metrics
+
+    p_shape, o_shape = abstract_state(cfg, opt)
+    p_shard = S.param_shardings(mesh, cfg, p_shape)
+    o_shard = jax.eval_shape(lambda: None)  # placeholder
+    from ..optim.adamw import AdamWState
+    o_shard = AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=S.param_shardings(mesh, cfg, p_shape),
+        v=S.param_shardings(mesh, cfg, p_shape),
+    )
+    in_specs = S.input_specs(cfg, shape)
+    b_shard = S.input_shardings(mesh, cfg, shape, in_specs)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (p_shape, o_shape, in_specs), (p_shard, o_shard, b_shard)
+
+
+def make_serve_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec):
+    """Prefill or decode step for the given serving shape."""
+    if shape.mode == "prefill":
+        ctx = MeshContext(mesh, mode="prefill")
+
+        def step(params, batch):
+            with use_mesh_context(ctx):
+                return prefill(params, cfg, batch)
+
+        p_shape, _ = abstract_state(cfg, None)
+        p_shard = S.param_shardings(mesh, cfg, p_shape)
+        in_specs = S.input_specs(cfg, shape)
+        b_shard = S.input_shardings(mesh, cfg, shape, in_specs)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        return jitted, (p_shape, in_specs), (p_shard, b_shard)
+
+    ctx = MeshContext(mesh, mode="decode")
+    win = effective_window(cfg, shape.seq_len)
+
+    def step(params, batch, caches):
+        with use_mesh_context(ctx):
+            return decode_step(params, cfg, batch, caches, window=win)
+
+    p_shape, _ = abstract_state(cfg, None)
+    p_shard = S.param_shardings(mesh, cfg, p_shape)
+    in_specs = S.input_specs(cfg, shape)
+    b_shard = S.input_shardings(mesh, cfg, shape, in_specs)
+    c_specs = S.cache_specs(cfg, shape)
+    c_shard = S.cache_shardings(mesh, cfg, shape)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, b_shard, c_shard),
+        out_shardings=(None, c_shard),
+        donate_argnums=(2,),
+    )
+    return jitted, (p_shape, in_specs, c_specs), (p_shard, b_shard, c_shard)

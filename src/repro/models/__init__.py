@@ -1,0 +1,23 @@
+from .model import (
+    cache_logical_axes,
+    decode_step,
+    forward,
+    init_caches,
+    init_params,
+    param_count,
+    prefill,
+    shard_caches,
+    train_loss,
+)
+
+__all__ = [
+    "cache_logical_axes",
+    "decode_step",
+    "forward",
+    "init_caches",
+    "init_params",
+    "param_count",
+    "prefill",
+    "shard_caches",
+    "train_loss",
+]

@@ -1,0 +1,510 @@
+"""Attention variants: GQA (+QKV bias, sliding window), MLA, cross-attention.
+
+Memory-efficient (flash-style) chunked attention in pure JAX: the KV axis is
+processed in chunks under a ``lax.scan`` with running (max, sum, acc) — no
+(S_q x S_kv) score matrix ever materializes, which is what lets the 32k
+prefill shapes compile inside v5e HBM. On real TPUs you would drop a Pallas
+flash kernel in here; for this repo the Pallas budget is spent on the
+paper's own hot-spots (see repro/kernels) and attention stays XLA-fusible.
+
+Sharding contract (enforced by the caller via with_sharding_constraint):
+  train/prefill:  q seq-sharded over 'model' (context parallelism),
+                  k/v gathered (replicated over 'model').
+  decode:         cache seq-sharded over 'model'; XLA auto-inserts the
+                  flash-decoding style softmax collectives.
+
+MLA (DeepSeek-V2/V3): trains on decompressed K/V (per-chunk decompression
+inside the scan), decodes with *weight absorption* — scores and values are
+contracted directly in the 512-dim compressed space, so the KV cache stays
+(kv_lora + rope_dim) per token.
+
+Sliding-window (SWA) decode uses a rolling cache of size ``window`` —
+long_500k on h2o-danube holds 4096 cache rows, not 524288.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rotary, init_linear, linear, rmsnorm, rotary_cos_sin, trunc_normal
+
+__all__ = [
+    "init_gqa",
+    "gqa_train",
+    "gqa_decode",
+    "init_gqa_cache",
+    "init_mla",
+    "mla_train",
+    "mla_decode",
+    "init_mla_cache",
+    "init_cross_attention",
+    "cross_attention",
+    "chunked_attention",
+]
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention core
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,                     # (B, Q, H, D) — already scaled/roped
+    kv: Any,                          # pytree; arrays have KV-seq on axis 1
+    s_kv: int,
+    *,
+    score_fn: Callable[[jax.Array, Any], jax.Array],   # -> (B, H, Q, Ck)
+    value_fn: Callable[[jax.Array, Any], jax.Array],   # probs -> (B, Q, H, D)
+    mask_fn: Callable[[jax.Array], jax.Array],         # kv positions (Ck,) -> (B,1,Q,Ck) or (1,1,Q,Ck)
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Numerically-stable streaming softmax over KV chunks."""
+    B, Q, H, D = q.shape
+    kv_chunk = min(kv_chunk, s_kv)
+    n_chunks = -(-s_kv // kv_chunk)
+    pad = n_chunks * kv_chunk - s_kv
+    if pad:
+        kv = jax.tree.map(
+            lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)),
+            kv,
+        )
+
+    def slice_chunk(c):
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, c * kv_chunk, kv_chunk, 1),
+            kv,
+        )
+
+    def body(carry, c):
+        m, l, acc = carry
+        kv_c = slice_chunk(c)
+        pos_k = c * kv_chunk + jnp.arange(kv_chunk)
+        s = score_fn(q, kv_c).astype(jnp.float32)          # (B, H, Q, Ck)
+        valid = (pos_k < s_kv)[None, None, None, :]
+        s = jnp.where(mask_fn(pos_k) & valid, s, _NEG_INF)
+        m_c = jnp.max(s, axis=-1)                          # (B, H, Q)
+        m_new = jnp.maximum(m, m_c)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_c = value_fn(p, kv_c)                            # (B, Q, H, D) f32
+        acc_new = acc * jnp.transpose(corr, (0, 2, 1))[..., None] + o_c
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Q), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Q), jnp.float32)
+    a0 = jnp.zeros((B, Q, H, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_chunks))
+    l = jnp.maximum(jnp.transpose(l, (0, 2, 1))[..., None], 1e-30)
+    return acc / l
+
+
+# ---------------------------------------------------------------------------
+# GQA (covers MHA when n_kv == n_heads; SWA via window)
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(
+    key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+    *, qkv_bias: bool = False, dtype=jnp.float32,
+):
+    ks = jax.random.split(key, 4)
+    out_std = 0.02 / (2.0 ** 0.5)
+    return {
+        "wq": init_linear(ks[0], d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], d_model, n_kv * head_dim, bias=qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d_model, n_kv * head_dim, bias=qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], n_heads * head_dim, d_model, std=out_std, dtype=dtype),
+    }
+
+
+def _gqa_score_fn(n_kv: int):
+    def fn(q, kv_c):
+        # q (B,Q,H,D) grouped as (B,Q,KH,G,D); k (B,Ck,KH,D)
+        B, Q, H, D = q.shape
+        G = H // n_kv
+        qg = q.reshape(B, Q, n_kv, G, D)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kv_c["k"])
+        return s.reshape(B, H, Q, -1)
+    return fn
+
+
+def _gqa_value_fn(n_kv: int):
+    def fn(p, kv_c):
+        B, H, Q, Ck = p.shape
+        G = H // n_kv
+        pg = p.reshape(B, n_kv, G, Q, Ck)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", pg, kv_c["v"].astype(jnp.float32))
+        return o.reshape(B, Q, H, -1)
+    return fn
+
+
+def _causal_window_mask(pos_q: jax.Array, window: Optional[int]):
+    """pos_q (Q,) global query positions -> mask_fn(pos_k (Ck,))."""
+
+    def mask_fn(pos_k):
+        m = pos_k[None, :] <= pos_q[:, None]
+        if window is not None:
+            m &= (pos_q[:, None] - pos_k[None, :]) < window
+        return m[None, None, :, :]
+
+    return mask_fn
+
+
+def gqa_train(
+    p, x: jax.Array, *, n_heads: int, n_kv: int, head_dim: int,
+    rope_theta: float = 10000.0, window: Optional[int] = None,
+    kv_chunk: int = 1024, positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence causal attention, (B, S, d) -> (B, S, d)."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S) if positions is None else positions
+    q = linear(p["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = linear(p["wk"], x).reshape(B, S, n_kv, head_dim)
+    v = linear(p["wv"], x).reshape(B, S, n_kv, head_dim)
+    cos, sin = rotary_cos_sin(pos, head_dim, rope_theta)
+    q = apply_rotary(q, cos[None], sin[None]) * (head_dim ** -0.5)
+    k = apply_rotary(k, cos[None], sin[None])
+    out = chunked_attention(
+        q, {"k": k, "v": v}, S,
+        score_fn=_gqa_score_fn(n_kv),
+        value_fn=_gqa_value_fn(n_kv),
+        mask_fn=_causal_window_mask(pos, window),
+        kv_chunk=kv_chunk,
+    )
+    return linear(p["wo"], out.reshape(B, S, n_heads * head_dim).astype(x.dtype))
+
+
+class GQACache(NamedTuple):
+    k: jax.Array          # (B, S_cache, KH, D)
+    v: jax.Array
+    length: jax.Array     # scalar int32 — tokens decoded so far (logical pos)
+
+
+def gqa_attend_step(
+    p, x: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    length: jax.Array, *, n_heads: int, n_kv: int, head_dim: int,
+    rope_theta: float = 10000.0, window: Optional[int] = None,
+):
+    """Append-then-write decode attention: the cache is READ-ONLY here.
+
+    Returns (out, k_new (B,KH,D), v_new (B,KH,D)); the caller scatters the
+    new slot into the stacked cache ONCE per step, outside the layer scan —
+    this keeps the per-step HBM traffic at "read the cache once" instead of
+    "copy the cache per layer" (EXPERIMENTS.md §Perf, decode hillclimb).
+    """
+    B = x.shape[0]
+    s_cache = k_cache.shape[1]
+    pos = length
+    q = linear(p["wq"], x).reshape(B, 1, n_heads, head_dim)
+    k = linear(p["wk"], x).reshape(B, 1, n_kv, head_dim)
+    v = linear(p["wv"], x).reshape(B, 1, n_kv, head_dim)
+    cos, sin = rotary_cos_sin(pos[None], head_dim, rope_theta)
+    q = apply_rotary(q, cos[None], sin[None]) * (head_dim ** -0.5)
+    k = apply_rotary(k, cos[None], sin[None])
+    slots = jnp.arange(s_cache)
+    if window:
+        n_wraps = (pos - slots) // s_cache
+        logical = slots + n_wraps * s_cache
+        # STRICT < pos: the current slot's stale value is excluded; the
+        # fresh token is attended via the explicit self term below.
+        valid = (logical >= 0) & (logical < pos) & (pos - logical < window)
+    else:
+        valid = slots < pos
+    G = n_heads // n_kv
+    qg = q.reshape(B, 1, n_kv, G, head_dim)
+    # mixed-precision einsums: read the bf16 cache directly, accumulate in
+    # f32 — no materialized f32 cache copy (§Perf decode hillclimb, iter 2)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32
+                   ).reshape(B, n_heads, 1, s_cache)
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    s_self = jnp.einsum("bqkgd,bqkd->bkgq", qg, k[:, 0][:, None],
+                        preferred_element_type=jnp.float32
+                        ).reshape(B, n_heads, 1, 1)
+    s_all = jnp.concatenate([s, s_self], axis=-1)
+    pr = jax.nn.softmax(s_all, axis=-1)
+    pr_c, pr_s = pr[..., :-1], pr[..., -1:]
+    pg = pr_c.reshape(B, n_kv, G, 1, s_cache).astype(v_cache.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pg, v_cache,
+                   preferred_element_type=jnp.float32)
+    # self term: (B,KH,G,1) probs x (B,KH,D) values -> (B,1,KH,G,D)
+    w_self = pr_s.reshape(B, n_kv, G)
+    o_self = jnp.einsum("bkg,bkd->bkgd", w_self,
+                        v[:, 0].astype(jnp.float32))[:, None]
+    o = o + o_self
+    o = o.reshape(B, 1, n_heads * head_dim).astype(x.dtype)
+    out = linear(p["wo"], o)
+    return out, k[:, 0].astype(k_cache.dtype), v[:, 0].astype(v_cache.dtype)
+
+
+def init_gqa_cache(batch, s_max, n_kv, head_dim, *, window=None, dtype=jnp.float32):
+    s_cache = min(s_max, window) if window else s_max
+    z = jnp.zeros((batch, s_cache, n_kv, head_dim), dtype)
+    return GQACache(z, z, jnp.zeros((), jnp.int32))
+
+
+def gqa_decode(
+    p, x: jax.Array, cache: GQACache, *, n_heads: int, n_kv: int,
+    head_dim: int, rope_theta: float = 10000.0, window: Optional[int] = None,
+):
+    """Single-token decode. x (B, 1, d). Rolling buffer when window is set."""
+    B = x.shape[0]
+    s_cache = cache.k.shape[1]
+    pos = cache.length                                    # logical position
+    slot = jnp.mod(pos, s_cache) if window else pos       # physical slot
+    q = linear(p["wq"], x).reshape(B, 1, n_heads, head_dim)
+    k = linear(p["wk"], x).reshape(B, 1, n_kv, head_dim)
+    v = linear(p["wv"], x).reshape(B, 1, n_kv, head_dim)
+    cos, sin = rotary_cos_sin(pos[None], head_dim, rope_theta)
+    q = apply_rotary(q, cos[None], sin[None]) * (head_dim ** -0.5)
+    k = apply_rotary(k, cos[None], sin[None])
+    k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, 1)
+    v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, 1)
+    # physical slot s holds logical position: (window rolling) or s directly
+    slots = jnp.arange(s_cache)
+    if window:
+        # logical position of slot s: largest l <= pos with l = s (mod s_cache)
+        n_wraps = (pos - slots) // s_cache          # floor div (negative-safe)
+        logical = slots + n_wraps * s_cache
+        valid = (logical >= 0) & (logical <= pos) & (pos - logical < window)
+    else:
+        logical = slots
+        valid = slots <= pos
+    G = n_heads // n_kv
+    qg = q.reshape(B, 1, n_kv, G, head_dim)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_all).reshape(B, n_heads, 1, s_cache)
+    s = jnp.where(valid[None, None, None, :], s.astype(jnp.float32), _NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    pg = pr.reshape(B, n_kv, G, 1, s_cache)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pg, v_all.astype(jnp.float32))
+    o = o.reshape(B, 1, n_heads * head_dim).astype(x.dtype)
+    out = linear(p["wo"], o)
+    return out, GQACache(k_all, v_all, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2/V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(
+    key, d_model: int, n_heads: int, *, kv_lora: int = 512,
+    q_lora: int = 1536, qk_nope: int = 128, qk_rope: int = 64,
+    v_head: int = 128, dtype=jnp.float32,
+):
+    ks = jax.random.split(key, 8)
+    out_std = 0.02 / (2.0 ** 0.5)
+    return {
+        "wq_down": init_linear(ks[0], d_model, q_lora, dtype=dtype),
+        "q_norm": jnp.ones((q_lora,), dtype),
+        "wq_up": init_linear(ks[1], q_lora, n_heads * (qk_nope + qk_rope), dtype=dtype),
+        "wkv_down": init_linear(ks[2], d_model, kv_lora + qk_rope, dtype=dtype),
+        "kv_norm": jnp.ones((kv_lora,), dtype),
+        "wk_up": init_linear(ks[3], kv_lora, n_heads * qk_nope, dtype=dtype),
+        "wv_up": init_linear(ks[4], kv_lora, n_heads * v_head, dtype=dtype),
+        "wo": init_linear(ks[5], n_heads * v_head, d_model, std=out_std, dtype=dtype),
+    }
+
+
+def _mla_qkr(p, x, *, n_heads, qk_nope, qk_rope, pos, rope_theta):
+    """Shared q computation. Returns q_nope (B,S,H,nope), q_rope (B,S,H,rope)."""
+    B, S, _ = x.shape
+    qc = rmsnorm(linear(p["wq_down"], x), p["q_norm"])
+    q = linear(p["wq_up"], qc).reshape(B, S, n_heads, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    cos, sin = rotary_cos_sin(pos, qk_rope, rope_theta)
+    q_rope = apply_rotary(q_rope, cos[None], sin[None])
+    return q_nope, q_rope
+
+
+def mla_train(
+    p, x: jax.Array, *, n_heads: int, kv_lora: int = 512, qk_nope: int = 128,
+    qk_rope: int = 64, v_head: int = 128, rope_theta: float = 10000.0,
+    kv_chunk: int = 1024, positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Training forward: K/V decompressed chunk-by-chunk inside the scan."""
+    B, S, _ = x.shape
+    # the streaming accumulator is shaped off q's last dim; we feed q_nope,
+    # so the value head width must match (true for DS-V2/V3: 128 == 128).
+    assert qk_nope == v_head, "mla_train requires qk_nope == v_head"
+    pos = jnp.arange(S) if positions is None else positions
+    scale = (qk_nope + qk_rope) ** -0.5
+    q_nope, q_rope = _mla_qkr(
+        p, x, n_heads=n_heads, qk_nope=qk_nope, qk_rope=qk_rope,
+        pos=pos, rope_theta=rope_theta,
+    )
+    kvd = linear(p["wkv_down"], x)
+    c_kv = rmsnorm(kvd[..., :kv_lora], p["kv_norm"])       # (B, S, kv_lora)
+    k_rope = kvd[..., kv_lora:]                            # (B, S, qk_rope)
+    cos, sin = rotary_cos_sin(pos, qk_rope, rope_theta)
+    k_rope = apply_rotary(k_rope[:, :, None, :], cos[None], sin[None])[:, :, 0, :]
+
+    wk = p["wk_up"]["w"]
+    wv = p["wv_up"]["w"]
+
+    def score_fn(q, kv_c):
+        # decompress k for this chunk only
+        k_nope = (kv_c["c"] @ wk.astype(kv_c["c"].dtype)).reshape(
+            B, -1, n_heads, qk_nope
+        )
+        s = jnp.einsum("bqhd,bshd->bhqs", q["nope"], k_nope)
+        s += jnp.einsum("bqhr,bsr->bhqs", q["rope"], kv_c["r"])
+        return s * scale
+
+    def value_fn(pr, kv_c):
+        v = (kv_c["c"] @ wv.astype(kv_c["c"].dtype)).reshape(
+            B, -1, n_heads, v_head
+        )
+        return jnp.einsum("bhqs,bshd->bqhd", pr, v.astype(jnp.float32))
+
+    # chunked_attention expects q as an array for shape info; pack dict via
+    # a light shim: we pass q_nope and close over q_rope-compatible dict.
+    q_pack = {"nope": q_nope, "rope": q_rope}
+
+    def score(qa, kv_c):
+        return score_fn(q_pack, kv_c)
+
+    def value(pr, kv_c):
+        return value_fn(pr, kv_c)
+
+    out = chunked_attention(
+        q_nope, {"c": c_kv, "r": k_rope}, S,
+        score_fn=score, value_fn=value,
+        mask_fn=_causal_window_mask(pos, None),
+        kv_chunk=kv_chunk,
+    )  # (B, S, H, v_head) — value_fn returned v_head-dim, shapes consistent
+    out = out.reshape(B, S, n_heads * v_head).astype(x.dtype)
+    return linear(p["wo"], out)
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # (B, S_max, kv_lora) compressed latents
+    k_rope: jax.Array     # (B, S_max, qk_rope)
+    length: jax.Array
+
+
+def mla_attend_step(
+    p, x: jax.Array, c_cache: jax.Array, r_cache: jax.Array,
+    length: jax.Array, *, n_heads: int, kv_lora: int = 512,
+    qk_nope: int = 128, qk_rope: int = 64, v_head: int = 128,
+    rope_theta: float = 10000.0,
+):
+    """Append-then-write absorbed MLA decode (read-only compressed cache).
+
+    Returns (out, c_new (B, kv_lora), r_new (B, qk_rope))."""
+    B = x.shape[0]
+    pos = length
+    scale = (qk_nope + qk_rope) ** -0.5
+    q_nope, q_rope = _mla_qkr(
+        p, x, n_heads=n_heads, qk_nope=qk_nope, qk_rope=qk_rope,
+        pos=pos[None], rope_theta=rope_theta,
+    )
+    kvd = linear(p["wkv_down"], x)
+    c_new = rmsnorm(kvd[..., :kv_lora], p["kv_norm"])[:, 0]
+    r_new = kvd[..., kv_lora:]
+    cos, sin = rotary_cos_sin(pos[None], qk_rope, rope_theta)
+    r_new = apply_rotary(r_new[:, :, None, :], cos[None], sin[None])[:, 0, 0]
+    wk = p["wk_up"]["w"].reshape(kv_lora, n_heads, qk_nope)
+    wv = p["wv_up"]["w"].reshape(kv_lora, n_heads, v_head)
+    q_c = jnp.einsum("bqhd,chd->bqhc", q_nope, wk.astype(q_nope.dtype))
+    s = jnp.einsum("bqhc,bsc->bhqs", q_c, c_cache)
+    s += jnp.einsum("bqhr,bsr->bhqs", q_rope, r_cache)
+    s = s.astype(jnp.float32) * scale
+    valid = jnp.arange(c_cache.shape[1]) < pos       # strict: self separate
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    s_self = (jnp.einsum("bqhc,bc->bhq", q_c, c_new.astype(q_c.dtype))
+              + jnp.einsum("bqhr,br->bhq", q_rope,
+                           r_new.astype(q_rope.dtype))
+              ).astype(jnp.float32)[..., None] * scale
+    s_all = jnp.concatenate([s, s_self], axis=-1)
+    pr = jax.nn.softmax(s_all, axis=-1).astype(c_cache.dtype)
+    ctx_c = jnp.einsum("bhqs,bsc->bqhc", pr[..., :-1], c_cache)
+    ctx_c = ctx_c + jnp.einsum("bhq,bc->bqhc", pr[..., -1], c_new)
+    out = jnp.einsum("bqhc,chd->bqhd", ctx_c, wv.astype(ctx_c.dtype))
+    out = out.reshape(B, 1, n_heads * v_head).astype(x.dtype)
+    return (linear(p["wo"], out), c_new.astype(c_cache.dtype),
+            r_new.astype(r_cache.dtype))
+
+
+def init_mla_cache(batch, s_max, *, kv_lora=512, qk_rope=64, dtype=jnp.float32):
+    return MLACache(
+        jnp.zeros((batch, s_max, kv_lora), dtype),
+        jnp.zeros((batch, s_max, qk_rope), dtype),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_decode(
+    p, x: jax.Array, cache: MLACache, *, n_heads: int, kv_lora: int = 512,
+    qk_nope: int = 128, qk_rope: int = 64, v_head: int = 128,
+    rope_theta: float = 10000.0,
+):
+    """Absorbed decode: scores/values contract in the compressed space.
+
+    q_c = q_nope @ W_uk  (per head, into kv_lora space);
+    scores = q_c . c_kv + q_rope . k_rope;   ctx_c = P . c_kv;
+    out = ctx_c @ W_uv (per head).
+    Cache cost per token: kv_lora + qk_rope floats — MLA's whole point.
+    """
+    B = x.shape[0]
+    pos = cache.length
+    scale = (qk_nope + qk_rope) ** -0.5
+    q_nope, q_rope = _mla_qkr(
+        p, x, n_heads=n_heads, qk_nope=qk_nope, qk_rope=qk_rope,
+        pos=pos[None], rope_theta=rope_theta,
+    )
+    kvd = linear(p["wkv_down"], x)
+    c_new = rmsnorm(kvd[..., :kv_lora], p["kv_norm"])
+    r_new = kvd[..., kv_lora:]
+    cos, sin = rotary_cos_sin(pos[None], qk_rope, rope_theta)
+    r_new = apply_rotary(r_new[:, :, None, :], cos[None], sin[None])[:, :, 0, :]
+    c_all = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_new.astype(cache.c_kv.dtype), pos, 1)
+    r_all = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, r_new.astype(cache.k_rope.dtype), pos, 1)
+    wk = p["wk_up"]["w"].reshape(kv_lora, n_heads, qk_nope)
+    wv = p["wv_up"]["w"].reshape(kv_lora, n_heads, v_head)
+    q_c = jnp.einsum("bqhd,chd->bqhc", q_nope, wk.astype(q_nope.dtype))
+    s = jnp.einsum("bqhc,bsc->bhqs", q_c, c_all)
+    s += jnp.einsum("bqhr,bsr->bhqs", q_rope, r_all)
+    s = s.astype(jnp.float32) * scale
+    valid = jnp.arange(c_all.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(c_all.dtype)
+    ctx_c = jnp.einsum("bhqs,bsc->bqhc", pr, c_all)
+    out = jnp.einsum("bqhc,chd->bqhd", ctx_c, wv.astype(ctx_c.dtype))
+    out = out.reshape(B, 1, n_heads * v_head).astype(x.dtype)
+    return linear(p["wo"], out), MLACache(c_all, r_all, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec / whisper)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(key, d_model, n_heads, head_dim, dtype=jnp.float32):
+    return init_gqa(key, d_model, n_heads, n_heads, head_dim, dtype=dtype)
+
+
+def cross_attention(
+    p, x: jax.Array, enc: jax.Array, *, n_heads: int, head_dim: int,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Decoder states (B,S,d) attend over encoder states (B,T,d). No mask."""
+    B, S, _ = x.shape
+    T = enc.shape[1]
+    q = linear(p["wq"], x).reshape(B, S, n_heads, head_dim) * (head_dim ** -0.5)
+    k = linear(p["wk"], enc).reshape(B, T, n_heads, head_dim)
+    v = linear(p["wv"], enc).reshape(B, T, n_heads, head_dim)
+    out = chunked_attention(
+        q, {"k": k, "v": v}, T,
+        score_fn=_gqa_score_fn(n_heads),
+        value_fn=_gqa_value_fn(n_heads),
+        mask_fn=lambda pos_k: jnp.ones((1, 1, S, pos_k.shape[0]), bool),
+        kv_chunk=kv_chunk,
+    )
+    return linear(p["wo"], out.reshape(B, S, n_heads * head_dim).astype(x.dtype))

@@ -1,0 +1,97 @@
+"""Shared neural building blocks (pure JAX, functional params-as-pytrees)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "trunc_normal",
+    "rmsnorm",
+    "layernorm",
+    "rotary_cos_sin",
+    "apply_rotary",
+    "init_linear",
+    "linear",
+    "init_mlp",
+    "mlp",
+    "init_embedding",
+]
+
+
+def trunc_normal(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+def rotary_cos_sin(positions: jax.Array, head_dim: int, theta: float = 10000.0):
+    """positions (...,) -> cos/sin (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def init_linear(key, d_in, d_out, *, bias=False, std=0.02, dtype=jnp.float32):
+    p = {"w": trunc_normal(key, (d_in, d_out), std=std, dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_mlp(key, d_model, d_ff, *, gated=True, bias=False, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    out_std = 0.02 / (2.0 ** 0.5)
+    if gated:
+        return {
+            "up": init_linear(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+            "gate": init_linear(ks[1], d_model, d_ff, bias=bias, dtype=dtype),
+            "down": init_linear(ks[2], d_ff, d_model, bias=bias, std=out_std, dtype=dtype),
+        }
+    return {
+        "up": init_linear(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+        "down": init_linear(ks[2], d_ff, d_model, bias=bias, std=out_std, dtype=dtype),
+    }
+
+
+def mlp(p, x, *, gated=True):
+    if gated:
+        return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x)))
+
+
+def init_embedding(key, vocab, d_model, dtype=jnp.float32):
+    return {"table": trunc_normal(key, (vocab, d_model), std=0.02, dtype=dtype)}

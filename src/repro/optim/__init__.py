@@ -1,0 +1,35 @@
+from .adamw import (
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    init_adamw,
+    linear_warmup_cosine,
+)
+from .compression import (
+    QuantizedGrad,
+    compressed_psum,
+    dequantize_int8,
+    ef_compress_tree,
+    init_error_buffers,
+    quantize_int8,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "QuantizedGrad",
+    "adamw_update",
+    "clip_by_global_norm",
+    "compressed_psum",
+    "cosine_schedule",
+    "dequantize_int8",
+    "ef_compress_tree",
+    "global_norm",
+    "init_adamw",
+    "init_error_buffers",
+    "linear_warmup_cosine",
+    "quantize_int8",
+]

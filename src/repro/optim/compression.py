@@ -1,0 +1,92 @@
+"""Error-feedback int8 gradient compression for the DP all-reduce.
+
+At 512 chips the data-parallel gradient reduce-scatter moves
+``bytes = 2 * P / pod_chips`` per step per link; int8 with per-block scales
+cuts the wire bytes ~4x (bf16 -> int8 + 1 scale per 256 values). Error
+feedback (Karimireddy et al. '19) keeps the residual locally so the
+compression bias vanishes over steps.
+
+``compressed_psum`` demonstrates the production pattern under shard_map:
+quantize locally -> psum int32 accumulators -> dequantize. The main train
+step keeps this OFF by default (config ``grad_compression``) because the
+dry-run's roofline shows the big archs here are compute- or memory-bound,
+not DP-bound (EXPERIMENTS.md §Roofline); it is wired and tested.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantizedGrad",
+    "quantize_int8",
+    "dequantize_int8",
+    "ef_compress_tree",
+    "compressed_psum",
+]
+
+_BLOCK = 256
+
+
+class QuantizedGrad(NamedTuple):
+    q: jax.Array          # int8, padded flat
+    scale: jax.Array      # f32, one per block
+    n: int                # original size (static)
+
+
+def quantize_int8(x: jax.Array) -> QuantizedGrad:
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _BLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return QuantizedGrad(q, scale[:, 0], n)
+
+
+def dequantize_int8(qg: QuantizedGrad, shape) -> jax.Array:
+    flat = qg.q.astype(jnp.float32) * qg.scale[:, None]
+    return flat.reshape(-1)[: qg.n].reshape(shape)
+
+
+def ef_compress_tree(grads, error_buf):
+    """Error-feedback compression of a gradient pytree.
+
+    Returns (decompressed grads to apply, new error buffers). The
+    *decompressed* value is what every replica applies, so replicas stay
+    bit-identical; the residual (g + e - deq) is carried locally.
+    """
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        qg = quantize_int8(target)
+        deq = dequantize_int8(qg, g.shape)
+        return deq.astype(g.dtype), target - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_buf)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in outs]),
+        jax.tree.unflatten(treedef, [o[1] for o in outs]),
+    )
+
+
+def init_error_buffers(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(x: jax.Array, axis: str) -> jax.Array:
+    """int8-quantized all-reduce: each replica quantizes its shard-local
+    contribution, the int8 payload is summed as int32 across ``axis``, and
+    scales are combined conservatively (max). Call inside shard_map."""
+    qg = quantize_int8(x)
+    s_max = jax.lax.pmax(qg.scale, axis)
+    # renormalize local ints to the shared scale to keep the sum exact
+    ratio = qg.scale / s_max
+    q_shared = jnp.round(qg.q.astype(jnp.float32) * ratio[:, None])
+    total = jax.lax.psum(q_shared.astype(jnp.int32), axis)
+    flat = total.astype(jnp.float32) * s_max[:, None]
+    return flat.reshape(-1)[: qg.n].reshape(x.shape)

@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS / device-count overrides here — smoke tests and
+# benches must see the 1 real CPU device. Multi-device distributed tests
+# spawn subprocesses that set --xla_force_host_platform_device_count
+# themselves (tests/test_distributed.py).
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,181 @@
+"""Attention correctness: chunked==direct, decode==train prefix, MLA absorb."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    chunked_attention,
+    gqa_decode,
+    gqa_train,
+    init_gqa,
+    init_gqa_cache,
+    init_mla,
+    init_mla_cache,
+    mla_decode,
+    mla_train,
+)
+
+
+def _direct_attention(q, k, v, n_kv, mask):
+    B, Q, H, D = q.shape
+    G = H // n_kv
+    qg = q.reshape(B, Q, n_kv, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).reshape(B, H, Q, -1)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    pg = p.reshape(B, n_kv, G, Q, -1)
+    return jnp.einsum("bkgqs,bskd->bqkgd", pg, v).reshape(B, Q, H, D)
+
+
+@pytest.mark.parametrize("S,kv_chunk", [(64, 16), (65, 16), (128, 128),
+                                        (100, 33)])
+def test_chunked_equals_direct(S, kv_chunk):
+    key = jax.random.PRNGKey(0)
+    B, H, KH, D = 2, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, D)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KH, D)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KH, D))
+    pos = jnp.arange(S)
+    mask = (pos[None, :] <= pos[:, None])[None, None]
+
+    from repro.models.attention import _causal_window_mask, _gqa_score_fn, _gqa_value_fn
+    out = chunked_attention(
+        q, {"k": k, "v": v}, S,
+        score_fn=_gqa_score_fn(KH), value_fn=_gqa_value_fn(KH),
+        mask_fn=_causal_window_mask(pos, None), kv_chunk=kv_chunk,
+    )
+    want = _direct_attention(q, k, v, KH, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_gqa_decode_matches_train():
+    """Decoding token-by-token must reproduce the train-mode forward."""
+    key = jax.random.PRNGKey(1)
+    B, S, d, H, KH, hd = 2, 12, 32, 4, 2, 8
+    p = init_gqa(key, d, H, KH, hd)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (B, S, d)) * 0.5
+    full = gqa_train(p, x, n_heads=H, n_kv=KH, head_dim=hd)
+    cache = init_gqa_cache(B, S, KH, hd)
+    outs = []
+    for t in range(S):
+        o, cache = gqa_decode(p, x[:, t:t + 1], cache, n_heads=H, n_kv=KH,
+                              head_dim=hd)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_gqa_decode_sliding_window_rolls():
+    """Rolling cache (window < S) must equal full-cache attention with the
+    window mask."""
+    key = jax.random.PRNGKey(2)
+    B, S, d, H, KH, hd, W = 1, 20, 16, 2, 2, 8, 6
+    p = init_gqa(key, d, H, KH, hd)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, d)) * 0.5
+    full = gqa_train(p, x, n_heads=H, n_kv=KH, head_dim=hd, window=W)
+    cache = init_gqa_cache(B, S, KH, hd, window=W)
+    assert cache.k.shape[1] == W         # rolling buffer, not S
+    outs = []
+    for t in range(S):
+        o, cache = gqa_decode(p, x[:, t:t + 1], cache, n_heads=H, n_kv=KH,
+                              head_dim=hd, window=W)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_gqa_attend_step_matches_train():
+    """Append-then-write decode (read-only cache + external scatter) must
+    equal the train forward — the §Perf decode-hillclimb path."""
+    from repro.models.attention import gqa_attend_step
+    key = jax.random.PRNGKey(4)
+    B, S, d, H, KH, hd = 2, 12, 32, 4, 2, 8
+    p = init_gqa(key, d, H, KH, hd)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (B, S, d)) * 0.5
+    full = gqa_train(p, x, n_heads=H, n_kv=KH, head_dim=hd)
+    k_cache = jnp.zeros((B, S, KH, hd))
+    v_cache = jnp.zeros((B, S, KH, hd))
+    outs = []
+    for t in range(S):
+        o, k_new, v_new = gqa_attend_step(
+            p, x[:, t:t + 1], k_cache, v_cache, jnp.asarray(t),
+            n_heads=H, n_kv=KH, head_dim=hd)
+        k_cache = k_cache.at[:, t].set(k_new)
+        v_cache = v_cache.at[:, t].set(v_new)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_gqa_attend_step_rolling_window():
+    from repro.models.attention import gqa_attend_step
+    key = jax.random.PRNGKey(5)
+    B, S, d, H, KH, hd, W = 1, 20, 16, 2, 2, 8, 6
+    p = init_gqa(key, d, H, KH, hd)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, d)) * 0.5
+    full = gqa_train(p, x, n_heads=H, n_kv=KH, head_dim=hd, window=W)
+    k_cache = jnp.zeros((B, W, KH, hd))
+    v_cache = jnp.zeros((B, W, KH, hd))
+    outs = []
+    for t in range(S):
+        o, k_new, v_new = gqa_attend_step(
+            p, x[:, t:t + 1], k_cache, v_cache, jnp.asarray(t),
+            n_heads=H, n_kv=KH, head_dim=hd, window=W)
+        k_cache = k_cache.at[:, t % W].set(k_new)
+        v_cache = v_cache.at[:, t % W].set(v_new)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_mla_attend_step_matches_train():
+    from repro.models.attention import mla_attend_step
+    key = jax.random.PRNGKey(6)
+    B, S, d, H = 2, 10, 64, 4
+    kv_lora, q_lora, nope, rope, vh = 32, 48, 16, 8, 16
+    p = init_mla(key, d, H, kv_lora=kv_lora, q_lora=q_lora, qk_nope=nope,
+                 qk_rope=rope, v_head=vh)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, d)) * 0.5
+    full = mla_train(p, x, n_heads=H, kv_lora=kv_lora, qk_nope=nope,
+                     qk_rope=rope, v_head=vh)
+    c_cache = jnp.zeros((B, S, kv_lora))
+    r_cache = jnp.zeros((B, S, rope))
+    outs = []
+    for t in range(S):
+        o, c_new, r_new = mla_attend_step(
+            p, x[:, t:t + 1], c_cache, r_cache, jnp.asarray(t),
+            n_heads=H, kv_lora=kv_lora, qk_nope=nope, qk_rope=rope,
+            v_head=vh)
+        c_cache = c_cache.at[:, t].set(c_new)
+        r_cache = r_cache.at[:, t].set(r_new)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=3e-3, atol=3e-4)
+
+
+def test_mla_decode_absorbed_matches_train():
+    key = jax.random.PRNGKey(3)
+    B, S, d, H = 2, 10, 64, 4
+    kv_lora, q_lora, nope, rope, vh = 32, 48, 16, 8, 16
+    p = init_mla(key, d, H, kv_lora=kv_lora, q_lora=q_lora, qk_nope=nope,
+                 qk_rope=rope, v_head=vh)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, d)) * 0.5
+    full = mla_train(p, x, n_heads=H, kv_lora=kv_lora, qk_nope=nope,
+                     qk_rope=rope, v_head=vh)
+    cache = init_mla_cache(B, S, kv_lora=kv_lora, qk_rope=rope)
+    outs = []
+    for t in range(S):
+        o, cache = mla_decode(p, x[:, t:t + 1], cache, n_heads=H,
+                              kv_lora=kv_lora, qk_nope=nope, qk_rope=rope,
+                              v_head=vh)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=3e-3, atol=3e-4)

@@ -1,0 +1,91 @@
+"""Sinkhorn divergence properties — including hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sinkhorn_divergence_gaussian
+from repro.core.features import GaussianFeatureMap
+
+
+def _clouds(seed, n, m, d=2, scale=1.0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jnp.clip(jax.random.normal(k1, (n, d)), -2, 2)
+    y = jnp.clip(scale * jax.random.normal(k2, (m, d)) + 0.5, -2, 2)
+    return x, y
+
+
+def _anchors(eps, d=2, r=256, seed=0):
+    fm = GaussianFeatureMap(r=r, d=d, eps=eps, R=3.0)
+    return fm.init(jax.random.PRNGKey(seed)), fm.q
+
+
+def test_self_divergence_zero():
+    x, _ = _clouds(0, 50, 50)
+    U, q = _anchors(0.5)
+    div = sinkhorn_divergence_gaussian(x, x, U, eps=0.5, q=q, tol=1e-8,
+                                       max_iter=5000)
+    assert abs(float(div)) < 1e-4
+
+
+def test_symmetry():
+    x, y = _clouds(1, 40, 60)
+    U, q = _anchors(0.5, seed=2)
+    d1 = sinkhorn_divergence_gaussian(x, y, U, eps=0.5, q=q, tol=1e-8,
+                                      max_iter=5000)
+    d2 = sinkhorn_divergence_gaussian(y, x, U, eps=0.5, q=q, tol=1e-8,
+                                      max_iter=5000)
+    np.testing.assert_allclose(float(d1), float(d2), rtol=1e-4, atol=1e-6)
+
+
+def test_separates_distributions():
+    x, y = _clouds(2, 60, 60, scale=0.3)
+    U, q = _anchors(0.5, seed=3)
+    d_xy = sinkhorn_divergence_gaussian(x, y, U, eps=0.5, q=q, tol=1e-8,
+                                        max_iter=5000)
+    assert float(d_xy) > 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    n=st.integers(10, 60),
+    m=st.integers(10, 60),
+    eps=st.sampled_from([0.3, 0.5, 1.0]),
+)
+def test_property_nonnegative_and_finite(seed, n, m, eps):
+    """Wbar >= -tol and finite for arbitrary bounded clouds (the paper's
+    positivity-by-design claim: any r, any draw, Sinkhorn converges)."""
+    x, y = _clouds(seed, n, m)
+    U, q = _anchors(eps, seed=seed)
+    div = sinkhorn_divergence_gaussian(x, y, U, eps=eps, q=q, tol=1e-7,
+                                       max_iter=4000)
+    assert np.isfinite(float(div))
+    assert float(div) > -1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), r=st.sampled_from([16, 64, 256]))
+def test_property_any_feature_count_converges(seed, r):
+    """Theorem 3.1 note: unlike Nystrom, ANY r yields a convergent solve."""
+    x, y = _clouds(seed, 30, 30)
+    fm = GaussianFeatureMap(r=r, d=2, eps=0.5, R=3.0)
+    U = fm.init(jax.random.PRNGKey(seed + 1))
+    div = sinkhorn_divergence_gaussian(x, y, U, eps=0.5, q=fm.q, tol=1e-6,
+                                       max_iter=4000)
+    assert np.isfinite(float(div))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_property_triangle_like_separation(seed):
+    """Wbar(x,y) should dominate Wbar(x,x') for x' a tiny jitter of x."""
+    x, y = _clouds(seed, 40, 40, scale=0.2)
+    U, q = _anchors(0.5, seed=seed)
+    jitter = x + 0.01 * jax.random.normal(jax.random.PRNGKey(seed), x.shape)
+    d_far = sinkhorn_divergence_gaussian(x, y, U, eps=0.5, q=q, tol=1e-7,
+                                         max_iter=4000)
+    d_near = sinkhorn_divergence_gaussian(x, jitter, U, eps=0.5, q=q,
+                                          tol=1e-7, max_iter=4000)
+    assert float(d_near) < float(d_far)

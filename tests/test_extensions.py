@@ -1,0 +1,91 @@
+"""Accelerated solver (Remark 2 / App A.2) + factored-kernel barycenters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    gaussian_log_features,
+    sinkhorn_log_factored,
+    sinkhorn_log_quadratic,
+    squared_euclidean,
+)
+from repro.core.accelerated import accelerated_sinkhorn_log_factored
+from repro.core.barycenter import barycenter_log_factored
+from repro.core.features import GaussianFeatureMap
+
+
+def _problem(seed=0, n=80, m=70, d=2, eps=0.5):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, d))
+    y = 0.6 * jax.random.normal(k2, (m, d)) + 0.4
+    fm = GaussianFeatureMap(r=256, d=d, eps=eps, R=3.5)
+    U = fm.init(k3)
+    lxi = gaussian_log_features(x, U, eps=eps, q=fm.q)
+    lzt = gaussian_log_features(y, U, eps=eps, q=fm.q)
+    a = jnp.full((n,), 1.0 / n)
+    b = jnp.full((m,), 1.0 / m)
+    return lxi, lzt, a, b, eps
+
+
+def test_accelerated_matches_plain_cost():
+    lxi, lzt, a, b, eps = _problem()
+    plain = sinkhorn_log_factored(lxi, lzt, a, b, eps=eps, tol=1e-6,
+                                  max_iter=5000)
+    acc = accelerated_sinkhorn_log_factored(lxi, lzt, a, b, eps=eps,
+                                            tol=1e-6, max_iter=5000)
+    assert bool(acc.converged)
+    np.testing.assert_allclose(float(acc.cost), float(plain.cost),
+                               rtol=2e-3, atol=1e-4)
+
+
+def test_accelerated_marginals_feasible():
+    lxi, lzt, a, b, eps = _problem(seed=3)
+    acc = accelerated_sinkhorn_log_factored(lxi, lzt, a, b, eps=eps,
+                                            tol=1e-7, max_iter=5000)
+    # column marginal of the induced plan
+    t = jax.scipy.special.logsumexp(lxi + (acc.f / eps)[:, None], axis=0)
+    lcol = jax.scipy.special.logsumexp(lzt + t[None, :], axis=1) + acc.g / eps
+    np.testing.assert_allclose(np.asarray(jnp.exp(lcol)), np.asarray(b),
+                               atol=1e-5)
+
+
+def test_barycenter_k_invariance_and_validity():
+    """The entropic barycenter of k identical copies of h is independent
+    of k (it is the eps-blur of h, NOT h itself) and a valid histogram."""
+    key = jax.random.PRNGKey(1)
+    n, d, eps = 60, 2, 0.3
+    pts = jax.random.normal(key, (n, d))
+    fm = GaussianFeatureMap(r=512, d=d, eps=eps, R=3.0)
+    U = fm.init(jax.random.fold_in(key, 1))
+    lxi = gaussian_log_features(pts, U, eps=eps, q=fm.q)
+    h = jax.random.uniform(jax.random.fold_in(key, 2), (n,)) + 0.2
+    h = h / h.sum()
+    r1 = barycenter_log_factored(lxi, h[None, :], eps=eps, tol=1e-9,
+                                 max_iter=1000)
+    r3 = barycenter_log_factored(lxi, jnp.stack([h, h, h]), eps=eps,
+                                 tol=1e-9, max_iter=1000)
+    assert bool(jnp.all(r1.weights >= 0)) and bool(jnp.all(r3.weights >= 0))
+    np.testing.assert_allclose(float(jnp.sum(r3.weights)), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1.weights),
+                               np.asarray(r3.weights), atol=1e-4)
+
+
+def test_barycenter_interpolates_between_corners():
+    """Two opposite corner blobs on a 1-D grid -> barycenter mass sits
+    BETWEEN them (entropic barycenters interpolate, unlike L2 averages)."""
+    n, eps = 64, 0.1
+    grid = jnp.linspace(-1, 1, n)[:, None]
+    fm = GaussianFeatureMap(r=256, d=1, eps=eps, R=1.5)
+    U = fm.init(jax.random.PRNGKey(5))
+    lxi = gaussian_log_features(grid, U, eps=eps, q=fm.q)
+    blob = lambda c: jax.nn.softmax(-((grid[:, 0] - c) ** 2) / 0.005)
+    res = barycenter_log_factored(
+        lxi, jnp.stack([blob(-0.8), blob(0.8)]), eps=eps, max_iter=1000)
+    com = float(jnp.sum(res.weights * grid[:, 0]))
+    spread = float(jnp.sum(res.weights * jnp.abs(grid[:, 0])))
+    assert abs(com) < 0.15, com             # centered between corners
+    # mass should NOT just stay at the corners (bimodal L2 average)
+    mid_mass = float(jnp.sum(jnp.where(jnp.abs(grid[:, 0]) < 0.4,
+                                       res.weights, 0.0)))
+    assert mid_mass > 0.3, (mid_mass, spread)

@@ -1,0 +1,95 @@
+"""Positive-feature maps: unbiasedness, positivity, ratio concentration."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    arccos_features,
+    gaussian_features,
+    gaussian_log_features,
+    gaussian_q,
+    lambert_w0,
+    squared_euclidean,
+)
+from repro.core.features import ArcCosineFeatureMap, GaussianFeatureMap
+
+
+def test_lambert_w0():
+    for z in (0.0, 1e-6, 0.5, 1.0, math.e, 10.0, 1e4):
+        w = lambert_w0(z)
+        assert abs(w * math.exp(w) - z) < 1e-9 * (1 + z)
+
+
+def test_gaussian_features_positive_and_unbiased():
+    key = jax.random.PRNGKey(0)
+    d, eps, R = 2, 0.7, 2.0
+    fm = GaussianFeatureMap(r=60000, d=d, eps=eps, R=R)
+    U = fm.init(key)
+    x = jnp.array([[0.5, -0.3], [1.2, 0.8], [-1.0, 0.1]])
+    xi = gaussian_features(x, U, eps=eps, q=fm.q)
+    assert bool(jnp.all(xi > 0))
+    K_hat = xi @ xi.T
+    K_true = jnp.exp(-squared_euclidean(x, x) / eps)
+    np.testing.assert_allclose(np.asarray(K_hat), np.asarray(K_true),
+                               rtol=0.08)
+
+
+def test_ratio_concentration_improves_with_r():
+    """Prop 3.1: sup |k_theta/k - 1| decreases with the number of features."""
+    key = jax.random.PRNGKey(1)
+    kx, ky = jax.random.split(key)
+    d, eps, R = 2, 0.9, 2.0
+    x = jnp.clip(jax.random.normal(kx, (40, d)), -1.2, 1.2)
+    y = jnp.clip(jax.random.normal(ky, (40, d)), -1.2, 1.2)
+    K = jnp.exp(-squared_euclidean(x, y) / eps)
+    sups = []
+    for r in (100, 1000, 10000):
+        fm = GaussianFeatureMap(r=r, d=d, eps=eps, R=R)
+        U = fm.init(jax.random.PRNGKey(5))
+        xi = gaussian_features(x, U, eps=eps, q=fm.q)
+        zeta = gaussian_features(y, U, eps=eps, q=fm.q)
+        ratio = (xi @ zeta.T) / K
+        sups.append(float(jnp.max(jnp.abs(ratio - 1.0))))
+    assert sups[2] < sups[0], sups
+
+
+def test_gaussian_log_features_match_exp():
+    fm = GaussianFeatureMap(r=32, d=4, eps=0.5, R=1.5)
+    U = fm.init(jax.random.PRNGKey(2))
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(3), (10, 4))
+    lf = gaussian_log_features(x, U, eps=0.5, q=fm.q)
+    f = gaussian_features(x, U, eps=0.5, q=fm.q)
+    np.testing.assert_allclose(np.asarray(jnp.exp(lf)), np.asarray(f),
+                               rtol=1e-6)
+
+
+def test_arccos_features_positive_kernel_floor():
+    fm = ArcCosineFeatureMap(r=2000, d=3, s=1, sigma=1.4, kappa=0.05)
+    U = fm.init(jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (20, 3))
+    phi = arccos_features(x, U, s=1, sigma=1.4, kappa=0.05)
+    K = phi @ phi.T
+    assert bool(jnp.all(K >= 0.05 - 1e-6))      # kappa floor (Lemma 3)
+
+
+def test_arccos_matches_closed_form_s1():
+    """k_1(x,y) = ||x|| ||y|| (sin t + (pi - t) cos t) / pi  (Cho & Saul)."""
+    fm = ArcCosineFeatureMap(r=200000, d=2, s=1, sigma=1.3, kappa=0.0)
+    U = fm.init(jax.random.PRNGKey(6))
+    x = jnp.array([[1.0, 0.0], [0.6, 0.8]])
+    phi = arccos_features(x, U, s=1, sigma=1.3, kappa=0.0)
+    K = (phi @ phi.T)
+    t = jnp.arccos(jnp.clip(x[0] @ x[1], -1, 1))
+    closed = (jnp.sin(t) + (jnp.pi - t) * jnp.cos(t)) / jnp.pi
+    np.testing.assert_allclose(float(K[0, 1]), float(closed), rtol=0.1)
+
+
+def test_q_balances_amplitude():
+    # Lemma 1's q keeps psi = 2(2q)^{d/2} moderate as eps shrinks
+    for eps in (1.0, 0.1, 0.01):
+        q = gaussian_q(1.0, eps, 4)
+        assert q > 0.5
+        assert np.isfinite(q)

@@ -1,0 +1,108 @@
+"""Envelope-theorem gradients (Prop 3.2) vs finite differences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    gaussian_features,
+    gaussian_log_features,
+    rot_factored,
+    rot_log_factored,
+)
+from repro.core.features import GaussianFeatureMap
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n, m, d, r = 40, 35, 2, 64
+    x = jax.random.normal(k1, (n, d))
+    y = jax.random.normal(k2, (m, d)) * 0.7
+    eps = 0.8
+    fm = GaussianFeatureMap(r=r, d=d, eps=eps, R=3.0)
+    U = fm.init(k3)
+    a = jnp.full((n,), 1.0 / n)
+    b = jnp.full((m,), 1.0 / m)
+    return x, y, U, a, b, eps, fm.q
+
+
+def test_grad_xi_matches_fd(setup):
+    x, y, U, a, b, eps, q = setup
+    xi = gaussian_features(x, U, eps=eps, q=q)
+    zeta = gaussian_features(y, U, eps=eps, q=q)
+
+    f = lambda xi_: rot_factored(xi_, zeta, a, b, eps, 1e-9, 20000, 1.0)
+    g = jax.grad(f)(xi)
+    # directional finite difference
+    key = jax.random.PRNGKey(9)
+    v = jax.random.normal(key, xi.shape) * xi   # relative perturbation
+    h = 1e-2    # f32: smaller steps drown in rounding noise
+    fd = (f(xi + h * v) - f(xi - h * v)) / (2 * h)
+    np.testing.assert_allclose(float(jnp.vdot(g, v)), float(fd), rtol=2e-2)
+
+
+def test_grad_through_anchors_fd(setup):
+    """The GAN path: d W / d anchors via features chain rule."""
+    x, y, U, a, b, eps, q = setup
+
+    def f(U_):
+        xi = gaussian_features(x, U_, eps=eps, q=q)
+        zeta = gaussian_features(y, U_, eps=eps, q=q)
+        return rot_factored(xi, zeta, a, b, eps, 1e-9, 20000, 1.0)
+
+    g = jax.grad(f)(U)
+    key = jax.random.PRNGKey(11)
+    v = jax.random.normal(key, U.shape)
+    h = 3e-3    # f32-noise-safe step
+    fd = (f(U + h * v) - f(U - h * v)) / (2 * h)
+    np.testing.assert_allclose(float(jnp.vdot(g, v)), float(fd), rtol=3e-2)
+
+
+def test_log_domain_grad_matches_scaling(setup):
+    x, y, U, a, b, eps, q = setup
+
+    def f_lin(U_):
+        xi = gaussian_features(x, U_, eps=eps, q=q)
+        zt = gaussian_features(y, U_, eps=eps, q=q)
+        return rot_factored(xi, zt, a, b, eps, 1e-9, 20000, 1.0)
+
+    def f_log(U_):
+        lxi = gaussian_log_features(x, U_, eps=eps, q=q)
+        lzt = gaussian_log_features(y, U_, eps=eps, q=q)
+        return rot_log_factored(lxi, lzt, a, b, eps, 1e-9, 20000)
+
+    g1 = jax.grad(f_lin)(U)
+    g2 = jax.grad(f_log)(U)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-3,
+                               atol=1e-5)
+
+
+def test_grad_weights_is_potential(setup):
+    """d W / d a = alpha* (up to additive constant on the simplex)."""
+    x, y, U, a, b, eps, q = setup
+    xi = gaussian_features(x, U, eps=eps, q=q)
+    zeta = gaussian_features(y, U, eps=eps, q=q)
+    g_a = jax.grad(lambda a_: rot_factored(xi, zeta, a_, b, eps, 1e-9,
+                                           20000, 1.0))(a)
+    # tangent-space finite difference: move mass between two atoms
+    h = 1e-4
+    da = jnp.zeros_like(a).at[0].add(h).at[1].add(-h)
+    f0 = rot_factored(xi, zeta, a, b, eps, 1e-9, 20000, 1.0)
+    f1 = rot_factored(xi, zeta, a + da, b, eps, 1e-9, 20000, 1.0)
+    fd = float((f1 - f0) / h)
+    pred = float(g_a[0] - g_a[1])
+    np.testing.assert_allclose(pred, fd, rtol=5e-2, atol=1e-4)
+
+
+def test_memory_no_backprop_through_loop(setup):
+    """The VJP must not depend on iteration count (envelope property):
+    gradients from a 200-iter solve match a 20000-iter solve."""
+    x, y, U, a, b, eps, q = setup
+    xi = gaussian_features(x, U, eps=eps, q=q)
+    zeta = gaussian_features(y, U, eps=eps, q=q)
+    g1 = jax.grad(lambda z: rot_factored(z, zeta, a, b, eps, 1e-9, 200, 1.0))(xi)
+    g2 = jax.grad(lambda z: rot_factored(z, zeta, a, b, eps, 1e-12, 20000, 1.0))(xi)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3,
+                               atol=1e-7)

@@ -1,0 +1,113 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.features import GaussianFeatureMap
+from repro.kernels import (
+    feature_contract,
+    fused_sinkhorn_iteration,
+    gaussian_feature_map,
+    log_matvec,
+    sinkhorn_halfstep,
+)
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("n,r,d", [
+    (8, 8, 2), (130, 60, 5), (256, 512, 16), (300, 100, 64), (17, 513, 3),
+])
+def test_feature_map_shapes(n, r, d):
+    key = jax.random.PRNGKey(n + r + d)
+    x = jax.random.normal(key, (n, d))
+    fm = GaussianFeatureMap(r=r, d=d, eps=0.6, R=3.0)
+    U = fm.init(jax.random.fold_in(key, 1))
+    logc = (0.25 * d * jnp.log(2 * fm.q)
+            + jnp.sum(U * U, -1) / (fm.q * 0.6) - 0.5 * jnp.log(float(r)))
+    out = gaussian_feature_map(x, U, logc, inv_eps=1 / 0.6, interpret=True)
+    want = ref.gaussian_feature_map_ref(x, U, logc, inv_eps=1 / 0.6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,r,B", [
+    (16, 8, 1), (513, 60, 3), (1024, 512, 4), (100, 1000, 2),
+])
+def test_feature_contract_shapes(n, r, B):
+    key = jax.random.PRNGKey(n * 7 + r)
+    xi = jax.random.uniform(key, (n, r)) + 0.05
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (n, B)) + 0.05
+    out = feature_contract(xi, u, interpret=True)
+    want = ref.feature_contract_ref(xi, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,r,B", [
+    (16, 8, 1), (500, 64, 3), (1025, 256, 2),
+])
+def test_halfstep_shapes(m, r, B):
+    key = jax.random.PRNGKey(m + r + B)
+    zeta = jax.random.uniform(key, (m, r)) + 0.05
+    t = jax.random.uniform(jax.random.fold_in(key, 1), (r, B)) + 0.05
+    marg = jax.random.uniform(jax.random.fold_in(key, 2), (m, B)) + 0.5
+    out = sinkhorn_halfstep(zeta, t, marg, interpret=True)
+    want = ref.sinkhorn_halfstep_ref(zeta, t, marg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("m,r", [(16, 8), (500, 64), (1023, 300)])
+def test_log_matvec_shapes(m, r):
+    key = jax.random.PRNGKey(m * 3 + r)
+    log_m = jax.random.normal(key, (m, r)) * 3.0
+    t = jax.random.normal(jax.random.fold_in(key, 1), (r,)) * 2.0
+    out = log_matvec(log_m, t, interpret=True)
+    want = ref.log_matvec_ref(log_m, t)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_fused_iteration_converges_like_reference(dtype):
+    """Run 50 fused Pallas iterations; marginals must match the jnp loop."""
+    key = jax.random.PRNGKey(0)
+    n, m, r, B = 64, 48, 32, 2
+    xi = (jax.random.uniform(key, (n, r)) + 0.05).astype(dtype)
+    zeta = (jax.random.uniform(jax.random.fold_in(key, 1), (m, r)) + 0.05
+            ).astype(dtype)
+    a = jnp.full((n, B), 1.0 / n, dtype)
+    b = jnp.full((m, B), 1.0 / m, dtype)
+    u_k = jnp.ones((n, B), dtype)
+    u_r = jnp.ones((n, B), dtype)
+    v_r = None
+    for _ in range(50):
+        u_k, v_k = fused_sinkhorn_iteration(xi, zeta, a, b, u_k,
+                                            interpret=True)
+        t = xi.T @ u_r
+        v_r = b / (zeta @ t)
+        u_r = a / (xi @ (zeta.T @ v_r))
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r), rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r), rtol=1e-3)
+    # marginal feasibility of the final plan
+    col = v_k * (zeta @ (xi.T @ u_k))
+    np.testing.assert_allclose(np.asarray(col), np.asarray(b), atol=1e-4)
+
+
+def test_feature_map_dtype_bf16_inputs():
+    """bf16 inputs upcast inside the kernel; output stays f32-accurate."""
+    n, r, d = 64, 64, 8
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d)).astype(jnp.bfloat16)
+    fm = GaussianFeatureMap(r=r, d=d, eps=1.0, R=3.0)
+    U = fm.init(jax.random.fold_in(key, 1)).astype(jnp.bfloat16)
+    logc = jnp.zeros((r,), jnp.float32)
+    out = gaussian_feature_map(x.astype(jnp.float32),
+                               U.astype(jnp.float32), logc,
+                               inv_eps=1.0, interpret=True)
+    want = ref.gaussian_feature_map_ref(x.astype(jnp.float32),
+                                        U.astype(jnp.float32), logc,
+                                        inv_eps=1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-3,
+                               atol=1e-5)

@@ -1,0 +1,84 @@
+"""Optimizer + gradient compression unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    dequantize_int8,
+    ef_compress_tree,
+    init_adamw,
+    init_error_buffers,
+    linear_warmup_cosine,
+    quantize_int8,
+)
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.array([3.0, -2.0, 1.5]).reshape(1, 3)}
+    target = jnp.array([1.0, 1.0, 1.0]).reshape(1, 3)
+    state = init_adamw(params, cfg)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(clipped["a"])), 1.0,
+                               rtol=1e-5)
+
+
+def test_bf16_moments_still_converge():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=None,
+                      moment_dtype="bfloat16")
+    params = {"w": jnp.array([[2.0, -1.0]])}
+    state = init_adamw(params, cfg)
+    assert state.m["w"].dtype == jnp.bfloat16
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_schedule_warmup_then_decay():
+    sched = linear_warmup_cosine(1.0, warmup=10, total_steps=100)
+    assert float(sched(jnp.asarray(5))) < 1.0
+    near_peak = float(sched(jnp.asarray(11)))
+    assert near_peak > 0.9
+    assert float(sched(jnp.asarray(100))) < near_peak
+
+
+def test_quantize_roundtrip_error():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1000,)) * 0.01
+    q = quantize_int8(x)
+    y = dequantize_int8(q, x.shape)
+    # per-block max / 127 bounds the element error
+    assert float(jnp.max(jnp.abs(x - y))) <= float(jnp.max(jnp.abs(x))) / 127 + 1e-8
+
+
+def test_error_feedback_removes_bias():
+    """Summed EF-compressed gradients converge to the true sum."""
+    key = jax.random.PRNGKey(1)
+    g = {"w": jax.random.normal(key, (512,)) * 0.1}
+    buf = init_error_buffers(g)
+    total_true = jnp.zeros((512,))
+    total_comp = jnp.zeros((512,))
+    for i in range(50):
+        gi = {"w": g["w"] * (1.0 + 0.01 * i)}
+        comp, buf = ef_compress_tree(gi, buf)
+        total_true += gi["w"]
+        total_comp += comp["w"]
+    # residual is bounded by one quantization step, not accumulated
+    err = float(jnp.max(jnp.abs(total_true - total_comp)))
+    single_step = float(jnp.max(jnp.abs(g["w"]))) / 127 * 2
+    assert err < single_step * 5, (err, single_step)

@@ -1,0 +1,133 @@
+"""Solver unit tests: Alg. 1 on factored kernels vs dense ground truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    gaussian_features,
+    gaussian_log_features,
+    sinkhorn_factored,
+    sinkhorn_log_factored,
+    sinkhorn_log_quadratic,
+    sinkhorn_operator,
+    sinkhorn_quadratic,
+    squared_euclidean,
+)
+from repro.core.features import GaussianFeatureMap
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n, m, d = 120, 90, 3
+    x = jax.random.normal(k1, (n, d))
+    y = jax.random.normal(k2, (m, d)) * 0.5 + 0.3
+    a = jax.random.uniform(k3, (n,)) + 0.5
+    a = a / a.sum()
+    b = jnp.full((m,), 1.0 / m)
+    return x, y, a, b
+
+
+def test_quadratic_matches_log_domain(problem):
+    x, y, a, b = problem
+    eps = 0.5
+    C = squared_euclidean(x, y)
+    K = jnp.exp(-C / eps)
+    r1 = sinkhorn_quadratic(K, a, b, eps=eps, tol=1e-6, max_iter=5000)
+    r2 = sinkhorn_log_quadratic(C, a, b, eps=eps, tol=1e-6, max_iter=5000)
+    assert r1.converged and r2.converged
+    np.testing.assert_allclose(float(r1.cost), float(r2.cost), rtol=1e-4)
+
+
+def test_marginals_satisfied(problem):
+    x, y, a, b = problem
+    eps = 0.5
+    K = jnp.exp(-squared_euclidean(x, y) / eps)
+    r = sinkhorn_quadratic(K, a, b, eps=eps, tol=1e-7, max_iter=5000)
+    P = r.u[:, None] * K * r.v[None, :]
+    np.testing.assert_allclose(np.asarray(P.sum(1)), np.asarray(a), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(P.sum(0)), np.asarray(b), atol=1e-5)
+
+
+def test_factored_equals_quadratic_on_same_kernel(problem):
+    """With the SAME positive factored kernel, the factored solver must
+    match the dense solver exactly (it IS the same fixed point)."""
+    x, y, a, b = problem
+    eps = 0.8
+    fm = GaussianFeatureMap(r=400, d=3, eps=eps, R=3.5)
+    U = fm.init(jax.random.PRNGKey(7))
+    xi = gaussian_features(x, U, eps=eps, q=fm.q)
+    zeta = gaussian_features(y, U, eps=eps, q=fm.q)
+    K = xi @ zeta.T
+    r_f = sinkhorn_factored(xi, zeta, a, b, eps=eps, tol=1e-7, max_iter=5000)
+    r_q = sinkhorn_quadratic(K, a, b, eps=eps, tol=1e-7, max_iter=5000)
+    np.testing.assert_allclose(float(r_f.cost), float(r_q.cost), rtol=1e-5)
+
+
+def test_factored_approximates_true_rot(problem):
+    """Theorem 3.1 empirically: RF cost -> true ROT cost as r grows."""
+    x, y, a, b = problem
+    eps = 0.8
+    C = squared_euclidean(x, y)
+    gt = sinkhorn_log_quadratic(C, a, b, eps=eps, tol=1e-8, max_iter=10000)
+    errs = []
+    for r in (50, 400, 3200):
+        fm = GaussianFeatureMap(r=r, d=3, eps=eps, R=3.5)
+        U = fm.init(jax.random.PRNGKey(3))
+        lxi = gaussian_log_features(x, U, eps=eps, q=fm.q)
+        lz = gaussian_log_features(y, U, eps=eps, q=fm.q)
+        rr = sinkhorn_log_factored(lxi, lz, a, b, eps=eps, tol=1e-8,
+                                   max_iter=10000)
+        errs.append(abs(float(rr.cost - gt.cost)))
+    assert errs[2] < errs[0], errs
+    assert errs[2] / max(abs(float(gt.cost)), 1e-9) < 0.05, errs
+
+
+def test_log_and_scaling_domains_agree(problem):
+    x, y, a, b = problem
+    eps = 0.6
+    fm = GaussianFeatureMap(r=300, d=3, eps=eps, R=3.5)
+    U = fm.init(jax.random.PRNGKey(1))
+    lxi = gaussian_log_features(x, U, eps=eps, q=fm.q)
+    lz = gaussian_log_features(y, U, eps=eps, q=fm.q)
+    r1 = sinkhorn_factored(jnp.exp(lxi), jnp.exp(lz), a, b, eps=eps,
+                           tol=1e-7, max_iter=3000)
+    r2 = sinkhorn_log_factored(lxi, lz, a, b, eps=eps, tol=1e-7,
+                               max_iter=3000)
+    np.testing.assert_allclose(float(r1.cost), float(r2.cost), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_small_eps_log_domain_stable(problem):
+    """The paper's small-regularization regime: scaling-space under/overflows
+    are avoided in log space."""
+    x, y, a, b = problem
+    eps = 0.01
+    C = squared_euclidean(x, y)
+    r = sinkhorn_log_quadratic(C, a, b, eps=eps, tol=1e-6, max_iter=20000)
+    assert np.isfinite(float(r.cost))
+
+
+def test_momentum_accelerates(problem):
+    x, y, a, b = problem
+    eps = 0.3   # scaling-space-safe regime (kernel stays > f32 tiny)
+    K = jnp.exp(-squared_euclidean(x, y) / eps)
+    r_plain = sinkhorn_quadratic(K, a, b, eps=eps, tol=1e-6, max_iter=20000)
+    r_mom = sinkhorn_quadratic(K, a, b, eps=eps, tol=1e-6, max_iter=20000,
+                               momentum=1.5)
+    assert r_mom.converged
+    assert int(r_mom.n_iter) < int(r_plain.n_iter)
+    np.testing.assert_allclose(float(r_mom.cost), float(r_plain.cost),
+                               rtol=1e-3)
+
+
+def test_operator_interface_generic(problem):
+    x, y, a, b = problem
+    eps = 0.5
+    K = jnp.exp(-squared_euclidean(x, y) / eps)
+    r1 = sinkhorn_operator(lambda v: K @ v, lambda u: K.T @ u, a, b,
+                           eps=eps, tol=1e-7, max_iter=3000)
+    r2 = sinkhorn_quadratic(K, a, b, eps=eps, tol=1e-7, max_iter=3000)
+    np.testing.assert_allclose(float(r1.cost), float(r2.cost), rtol=1e-6)
