@@ -7,7 +7,10 @@ Emits ``name,us_per_call,derived`` CSV rows:
   scaling/*    — §3.1        O(r(n+m)) vs O(nm) per-iteration scaling
   gan_grad/*   — §4          GAN gradient cost vs batch size
   solver/*     — Alg. 1      fused-kernel iteration microbench
+  batch/*      — api.py      vmapped BatchedSinkhorn vs per-problem loop
   roofline/*   — §Roofline   dry-run derived terms per (arch x shape x mesh)
+
+``--quick`` is the tier-1 smoke entry: CPU-sized problems, minutes total.
 """
 from __future__ import annotations
 
@@ -77,6 +80,15 @@ def main() -> None:
                                 quick=args.quick)
         print("\n".join(l for l in buf.getvalue().splitlines()
                         if not l.startswith("name,")))
+
+    section("batched engine vs per-problem loop (api.BatchedSinkhorn)")
+    from . import bench_batch
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        speedup = bench_batch.main(quick=args.quick)
+    print("\n".join(l for l in buf.getvalue().splitlines()
+                    if not l.startswith("name,")))
+    print(f"# batched speedup {speedup:.2f}x (target >= 3x)", file=sys.stderr)
 
     section("gan gradient cost (Sec 4)")
     from . import bench_gan

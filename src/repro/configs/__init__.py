@@ -1,8 +1,19 @@
 from .base import ArchConfig, get_config, list_archs, register
-from .shapes import SHAPES, ShapeSpec, all_cells, cell_applicable, get_shape
+from .shapes import (
+    OT_SUPPORT_BUCKETS,
+    OTBatchShape,
+    SHAPES,
+    ShapeSpec,
+    all_cells,
+    cell_applicable,
+    get_shape,
+    ot_bucket,
+)
 
 __all__ = [
     "ArchConfig",
+    "OT_SUPPORT_BUCKETS",
+    "OTBatchShape",
     "SHAPES",
     "ShapeSpec",
     "all_cells",
@@ -10,5 +21,6 @@ __all__ = [
     "get_config",
     "get_shape",
     "list_archs",
+    "ot_bucket",
     "register",
 ]

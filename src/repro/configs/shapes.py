@@ -1,12 +1,23 @@
-"""The four assigned input shapes + per-(arch x shape) applicability."""
+"""The four assigned input shapes + per-(arch x shape) applicability,
+plus the OT support-size buckets the batched solver engine pads to."""
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import List, Optional, Tuple
 
 from .base import ArchConfig
 
-__all__ = ["ShapeSpec", "SHAPES", "get_shape", "cell_applicable", "all_cells"]
+__all__ = [
+    "ShapeSpec",
+    "SHAPES",
+    "get_shape",
+    "cell_applicable",
+    "all_cells",
+    "OT_SUPPORT_BUCKETS",
+    "ot_bucket",
+    "OTBatchShape",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,3 +55,42 @@ def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
 def all_cells() -> List[Tuple[str, str]]:
     from .base import list_archs
     return [(a, s) for a in list_archs() for s in SHAPES]
+
+
+# ---------------------------------------------------------------------------
+# OT batching buckets (repro.core.api.BatchedSinkhorn)
+# ---------------------------------------------------------------------------
+#
+# Batched solves vmap over problems that share a padded support size. Powers
+# of two keep the thin (n, r) contractions tile-aligned on TPU (the Pallas
+# kernels block at 512) while bounding padding waste at < 2x.
+
+OT_SUPPORT_BUCKETS: Tuple[int, ...] = (
+    64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384,
+)
+
+
+def ot_bucket(n: int) -> int:
+    """Smallest bucket >= n; support sizes above the largest bucket round up
+    to the next multiple of the largest bucket (stays tile-aligned)."""
+    if n <= 0:
+        raise ValueError(f"support size must be positive, got {n}")
+    i = bisect.bisect_left(OT_SUPPORT_BUCKETS, n)
+    if i < len(OT_SUPPORT_BUCKETS):
+        return OT_SUPPORT_BUCKETS[i]
+    top = OT_SUPPORT_BUCKETS[-1]
+    return ((n + top - 1) // top) * top
+
+
+@dataclasses.dataclass(frozen=True)
+class OTBatchShape:
+    """A bucketed batch cell: B problems padded to (n_pad, m_pad) with a
+    shared feature rank r. The key the batched engine groups problems by."""
+
+    n_pad: int
+    m_pad: int
+    r: int
+
+    @classmethod
+    def for_problem(cls, n: int, m: int, r: int) -> "OTBatchShape":
+        return cls(n_pad=ot_bucket(n), m_pad=ot_bucket(m), r=r)

@@ -1,6 +1,7 @@
 """Core of the reproduction: linear-time Sinkhorn with positive features.
 
 Public API:
+  api         — unified front-end: solve()/solve_many()/BatchedSinkhorn/EpsSchedule
   features    — Lemma-1 Gaussian / Lemma-3 arc-cosine / learnable feature maps
   sinkhorn    — factored + quadratic + log-domain solvers (Alg. 1)
   grad        — envelope-theorem custom VJPs (Prop. 3.2)
@@ -10,6 +11,14 @@ Public API:
   routing     — Sinkhorn-balanced MoE routing
 """
 from .accelerated import accelerated_sinkhorn_log_factored
+from .api import (
+    BatchedSinkhorn,
+    EpsSchedule,
+    OTProblem,
+    solve,
+    solve_annealed,
+    solve_many,
+)
 from .barycenter import BarycenterResult, barycenter_log_factored
 from .features import (
     ArcCosineFeatureMap,
@@ -21,7 +30,12 @@ from .features import (
     lambert_w0,
 )
 from .geometry import data_radius, gibbs_kernel, squared_euclidean
-from .grad import rot_factored, rot_log_factored
+from .grad import (
+    rot_factored,
+    rot_factored_batched,
+    rot_log_factored,
+    rot_log_factored_batched,
+)
 from .nystrom import nystrom_factors, sinkhorn_nystrom
 from .routing import sinkhorn_route
 from .sharded import make_sharded_sinkhorn, sharded_sinkhorn_factored
@@ -35,16 +49,24 @@ from .sinkhorn import (
 )
 from .divergence import (
     sinkhorn_divergence_features,
+    sinkhorn_divergence_features_batched,
     sinkhorn_divergence_gaussian,
+    sinkhorn_divergence_gaussian_batched,
 )
 
 __all__ = [
     "ArcCosineFeatureMap",
     "BarycenterResult",
+    "BatchedSinkhorn",
+    "EpsSchedule",
+    "OTProblem",
     "accelerated_sinkhorn_log_factored",
     "barycenter_log_factored",
     "GaussianFeatureMap",
     "SinkhornResult",
+    "solve",
+    "solve_annealed",
+    "solve_many",
     "arccos_features",
     "data_radius",
     "gaussian_features",
@@ -55,10 +77,14 @@ __all__ = [
     "make_sharded_sinkhorn",
     "nystrom_factors",
     "rot_factored",
+    "rot_factored_batched",
     "rot_log_factored",
+    "rot_log_factored_batched",
     "sharded_sinkhorn_factored",
     "sinkhorn_divergence_features",
+    "sinkhorn_divergence_features_batched",
     "sinkhorn_divergence_gaussian",
+    "sinkhorn_divergence_gaussian_batched",
     "sinkhorn_factored",
     "sinkhorn_log_factored",
     "sinkhorn_log_quadratic",

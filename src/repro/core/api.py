@@ -1,0 +1,732 @@
+"""Unified solver front-end: ``solve`` / ``BatchedSinkhorn`` / ``EpsSchedule``.
+
+Every solver variant in the repo (scaling-space factored, log-domain
+factored, accelerated AGM, dense quadratic baselines, shard_map
+distributed) is reachable through ONE entry point:
+
+    problem = OTProblem.from_point_clouds(x, y, anchors, eps=0.05)
+    res = solve(problem, method="log_factored",
+                schedule=EpsSchedule(eps_init=1.0, decay=0.5))
+
+and batches of independent problems — the GAN-minibatch workload of the
+paper's Section 4, and the "heavy traffic" serving shape of the ROADMAP —
+go through the vmapped engine:
+
+    engine = BatchedSinkhorn(eps=0.05, method="log_factored")
+    results = engine.solve_many(problems)      # buckets, pads, vmaps
+
+Design notes
+------------
+* **One kernel, many algorithms.** For a problem built from (log-)features
+  the quadratic methods run on the *induced* cost ``C = -eps log(Xi Zeta^T)``
+  so all methods share one fixed point and agree to solver tolerance (the
+  oracle-consistency contract tested in ``tests/test_api.py``). Problems
+  built from point clouds use the true squared-Euclidean cost for the
+  quadratic methods — the paper's ``Sin`` baseline — so there the factored
+  methods differ by the feature-approximation error (Theorem 3.1).
+* **Annealing** (``EpsSchedule``) runs a geometric cascade
+  ``eps_0 > eps_0*decay > ... > eps`` re-deriving the stage kernel from the
+  problem's geometry (or dense cost) and warm-starting the potentials
+  (f, g) — equivalently ``u = e^{f/eps}`` — between stages. At small eps
+  this cuts total iterations by a large factor versus a cold start
+  (property-tested in ``tests/test_schedule.py``). Feature-only problems
+  cannot be annealed: their kernel is pinned to the eps the features were
+  drawn at.
+* **Batching** pads each problem's supports up to the power-of-two buckets
+  in ``configs/shapes.py`` (``ot_bucket``) with ZERO-weight atoms — exact,
+  not approximate, because every solver masks zero weights (see
+  ``sinkhorn.masked_dual_value``) — groups problems by padded shape, and
+  ``vmap``s the shared solver loop over the group. One ``lax.while_loop``
+  then drives the whole batch: per-iteration work is a single batched thin
+  contraction instead of B separate GEMV dispatches, which is where the
+  >= 3x wall-clock win of ``benchmarks/bench_batch.py`` comes from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import OTBatchShape, ot_bucket
+from .accelerated import accelerated_sinkhorn_log_factored
+from .features import gaussian_log_features, gaussian_q
+from .geometry import data_radius, squared_euclidean
+from .sinkhorn import (
+    SinkhornResult,
+    sinkhorn_factored,
+    sinkhorn_log_factored,
+    sinkhorn_log_quadratic,
+    sinkhorn_quadratic,
+)
+
+__all__ = [
+    "METHODS",
+    "OTProblem",
+    "EpsSchedule",
+    "AnnealedResult",
+    "BatchedSinkhorn",
+    "solve",
+    "solve_annealed",
+    "solve_many",
+]
+
+METHODS = (
+    "auto",
+    "factored",
+    "log_factored",
+    "accelerated",
+    "quadratic",
+    "log_quadratic",
+    "sharded",
+)
+
+
+# ---------------------------------------------------------------------------
+# Problem specification
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OTProblem:
+    """One entropic OT problem. Built from exactly one kernel source:
+    positive features, log-features, a dense cost matrix, or raw point
+    clouds + Gaussian anchors (the only form that supports eps-annealing
+    and learnable-anchor gradients)."""
+
+    a: jax.Array                       # (n,) weights, sum 1 (zeros allowed)
+    b: jax.Array                       # (m,)
+    eps: float
+    xi: Optional[jax.Array] = None         # (n, r) positive features
+    zeta: Optional[jax.Array] = None       # (m, r)
+    log_xi: Optional[jax.Array] = None     # (n, r) log-features
+    log_zeta: Optional[jax.Array] = None   # (m, r)
+    C: Optional[jax.Array] = None          # (n, m) dense cost
+    x: Optional[jax.Array] = None          # (n, d) support of mu
+    y: Optional[jax.Array] = None          # (m, d) support of nu
+    anchors: Optional[jax.Array] = None    # (r, d) Lemma-1 anchors
+    R: Optional[float] = None              # data radius bound (geometry mode)
+
+    # -- constructors -------------------------------------------------------
+
+    @staticmethod
+    def _uniform(n: int, dtype) -> jax.Array:
+        return jnp.full((n,), 1.0 / n, dtype)
+
+    @classmethod
+    def from_features(cls, xi, zeta, a=None, b=None, *, eps: float) -> "OTProblem":
+        a = cls._uniform(xi.shape[0], xi.dtype) if a is None else a
+        b = cls._uniform(zeta.shape[0], zeta.dtype) if b is None else b
+        return cls(a=a, b=b, eps=eps, xi=xi, zeta=zeta)
+
+    @classmethod
+    def from_log_features(cls, log_xi, log_zeta, a=None, b=None, *,
+                          eps: float) -> "OTProblem":
+        a = cls._uniform(log_xi.shape[0], log_xi.dtype) if a is None else a
+        b = cls._uniform(log_zeta.shape[0], log_zeta.dtype) if b is None else b
+        return cls(a=a, b=b, eps=eps, log_xi=log_xi, log_zeta=log_zeta)
+
+    @classmethod
+    def from_cost(cls, C, a=None, b=None, *, eps: float) -> "OTProblem":
+        a = cls._uniform(C.shape[0], C.dtype) if a is None else a
+        b = cls._uniform(C.shape[1], C.dtype) if b is None else b
+        return cls(a=a, b=b, eps=eps, C=C)
+
+    @classmethod
+    def from_point_clouds(cls, x, y, anchors, a=None, b=None, *, eps: float,
+                          R: Optional[float] = None) -> "OTProblem":
+        a = cls._uniform(x.shape[0], x.dtype) if a is None else a
+        b = cls._uniform(y.shape[0], y.dtype) if b is None else b
+        R = float(data_radius(x, y)) if R is None else R
+        return cls(a=a, b=b, eps=eps, x=x, y=y, anchors=anchors, R=R)
+
+    # -- kernel views -------------------------------------------------------
+
+    @property
+    def has_geometry(self) -> bool:
+        return self.x is not None
+
+    @property
+    def anneal_capable(self) -> bool:
+        """Annealing needs the kernel re-derivable at arbitrary eps."""
+        return self.has_geometry or self.C is not None
+
+    def log_features_at(self, eps: float) -> Tuple[jax.Array, jax.Array]:
+        """(log_xi, log_zeta) for the Gibbs kernel at ``eps``."""
+        if self.has_geometry:
+            q = gaussian_q(self.R, eps, self.x.shape[-1])
+            lxi = gaussian_log_features(self.x, self.anchors, eps=eps, q=q)
+            lzt = gaussian_log_features(self.y, self.anchors, eps=eps, q=q)
+            return lxi, lzt
+        if self.log_xi is None and self.xi is None:
+            raise ValueError("no factored kernel available (dense-cost "
+                             "problem); use a quadratic method")
+        if eps != self.eps:
+            raise ValueError(
+                "feature-built problems pin the kernel to their native eps "
+                f"({self.eps}); got {eps}. Build the problem with "
+                "from_point_clouds to enable eps-annealing."
+            )
+        if self.log_xi is not None:
+            return self.log_xi, self.log_zeta
+        return jnp.log(self.xi), jnp.log(self.zeta)
+
+    def features_at(self, eps: float) -> Tuple[jax.Array, jax.Array]:
+        if self.xi is not None and eps == self.eps:
+            return self.xi, self.zeta
+        lxi, lzt = self.log_features_at(eps)
+        return jnp.exp(lxi), jnp.exp(lzt)
+
+    def cost_matrix(self) -> jax.Array:
+        """Dense cost for the quadratic baselines. True cost in geometry
+        mode (the paper's Sin baseline); the factored-kernel-induced cost
+        ``-eps log(Xi Zeta^T)`` in feature mode so all methods share one
+        fixed point."""
+        if self.C is not None:
+            return self.C
+        if self.has_geometry:
+            return squared_euclidean(self.x, self.y)
+        if self.xi is not None:
+            return -self.eps * jnp.log(self.xi @ self.zeta.T)
+        # max-shifted product keeps peak memory at O(nm) instead of the
+        # O(nmr) broadcast a direct pairwise LSE would allocate
+        m1 = jnp.max(self.log_xi, axis=1, keepdims=True)      # (n, 1)
+        m2 = jnp.max(self.log_zeta, axis=1, keepdims=True)    # (m, 1)
+        K = jnp.exp(self.log_xi - m1) @ jnp.exp(self.log_zeta - m2).T
+        return -self.eps * (jnp.log(K) + m1 + m2.T)
+
+
+# ---------------------------------------------------------------------------
+# Epsilon annealing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EpsSchedule:
+    """Geometric eps cascade: eps_0, eps_0*decay, ... down to the target.
+
+    Intermediate stages only need to hand a decent warm start to the next
+    stage, so they stop at a LOOSE tolerance: stage tolerances decay
+    geometrically from ``stage_tol`` down to ``sqrt(stage_tol * tol)`` —
+    the final stage does the last push to ``tol`` (``stage_tols``). At run
+    time each stage's target is additionally capped at the previous stage's
+    ACHIEVED error, which makes the per-stage marginal error non-increasing
+    by construction. Each intermediate stage is also capped at
+    ``stage_iters`` iterations; the final stage gets the caller's full
+    ``max_iter``.
+    """
+
+    eps_init: float
+    decay: float = 0.5
+    stage_iters: int = 400
+    stage_tol: float = 1e-2
+
+    def __post_init__(self):
+        if not (0.0 < self.decay < 1.0):
+            raise ValueError(f"decay must be in (0, 1), got {self.decay}")
+        if self.eps_init <= 0:
+            raise ValueError("eps_init must be positive")
+
+    def stages(self, eps_final: float) -> Tuple[float, ...]:
+        if self.eps_init <= eps_final:
+            return (eps_final,)
+        out = []
+        e = self.eps_init
+        # stop the geometric ladder once e is within sqrt(decay) of the
+        # target and jump straight there — a penultimate stage a few
+        # percent above eps_final would cost a full solve for no progress
+        thresh = eps_final / math.sqrt(self.decay)
+        while e > thresh:
+            out.append(e)
+            e *= self.decay
+        out.append(eps_final)
+        return tuple(out)
+
+    def stage_tols(self, tol_final: float, n_stages: int) -> Tuple[float, ...]:
+        """Per-stage marginal-error targets: geometric from ``stage_tol``
+        down to sqrt(stage_tol * tol_final) across the intermediates, then
+        ``tol_final``. Keeping intermediates loose is what buys the total-
+        iteration win — tight intermediate solves at large eps do not
+        transfer into a proportionally better warm start."""
+        if n_stages <= 1 or self.stage_tol <= tol_final:
+            return (tol_final,) * max(n_stages, 1)
+        if n_stages == 2:
+            return (self.stage_tol, tol_final)
+        mid = math.sqrt(self.stage_tol * tol_final)
+        ratio = (mid / self.stage_tol) ** (1.0 / (n_stages - 2))
+        tols = [max(self.stage_tol * ratio**k, tol_final)
+                for k in range(n_stages - 1)]
+        return tuple(tols) + (tol_final,)
+
+
+class AnnealedResult(NamedTuple):
+    result: SinkhornResult            # final-stage solve (n_iter = TOTAL)
+    stage_eps: Tuple[float, ...]
+    stage_iters: jax.Array            # (S,) iterations per stage
+    stage_errs: jax.Array             # (S,) marginal error at stage exit
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def _auto_method(problem: OTProblem) -> str:
+    if problem.has_geometry or problem.log_xi is not None:
+        return "log_factored"
+    if problem.xi is not None:
+        return "factored"
+    return "log_quadratic"
+
+
+def _solve_stage(
+    problem: OTProblem,
+    method: str,
+    eps: float,
+    *,
+    tol: float,
+    max_iter: int,
+    momentum: float,
+    f_init: Optional[jax.Array],
+    g_init: Optional[jax.Array],
+    mesh=None,
+    mesh_axis: str = "data",
+) -> SinkhornResult:
+    """One solve at a fixed eps with optional warm-started potentials."""
+    if method == "factored":
+        xi, zeta = problem.features_at(eps)
+        u_init = None if f_init is None else jnp.exp(f_init / eps)
+        return sinkhorn_factored(
+            xi, zeta, problem.a, problem.b, eps=eps, tol=tol,
+            max_iter=max_iter, momentum=momentum, u_init=u_init,
+        )
+    if method == "log_factored":
+        lxi, lzt = problem.log_features_at(eps)
+        return sinkhorn_log_factored(
+            lxi, lzt, problem.a, problem.b, eps=eps, tol=tol,
+            max_iter=max_iter, f_init=f_init, g_init=g_init,
+        )
+    if method == "accelerated":
+        lxi, lzt = problem.log_features_at(eps)
+        return accelerated_sinkhorn_log_factored(
+            lxi, lzt, problem.a, problem.b, eps=eps, tol=tol,
+            max_iter=max_iter, f_init=f_init, g_init=g_init,
+        )
+    if method == "quadratic":
+        K = jnp.exp(-problem.cost_matrix() / eps)
+        u_init = None if f_init is None else jnp.exp(f_init / eps)
+        return sinkhorn_quadratic(
+            K, problem.a, problem.b, eps=eps, tol=tol, max_iter=max_iter,
+            momentum=momentum, u_init=u_init,
+        )
+    if method == "log_quadratic":
+        return sinkhorn_log_quadratic(
+            problem.cost_matrix(), problem.a, problem.b, eps=eps, tol=tol,
+            max_iter=max_iter, f_init=f_init, g_init=g_init,
+        )
+    if method == "sharded":
+        from .sharded import sharded_sinkhorn_factored
+
+        if mesh is None:
+            raise ValueError("method='sharded' requires a mesh=...")
+        xi, zeta = problem.features_at(eps)
+        return sharded_sinkhorn_factored(
+            mesh, xi, zeta, problem.a, problem.b, eps=eps, axis=mesh_axis,
+            tol=tol, max_iter=max_iter,
+        )
+    raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+
+
+def solve_annealed(
+    problem: OTProblem,
+    *,
+    method: str = "auto",
+    schedule: EpsSchedule,
+    tol: float = 1e-6,
+    max_iter: int = 2000,
+    momentum: float = 1.0,
+    mesh=None,
+    mesh_axis: str = "data",
+) -> AnnealedResult:
+    """Annealed solve with per-stage diagnostics.
+
+    Each stage solves at eps_k re-deriving the kernel from geometry / dense
+    cost, then hands its potentials (f, g) to the next stage as warm start.
+    The returned ``result.n_iter`` is the TOTAL across stages so it compares
+    directly against a cold-start solve's iteration count.
+    """
+    if method == "auto":
+        method = _auto_method(problem)
+    if not problem.anneal_capable:
+        raise ValueError(
+            "eps-annealing needs a geometry- or cost-built problem; "
+            "feature-built problems pin the kernel to one eps"
+        )
+    if method == "sharded":
+        raise ValueError(
+            "method='sharded' does not compose with an EpsSchedule: the "
+            "shard_map solver has no warm-start inputs, so every stage "
+            "would cold-start. Solve sharded without a schedule instead."
+        )
+    if method in ("factored", "log_factored", "accelerated") \
+            and not problem.has_geometry and problem.C is not None:
+        raise ValueError(
+            f"method={method!r} needs a factored kernel, but this problem "
+            "only carries a dense cost matrix; use a quadratic method or "
+            "build the problem with from_point_clouds"
+        )
+    # NOTE: the stage loop below (ladder tols, prev_err cap, warm-started
+    # f/g, total-iteration accumulation) has a vmap-compatible twin in
+    # BatchedSinkhorn._make_cloud_solver — keep their semantics in sync.
+    stages = schedule.stages(problem.eps)
+    tols = schedule.stage_tols(tol, len(stages))
+    f = g = None
+    prev_err = None
+    stage_iters, stage_errs = [], []
+    res = None
+    for k, e in enumerate(stages):
+        last = k == len(stages) - 1
+        # cap at the previous stage's achieved error -> per-stage marginal
+        # error is non-increasing by construction
+        tol_k = tols[k] if prev_err is None else jnp.minimum(tols[k], prev_err)
+        res = _solve_stage(
+            problem, method, e,
+            tol=tol_k,
+            max_iter=max_iter if last else schedule.stage_iters,
+            momentum=momentum, f_init=f, g_init=g,
+            mesh=mesh, mesh_axis=mesh_axis,
+        )
+        prev_err = res.marginal_err
+        f, g = res.f, res.g
+        stage_iters.append(res.n_iter)
+        stage_errs.append(res.marginal_err)
+    total = jnp.sum(jnp.stack(stage_iters))
+    final = res._replace(n_iter=total)
+    return AnnealedResult(
+        final, stages, jnp.stack(stage_iters), jnp.stack(stage_errs)
+    )
+
+
+def solve(
+    problem: OTProblem,
+    *,
+    method: str = "auto",
+    schedule: Optional[EpsSchedule] = None,
+    tol: float = 1e-6,
+    max_iter: int = 2000,
+    momentum: float = 1.0,
+    mesh=None,
+    mesh_axis: str = "data",
+) -> SinkhornResult:
+    """Solve one entropic OT problem with any solver variant in the repo.
+
+    ``method``: "auto" | "factored" | "log_factored" | "accelerated" |
+    "quadratic" | "log_quadratic" | "sharded" (needs ``mesh``).
+    ``schedule``: optional :class:`EpsSchedule` eps-annealing cascade
+    (geometry- or cost-built problems only).
+    """
+    if method == "auto":
+        method = _auto_method(problem)
+    if schedule is not None:
+        return solve_annealed(
+            problem, method=method, schedule=schedule, tol=tol,
+            max_iter=max_iter, momentum=momentum, mesh=mesh,
+            mesh_axis=mesh_axis,
+        ).result
+    return _solve_stage(
+        problem, method, problem.eps, tol=tol, max_iter=max_iter,
+        momentum=momentum, f_init=None, g_init=None, mesh=mesh,
+        mesh_axis=mesh_axis,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched engine
+# ---------------------------------------------------------------------------
+
+
+def _pad_rows(arr: jax.Array, n_pad: int, *, replicate: bool) -> jax.Array:
+    """Pad axis 0 to n_pad: replicate the last row (features / supports —
+    keeps log-features finite) or append zeros (weights)."""
+    pad = n_pad - arr.shape[0]
+    if pad <= 0:
+        return arr
+    if replicate:
+        fill = jnp.broadcast_to(arr[-1:], (pad,) + arr.shape[1:])
+    else:
+        fill = jnp.zeros((pad,) + arr.shape[1:], arr.dtype)
+    return jnp.concatenate([arr, fill], axis=0)
+
+
+class BatchedSinkhorn:
+    """vmapped solver engine for batches of independent OT problems.
+
+    All problems in a batch share the feature rank r (same anchors in the
+    GAN workload); supports are padded to the power-of-two buckets of
+    ``configs.shapes.ot_bucket`` with zero-weight atoms, which the masked
+    solvers treat exactly. One jitted ``vmap`` of the shared solver loop
+    drives each bucket group, so per-iteration work is one batched thin
+    contraction instead of B separate kernel dispatches.
+
+    Stacked entry points (``solve_stacked``, ``solve_point_clouds``) take
+    already-uniform (B, ...) arrays; ``solve_many`` handles ragged problem
+    lists via bucketing.
+    """
+
+    _FACTORED = ("factored", "log_factored", "accelerated")
+    _QUADRATIC = ("quadratic", "log_quadratic")
+
+    def __init__(
+        self,
+        *,
+        eps: float,
+        method: str = "log_factored",
+        tol: float = 1e-6,
+        max_iter: int = 2000,
+        momentum: float = 1.0,
+        schedule: Optional[EpsSchedule] = None,
+    ):
+        if method not in self._FACTORED + self._QUADRATIC:
+            raise ValueError(
+                f"batched engine supports {self._FACTORED + self._QUADRATIC}, "
+                f"got {method!r}"
+            )
+        self.eps = eps
+        self.method = method
+        self.tol = tol
+        self.max_iter = max_iter
+        self.momentum = momentum
+        self.schedule = schedule
+        if schedule is not None and method not in ("log_factored",
+                                                   "accelerated"):
+            raise ValueError(
+                "batched annealing runs in log domain (small-eps stages); "
+                f"use method='log_factored' or 'accelerated', got {method!r}"
+            )
+        self._vsolve_features = jax.jit(jax.vmap(self._solve_one_features))
+        self._vsolve_clouds_cache: Dict[Tuple[int, float], Callable] = {}
+
+    # -- single-problem bodies (vmapped) ------------------------------------
+
+    def _solve_one_features(self, ka, kb, a, b) -> SinkhornResult:
+        """ka/kb: (log-)features (n, r)/(m, r) — or (C, unused) dense."""
+        if self.method == "factored":
+            return sinkhorn_factored(
+                ka, kb, a, b, eps=self.eps, tol=self.tol,
+                max_iter=self.max_iter, momentum=self.momentum,
+            )
+        if self.method == "log_factored":
+            return sinkhorn_log_factored(
+                ka, kb, a, b, eps=self.eps, tol=self.tol,
+                max_iter=self.max_iter,
+            )
+        if self.method == "accelerated":
+            return accelerated_sinkhorn_log_factored(
+                ka, kb, a, b, eps=self.eps, tol=self.tol,
+                max_iter=self.max_iter,
+            )
+        if self.method == "quadratic":
+            return sinkhorn_quadratic(
+                jnp.exp(-ka / self.eps), a, b, eps=self.eps, tol=self.tol,
+                max_iter=self.max_iter, momentum=self.momentum,
+            )
+        return sinkhorn_log_quadratic(
+            ka, a, b, eps=self.eps, tol=self.tol, max_iter=self.max_iter,
+        )
+
+    def _make_cloud_solver(self, d: int, R: float):
+        """Geometry-mode body: features rebuilt per annealing stage.
+        ``anchors`` is a broadcast argument (shared across the batch).
+
+        NOTE: the stage loop is the vmap-compatible twin of the one in
+        :func:`solve_annealed` (log-domain only, no per-stage diagnostics)
+        — keep their semantics in sync."""
+        if self.schedule is not None:
+            stages = self.schedule.stages(self.eps)
+            tols = self.schedule.stage_tols(self.tol, len(stages))
+        else:
+            stages, tols = (self.eps,), (self.tol,)
+
+        def solve_one(anchors, x, y, a, b) -> SinkhornResult:
+            f = g = None
+            prev_err = None
+            total = jnp.array(0, jnp.int32)
+            res = None
+            for k, e in enumerate(stages):
+                last = k == len(stages) - 1
+                tol_k = (tols[k] if prev_err is None
+                         else jnp.minimum(tols[k], prev_err))
+                q = gaussian_q(R, e, d)
+                lxi = gaussian_log_features(x, anchors, eps=e, q=q)
+                lzt = gaussian_log_features(y, anchors, eps=e, q=q)
+                solver = (accelerated_sinkhorn_log_factored
+                          if self.method == "accelerated"
+                          else sinkhorn_log_factored)
+                res = solver(
+                    lxi, lzt, a, b, eps=e, tol=tol_k,
+                    max_iter=(self.max_iter if last
+                              else self.schedule.stage_iters),
+                    f_init=f, g_init=g,
+                )
+                prev_err = res.marginal_err
+                f, g = res.f, res.g
+                total = total + res.n_iter
+            return res._replace(n_iter=total)
+
+        return solve_one
+
+    # -- stacked entry points ------------------------------------------------
+
+    def solve_stacked(self, ka, kb, a, b) -> SinkhornResult:
+        """Solve B problems given stacked kernel data.
+
+        factored: ``ka``/``kb`` = features (B, n, r)/(B, m, r);
+        log_factored/accelerated: log-features; quadratic/log_quadratic:
+        ``ka`` = cost matrices (B, n, m) and ``kb`` is ignored (pass ``ka``).
+        Returns a stacked :class:`SinkhornResult` (leading axis B).
+        """
+        if self.schedule is not None:
+            raise ValueError(
+                "stacked features pin the kernel to one eps — annealing "
+                "needs solve_point_clouds (geometry mode)"
+            )
+        return self._vsolve_features(ka, kb, a, b)
+
+    def solve_point_clouds(self, x, y, anchors, a=None, b=None, *,
+                           R: Optional[float] = None) -> SinkhornResult:
+        """Solve B cloud pairs (B, n, d)/(B, m, d) with SHARED anchors.
+
+        The one batched mode that composes with an ``EpsSchedule`` —
+        stage features are rebuilt inside the vmapped body.
+
+        ``R`` is a trace-time constant (Lemma 1's q comes from scalar
+        Lambert-W math), so each distinct R compiles a fresh solver. Pass a
+        fixed bound when calling in a training loop; the default rounds the
+        batch's data radius UP to the next 0.5 step (any upper bound is
+        valid for Lemma 1) so minibatches of similar scale share a cache
+        entry instead of recompiling every step.
+        """
+        if self.method not in ("log_factored", "accelerated"):
+            raise ValueError("point-cloud mode runs in log domain")
+        B, n, _ = x.shape
+        m = y.shape[1]
+        if a is None:
+            a = jnp.full((B, n), 1.0 / n, x.dtype)
+        if b is None:
+            b = jnp.full((B, m), 1.0 / m, y.dtype)
+        if R is None:
+            R = math.ceil(float(data_radius(x, y)) * 2.0) / 2.0
+        d = anchors.shape[-1]
+        key = d, round(R, 6)
+        fn = self._vsolve_clouds_cache.get(key)
+        if fn is None:
+            fn = jax.jit(jax.vmap(
+                self._make_cloud_solver(d, R),
+                in_axes=(None, 0, 0, 0, 0),
+            ))
+            self._vsolve_clouds_cache[key] = fn
+        return fn(anchors, x, y, a, b)
+
+    # -- ragged entry point --------------------------------------------------
+
+    def solve_many(self, problems: Sequence[OTProblem]) -> List[SinkhornResult]:
+        """Solve a ragged list of problems: bucket by padded shape, pad with
+        zero-weight atoms, vmap each bucket, unpad. Exact w.r.t. per-problem
+        solves (masked zero weights), order-preserving."""
+        groups: Dict[OTBatchShape, List[int]] = {}
+        datas: Dict[int, Tuple[jax.Array, jax.Array]] = {}
+        for i, p in enumerate(problems):
+            if float(p.eps) != float(self.eps):
+                raise ValueError(
+                    f"problem {i} declares eps={p.eps} but this engine "
+                    f"solves at eps={self.eps}; build one engine per eps"
+                )
+            ka, kb = self._kernel_data(p)
+            datas[i] = (ka, kb)
+            if self.method in self._QUADRATIC:
+                shape = OTBatchShape(ot_bucket(ka.shape[0]),
+                                     ot_bucket(ka.shape[1]), 0)
+            else:
+                shape = OTBatchShape.for_problem(
+                    ka.shape[0], kb.shape[0], ka.shape[1]
+                )
+            groups.setdefault(shape, []).append(i)
+
+        out: List[Optional[SinkhornResult]] = [None] * len(problems)
+        for shape, idxs in groups.items():
+            kas, kbs, aws, bws = [], [], [], []
+            for i in idxs:
+                p = problems[i]
+                ka, kb = datas[i]
+                if self.method in self._QUADRATIC:
+                    ka = _pad_rows(ka, shape.n_pad, replicate=True)
+                    ka = _pad_rows(ka.T, shape.m_pad, replicate=True).T
+                    kb = ka
+                else:
+                    ka = _pad_rows(ka, shape.n_pad, replicate=True)
+                    kb = _pad_rows(kb, shape.m_pad, replicate=True)
+                kas.append(ka)
+                kbs.append(kb)
+                aws.append(_pad_rows(p.a, shape.n_pad, replicate=False))
+                bws.append(_pad_rows(p.b, shape.m_pad, replicate=False))
+            res = self._vsolve_features(
+                jnp.stack(kas), jnp.stack(kbs), jnp.stack(aws), jnp.stack(bws)
+            )
+            for j, i in enumerate(idxs):
+                p = problems[i]
+                n, m = p.a.shape[0], p.b.shape[0]
+                out[i] = SinkhornResult(
+                    u=res.u[j, :n], v=res.v[j, :m],
+                    f=res.f[j, :n], g=res.g[j, :m],
+                    cost=res.cost[j], n_iter=res.n_iter[j],
+                    marginal_err=res.marginal_err[j],
+                    converged=res.converged[j],
+                )
+        return out
+
+    def _kernel_data(self, p: OTProblem) -> Tuple[jax.Array, jax.Array]:
+        if self.method == "factored":
+            return p.features_at(self.eps)
+        if self.method in ("log_factored", "accelerated"):
+            return p.log_features_at(self.eps)
+        C = p.cost_matrix()
+        return C, C
+
+
+_ENGINE_CACHE: Dict[Tuple, BatchedSinkhorn] = {}
+
+
+def solve_many(
+    problems: Sequence[OTProblem],
+    *,
+    method: str = "log_factored",
+    eps: Optional[float] = None,
+    tol: float = 1e-6,
+    max_iter: int = 2000,
+    momentum: float = 1.0,
+) -> List[SinkhornResult]:
+    """Convenience wrapper: batched solve of a ragged problem list.
+
+    ``eps`` defaults to the (shared) eps of the problems; mixed-eps lists
+    are rejected — build one engine per eps instead. Engines (and hence
+    their jitted vmapped solvers) are cached per configuration, so calling
+    this in a loop does not retrace.
+    """
+    if not problems:
+        return []
+    eps_set = {float(p.eps) for p in problems}
+    if eps is None:
+        if len(eps_set) != 1:
+            raise ValueError(f"mixed problem eps {sorted(eps_set)}; pass eps=")
+        eps = eps_set.pop()
+    key = (method, float(eps), float(tol), int(max_iter), float(momentum))
+    engine = _ENGINE_CACHE.get(key)
+    if engine is None:
+        engine = BatchedSinkhorn(
+            eps=eps, method=method, tol=tol, max_iter=max_iter,
+            momentum=momentum,
+        )
+        _ENGINE_CACHE[key] = engine
+    return engine.solve_many(problems)

@@ -30,13 +30,23 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .sinkhorn import SinkhornResult
+from .sinkhorn import (
+    SinkhornResult,
+    make_scaling_step,
+    masked_dual_value,
+    run_marginal_loop,
+)
 
 __all__ = ["sharded_sinkhorn_factored", "make_sharded_sinkhorn"]
 
 
 def _sharded_body(xi, zeta, a, b, *, eps, tol, max_iter, axis):
-    """Runs INSIDE shard_map. All arrays are per-device shards."""
+    """Runs INSIDE shard_map. All arrays are per-device shards.
+
+    Composes the SAME ``make_scaling_step`` block as the single-device
+    solver — only the operators (psum'd thin contractions) and the error
+    reduction (psum'd local L1) are distribution-aware.
+    """
     n_loc = a.shape[0]
     m_loc = b.shape[0]
     dtype = a.dtype
@@ -49,27 +59,17 @@ def _sharded_body(xi, zeta, a, b, *, eps, tol, max_iter, axis):
         t = jax.lax.psum(zeta.T @ v, axis)
         return xi @ t
 
-    def body(state):
-        it, u, v, s, _ = state
-        v = b / s
-        u = a / matvec(v)
-        s = rmatvec(u)
-        err = jax.lax.psum(jnp.sum(jnp.abs(v * s - b)), axis)
-        return it + 1, u, v, s, err
-
-    def cond(state):
-        it, _, _, _, err = state
-        return (it < max_iter) & (err > tol) & jnp.isfinite(err)
-
+    step = make_scaling_step(
+        matvec, rmatvec, a, b,
+        err_reduce=lambda e: jax.lax.psum(jnp.sum(e), axis),
+    )
     u0 = jnp.ones((n_loc,), dtype)
     v0 = jnp.ones((m_loc,), dtype)
-    state = body((jnp.array(0, jnp.int32), u0, v0, rmatvec(u0),
-                  jnp.asarray(jnp.inf, dtype)))
-    it, u, v, s, err = jax.lax.while_loop(cond, body, state)
-    cost = eps * jax.lax.psum(
-        jnp.vdot(a, jnp.log(u)) + jnp.vdot(b, jnp.log(v)), axis
+    it, (u, v, _), err = run_marginal_loop(
+        step, (u0, v0, rmatvec(u0)), tol=tol, max_iter=max_iter, dtype=dtype
     )
     f, g = eps * jnp.log(u), eps * jnp.log(v)
+    cost = jax.lax.psum(masked_dual_value(a, b, f, g), axis)
     return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
 
 
@@ -86,7 +86,9 @@ def make_sharded_sinkhorn(mesh, *, axis: str = "data", eps: float,
         u=P(axis), v=P(axis), f=P(axis), g=P(axis),
         cost=P(), n_iter=P(), marginal_err=P(), converged=P(),
     )
-    return jax.shard_map(
+    from ..distributed.sharding import shard_map
+
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis), P(axis)),

@@ -9,6 +9,19 @@ The factored path applies K = Xi @ Zeta^T as two thin matmuls — O(r(n+m))
 per iteration. The loop is a ``lax.while_loop`` (non-differentiable on
 purpose; gradients flow through the envelope theorem in ``grad.py``).
 
+This module is organised as operator-generic BUILDING BLOCKS that every
+solver in the repo composes:
+
+  * ``make_scaling_step``   — one full scaling-space iteration (u, v, s)
+  * ``make_log_step``       — one full log-domain iteration (f, g)
+  * ``factored_log_matvecs``/``dense_log_matvecs`` — the log-space kernel
+    operators shared with ``accelerated.py`` and ``api.py``
+  * ``run_marginal_loop``   — the tol/max_iter while_loop shared by all
+
+``api.solve`` and the ``BatchedSinkhorn`` engine (``api.py``) vmap these
+blocks over a leading batch axis; ``sharded.py`` composes the same scaling
+step with psum'd contractions inside ``shard_map``.
+
 Implementation notes
 --------------------
 * We reuse ``s = K^T u`` across the marginal check and the next v-update,
@@ -21,17 +34,27 @@ Implementation notes
   exact two-stage logsumexp for the factored kernel (all entries positive):
       t_k       = LSE_i( logXi[i,k] + f_i / eps )
       (log K^T e^{f/eps})_j = LSE_k( logZeta[j,k] + t_k )
+* Zero-weight atoms are SUPPORTED: a_i = 0 (resp. b_j = 0) atoms get
+  u_i = 0 / f_i = -inf and are excluded from the masked dual value. This is
+  what makes bucket-padding in the batched engine exact rather than
+  approximate — padded atoms carry zero mass and change nothing.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
     "SinkhornResult",
+    "make_scaling_step",
+    "make_log_step",
+    "factored_log_matvecs",
+    "dense_log_matvecs",
+    "run_marginal_loop",
+    "masked_dual_value",
     "sinkhorn_operator",
     "sinkhorn_factored",
     "sinkhorn_quadratic",
@@ -55,7 +78,143 @@ class SinkhornResult(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# Scaling-space loop, generic in the operator
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def masked_dual_value(a, b, f, g):
+    """W_hat = <a, f> + <b, g> with zero-weight atoms excluded.
+
+    Padded atoms have a_i = 0 and f_i = -inf; a plain vdot would produce
+    0 * -inf = nan, so both terms mask on strictly positive weight.
+    """
+    ta = jnp.sum(jnp.where(a > 0, a * f, 0.0))
+    tb = jnp.sum(jnp.where(b > 0, b * g, 0.0))
+    return ta + tb
+
+
+def _masked_log(w):
+    """log w with log(0) pinned to -inf without the 0*inf nan hazards."""
+    return jnp.where(w > 0, jnp.log(jnp.where(w > 0, w, 1.0)), -jnp.inf)
+
+
+def make_scaling_step(
+    matvec: Callable[[jax.Array], jax.Array],
+    rmatvec: Callable[[jax.Array], jax.Array],
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    momentum: float = 1.0,
+    err_reduce: Callable[[jax.Array], jax.Array] = jnp.sum,
+):
+    """One full Alg.-1 iteration in scaling space.
+
+    Returns ``step((u, v, s)) -> ((u', v', s'), err)`` where ``s = K^T u``
+    is carried so the marginal check is free. ``err_reduce`` lets SPMD
+    callers (``sharded.py``) psum the local L1 error into a replicated
+    scalar.
+    """
+
+    def relax(new, old):
+        if momentum == 1.0:
+            return new
+        # geometric over-relaxation: u <- u_old^{1-w} * u_new^{w}
+        return old ** (1.0 - momentum) * new**momentum
+
+    def step(carry):
+        u, v, s = carry
+        v_new = relax(b / s, v)
+        u_new = relax(a / matvec(v_new), u)
+        s_new = rmatvec(u_new)
+        err = err_reduce(jnp.abs(v_new * s_new - b))
+        return (u_new, v_new, s_new), err
+
+    return step
+
+
+def factored_log_matvecs(
+    log_xi: jax.Array, log_zeta: jax.Array, *, eps: float
+) -> Tuple[Callable, Callable]:
+    """Exact two-stage LSE operators for K = Xi Zeta^T (all entries > 0).
+
+        log_matvec(g)  = log(K   e^{g/eps})   (n,)
+        log_rmatvec(f) = log(K^T e^{f/eps})   (m,)
+
+    Cost O(r (n + m)) each — shared by the plain, accelerated and batched
+    log-domain solvers.
+    """
+    lse = jax.scipy.special.logsumexp
+
+    def log_rmatvec(f):
+        t = lse(log_xi + (f / eps)[:, None], axis=0)         # (r,)
+        return lse(log_zeta + t[None, :], axis=1)
+
+    def log_matvec(g):
+        t = lse(log_zeta + (g / eps)[:, None], axis=0)       # (r,)
+        return lse(log_xi + t[None, :], axis=1)
+
+    return log_matvec, log_rmatvec
+
+
+def dense_log_matvecs(C: jax.Array, *, eps: float) -> Tuple[Callable, Callable]:
+    """Dense O(nm) log-operators on the Gibbs kernel of cost matrix C."""
+    lse = jax.scipy.special.logsumexp
+    negC = -C / eps
+
+    def log_rmatvec(f):
+        return lse(negC + (f / eps)[:, None], axis=0)
+
+    def log_matvec(g):
+        return lse(negC + (g / eps)[None, :], axis=1)
+
+    return log_matvec, log_rmatvec
+
+
+def make_log_step(
+    log_matvec: Callable[[jax.Array], jax.Array],
+    log_rmatvec: Callable[[jax.Array], jax.Array],
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    eps: float,
+    err_reduce: Callable[[jax.Array], jax.Array] = jnp.sum,
+):
+    """One full log-domain iteration: ``step((f, g)) -> ((f', g'), err)``."""
+    loga, logb = _masked_log(a), _masked_log(b)
+
+    def step(carry):
+        f, g = carry
+        g = eps * (logb - log_rmatvec(f))
+        f = eps * (loga - log_matvec(g))
+        log_col = log_rmatvec(f) + g / eps       # log of column marginal
+        err = err_reduce(jnp.abs(jnp.exp(log_col) - b))
+        return (f, g), err
+
+    return step
+
+
+def run_marginal_loop(step, carry0, *, tol: float, max_iter: int, dtype):
+    """Run ``step`` until the marginal error drops below ``tol``.
+
+    One mandatory iteration is always taken (so e.g. u.Kv = 1 holds for the
+    Eq.-6 dual shortcut). Returns ``(n_iter, carry, err)``.
+    """
+
+    def body(state):
+        it, carry, _ = state
+        carry, err = step(carry)
+        return it + 1, carry, err
+
+    def cond(state):
+        it, _, err = state
+        return (it < max_iter) & (err > tol) & jnp.isfinite(err)
+
+    state0 = body((jnp.array(0, jnp.int32), carry0, jnp.asarray(jnp.inf, dtype)))
+    return jax.lax.while_loop(cond, body, state0)
+
+
+# ---------------------------------------------------------------------------
+# Scaling-space solvers
 # ---------------------------------------------------------------------------
 
 
@@ -75,32 +234,13 @@ def sinkhorn_operator(
     n, m = a.shape[0], b.shape[0]
     dtype = a.dtype
     u0 = jnp.ones((n,), dtype) if u_init is None else u_init
-    s0 = rmatvec(u0)
     v0 = jnp.ones((m,), dtype)
-
-    def relax(new, old):
-        if momentum == 1.0:
-            return new
-        # geometric over-relaxation: u <- u_old^{1-w} * u_new^{w}
-        return old ** (1.0 - momentum) * new**momentum
-
-    def cond(state):
-        it, _, _, _, err = state
-        return (it < max_iter) & (err > tol) & jnp.isfinite(err)
-
-    def body(state):
-        it, u, v, s, _ = state
-        v_new = relax(b / s, v)
-        u_new = relax(a / matvec(v_new), u)
-        s_new = rmatvec(u_new)
-        err = jnp.sum(jnp.abs(v_new * s_new - b))
-        return it + 1, u_new, v_new, s_new, err
-
-    # run one mandatory iteration so u.K v = 1 holds for the dual shortcut
-    state0 = body((jnp.array(0, jnp.int32), u0, v0, s0, jnp.asarray(jnp.inf, dtype)))
-    it, u, v, s, err = jax.lax.while_loop(cond, body, state0)
-    cost = eps * (jnp.vdot(a, jnp.log(u)) + jnp.vdot(b, jnp.log(v)))
-    f, g = eps * jnp.log(u), eps * jnp.log(v)
+    step = make_scaling_step(matvec, rmatvec, a, b, momentum=momentum)
+    it, (u, v, _), err = run_marginal_loop(
+        step, (u0, v0, rmatvec(u0)), tol=tol, max_iter=max_iter, dtype=dtype
+    )
+    f, g = eps * _masked_log(u), eps * _masked_log(v)
+    cost = masked_dual_value(a, b, f, g)
     return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
 
 
@@ -139,11 +279,12 @@ def sinkhorn_quadratic(
     tol: float = 1e-6,
     max_iter: int = 2000,
     momentum: float = 1.0,
+    u_init: Optional[jax.Array] = None,
 ) -> SinkhornResult:
     """The paper's ``Sin`` baseline (Cuturi '13): dense O(nm) matvecs."""
     return sinkhorn_operator(
         lambda v: K @ v, lambda u: K.T @ u, a, b,
-        eps=eps, tol=tol, max_iter=max_iter, momentum=momentum,
+        eps=eps, tol=tol, max_iter=max_iter, momentum=momentum, u_init=u_init,
     )
 
 
@@ -152,8 +293,21 @@ def sinkhorn_quadratic(
 # ---------------------------------------------------------------------------
 
 
-def _lse(x, axis):
-    return jax.scipy.special.logsumexp(x, axis=axis)
+def _log_domain_solve(
+    log_matvec, log_rmatvec, a, b, *, eps, tol, max_iter,
+    f_init=None, g_init=None,
+) -> SinkhornResult:
+    n, m = a.shape[0], b.shape[0]
+    dtype = a.dtype
+    f0 = jnp.zeros((n,), dtype) if f_init is None else f_init
+    g0 = jnp.zeros((m,), dtype) if g_init is None else g_init
+    step = make_log_step(log_matvec, log_rmatvec, a, b, eps=eps)
+    it, (f, g), err = run_marginal_loop(
+        step, (f0, g0), tol=tol, max_iter=max_iter, dtype=dtype
+    )
+    cost = masked_dual_value(a, b, f, g)
+    u, v = jnp.exp(f / eps), jnp.exp(g / eps)
+    return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
 
 
 def sinkhorn_log_factored(
@@ -165,44 +319,21 @@ def sinkhorn_log_factored(
     eps: float,
     tol: float = 1e-6,
     max_iter: int = 2000,
+    f_init: Optional[jax.Array] = None,
+    g_init: Optional[jax.Array] = None,
 ) -> SinkhornResult:
     """Log-stabilized linear Sinkhorn via exact two-stage logsumexp.
 
     Positivity of the factored kernel makes the split LSE *exact*:
         log (K^T e^{f/eps})_j = LSE_k( logZeta_jk + LSE_i(logXi_ik + f_i/eps) ).
     Cost O(r (n + m)) per iteration, identical to the scaling-space path.
+    ``f_init``/``g_init`` warm-start the potentials (epsilon annealing).
     """
-    n, m = a.shape[0], b.shape[0]
-    dtype = a.dtype
-    loga, logb = jnp.log(a), jnp.log(b)
-
-    def log_rmatvec(f):         # -> log(K^T e^{f/eps}), (m,)
-        t = _lse(log_xi + (f / eps)[:, None], axis=0)        # (r,)
-        return _lse(log_zeta + t[None, :], axis=1)
-
-    def log_matvec(g):          # -> log(K e^{g/eps}), (n,)
-        t = _lse(log_zeta + (g / eps)[:, None], axis=0)      # (r,)
-        return _lse(log_xi + t[None, :], axis=1)
-
-    def body(state):
-        it, f, g, _ = state
-        g = eps * (logb - log_rmatvec(f))
-        f = eps * (loga - log_matvec(g))
-        log_col = log_rmatvec(f) + g / eps       # log of column marginal
-        err = jnp.sum(jnp.abs(jnp.exp(log_col) - b))
-        return it + 1, f, g, err
-
-    def cond(state):
-        it, _, _, err = state
-        return (it < max_iter) & (err > tol) & jnp.isfinite(err)
-
-    f0 = jnp.zeros((n,), dtype)
-    g0 = jnp.zeros((m,), dtype)
-    state = body((jnp.array(0, jnp.int32), f0, g0, jnp.asarray(jnp.inf, dtype)))
-    it, f, g, err = jax.lax.while_loop(cond, body, state)
-    cost = jnp.vdot(a, f) + jnp.vdot(b, g)
-    u, v = jnp.exp(f / eps), jnp.exp(g / eps)
-    return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
+    log_matvec, log_rmatvec = factored_log_matvecs(log_xi, log_zeta, eps=eps)
+    return _log_domain_solve(
+        log_matvec, log_rmatvec, a, b, eps=eps, tol=tol, max_iter=max_iter,
+        f_init=f_init, g_init=g_init,
+    )
 
 
 def sinkhorn_log_quadratic(
@@ -213,31 +344,14 @@ def sinkhorn_log_quadratic(
     eps: float,
     tol: float = 1e-6,
     max_iter: int = 5000,
+    f_init: Optional[jax.Array] = None,
+    g_init: Optional[jax.Array] = None,
 ) -> SinkhornResult:
     """Dense log-domain Sinkhorn — the ground-truth oracle for benchmarks."""
-    n, m = a.shape[0], b.shape[0]
-    dtype = a.dtype
-    loga, logb = jnp.log(a), jnp.log(b)
-    negC = -C / eps
-
-    def body(state):
-        it, f, g, _ = state
-        g = eps * (logb - _lse(negC + (f / eps)[:, None], axis=0))
-        f = eps * (loga - _lse(negC + (g / eps)[None, :], axis=1))
-        log_col = _lse(negC + (f / eps)[:, None], axis=0) + g / eps
-        err = jnp.sum(jnp.abs(jnp.exp(log_col) - b))
-        return it + 1, f, g, err
-
-    def cond(state):
-        it, _, _, err = state
-        return (it < max_iter) & (err > tol) & jnp.isfinite(err)
-
-    f0, g0 = jnp.zeros((n,), dtype), jnp.zeros((m,), dtype)
-    state = body((jnp.array(0, jnp.int32), f0, g0, jnp.asarray(jnp.inf, dtype)))
-    it, f, g, err = jax.lax.while_loop(cond, body, state)
-    cost = jnp.vdot(a, f) + jnp.vdot(b, g)
-    return SinkhornResult(
-        jnp.exp(f / eps), jnp.exp(g / eps), f, g, cost, it, err, err <= tol
+    log_matvec, log_rmatvec = dense_log_matvecs(C, eps=eps)
+    return _log_domain_solve(
+        log_matvec, log_rmatvec, a, b, eps=eps, tol=tol, max_iter=max_iter,
+        f_init=f_init, g_init=g_init,
     )
 
 

@@ -28,8 +28,30 @@ __all__ = [
     "use_mesh_context",
     "current_mesh_context",
     "shard",
+    "shard_map",
     "logical_spec",
 ]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-portable ``shard_map``.
+
+    Newer jax exposes ``jax.shard_map`` (with ``check_vma``); 0.4.x only has
+    ``jax.experimental.shard_map.shard_map`` (with ``check_rep``). Every
+    shard_map in this repo routes through here so the SPMD solvers and the
+    multi-device tests run on both.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
 
 _state = threading.local()
 

@@ -8,8 +8,10 @@ Each kernel ships with a pure-jnp oracle in ``ref.py``; tests sweep shapes
 and dtypes in interpret mode. ``ops.py`` holds the jitted public wrappers.
 """
 from .ops import (
+    batched_sinkhorn_halfstep,
     default_interpret,
     feature_contract,
+    fused_batched_sinkhorn_iteration,
     fused_sinkhorn_iteration,
     gaussian_feature_map,
     log_matvec,
@@ -17,8 +19,10 @@ from .ops import (
 )
 
 __all__ = [
+    "batched_sinkhorn_halfstep",
     "default_interpret",
     "feature_contract",
+    "fused_batched_sinkhorn_iteration",
     "fused_sinkhorn_iteration",
     "gaussian_feature_map",
     "log_matvec",

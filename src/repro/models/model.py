@@ -208,7 +208,9 @@ def _moe_apply(p, x2: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]
         P(dp, tp, None),
     )
     out_specs = (P(dp, tp, None), P())
-    fn = jax.shard_map(
+    from ..distributed.sharding import shard_map
+
+    fn = shard_map(
         body, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )

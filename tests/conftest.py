@@ -3,5 +3,42 @@
 # spawn subprocesses that set --xla_force_host_platform_device_count
 # themselves (tests/test_distributed.py).
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+# Modules dominated by many-iteration solver convergence runs (minutes on
+# CPU). Everything else is a fast smoke/unit module (seconds). The split
+# lets `pytest -m fast` gate a quick inner loop while the tier-1 command
+# (plain `pytest -x -q`) still runs everything.
+_SLOW_MODULES = {
+    "test_api",
+    "test_distributed",
+    "test_divergence",
+    "test_schedule",
+    "test_sinkhorn",
+    "test_system",
+}
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "fast: quick unit/smoke test (seconds on CPU); "
+        "run the fast gate with `pytest -m fast`"
+    )
+    config.addinivalue_line(
+        "markers", "slow: convergence-heavy test (minutes on CPU); "
+        "deselect with `pytest -m 'not slow'`"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        already = {m.name for m in item.iter_markers()} & {"fast", "slow"}
+        if already:
+            continue
+        name = item.module.__name__ if item.module else ""
+        if name in _SLOW_MODULES:
+            item.add_marker(pytest.mark.slow)
+        else:
+            item.add_marker(pytest.mark.fast)

@@ -1,0 +1,221 @@
+"""Unified front-end (repro.core.api): oracle-consistency across methods,
+batched engine vs per-problem loop, bucket padding exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.shapes import OTBatchShape, OT_SUPPORT_BUCKETS, ot_bucket
+from repro.core import (
+    BatchedSinkhorn,
+    EpsSchedule,
+    OTProblem,
+    gaussian_features,
+    gaussian_log_features,
+    solve,
+    solve_many,
+)
+from repro.core.features import GaussianFeatureMap
+
+EPS = 0.6
+R_FEAT = 128
+
+ALL_METHODS = ("factored", "log_factored", "accelerated", "quadratic",
+               "log_quadratic")
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n, m, d = 60, 50, 2
+    x = jnp.clip(jax.random.normal(k1, (n, d)), -2, 2)
+    y = jnp.clip(jax.random.normal(k2, (m, d)) * 0.7 + 0.3, -2, 2)
+    fm = GaussianFeatureMap(r=R_FEAT, d=d, eps=EPS, R=3.0)
+    U = fm.init(k3)
+    xi = gaussian_features(x, U, eps=EPS, q=fm.q)
+    zeta = gaussian_features(y, U, eps=EPS, q=fm.q)
+    return x, y, U, fm, xi, zeta
+
+
+# ---------------------------------------------------------------------------
+# solve(): oracle-consistency matrix
+# ---------------------------------------------------------------------------
+
+
+def test_solve_method_matrix_agrees(fixture):
+    """All five methods on a feature-built problem share ONE fixed point
+    (the quadratic baselines run on the induced cost), so every pair of
+    costs must agree to solver tolerance."""
+    _, _, _, _, xi, zeta = fixture
+    p = OTProblem.from_features(xi, zeta, eps=EPS)
+    # tol=1e-6 converges on every method; tighter is below the f32
+    # marginal-error floor and would just exhaust max_iter
+    costs = {
+        meth: float(solve(p, method=meth, tol=1e-6, max_iter=8000).cost)
+        for meth in ALL_METHODS
+    }
+    ref = costs["log_quadratic"]
+    for meth, c in costs.items():
+        np.testing.assert_allclose(c, ref, rtol=1e-5, err_msg=meth)
+
+
+def test_solve_auto_dispatch(fixture):
+    x, y, U, fm, xi, zeta = fixture
+    lxi = gaussian_log_features(x, U, eps=EPS, q=fm.q)
+    lzt = gaussian_log_features(y, U, eps=EPS, q=fm.q)
+    r_feat = solve(OTProblem.from_features(xi, zeta, eps=EPS))
+    r_log = solve(OTProblem.from_log_features(lxi, lzt, eps=EPS))
+    r_geo = solve(OTProblem.from_point_clouds(x, y, U, eps=EPS))
+    np.testing.assert_allclose(float(r_feat.cost), float(r_log.cost),
+                               rtol=1e-4)
+    assert np.isfinite(float(r_geo.cost))
+
+
+def test_solve_converged_flags(fixture):
+    _, _, _, _, xi, zeta = fixture
+    p = OTProblem.from_features(xi, zeta, eps=EPS)
+    res = solve(p, method="log_factored", tol=1e-6, max_iter=4000)
+    assert bool(res.converged)
+    assert float(res.marginal_err) <= 1e-6
+
+
+def test_solve_rejects_unknown_method(fixture):
+    _, _, _, _, xi, zeta = fixture
+    p = OTProblem.from_features(xi, zeta, eps=EPS)
+    with pytest.raises(ValueError, match="unknown method"):
+        solve(p, method="nope")
+
+
+def test_feature_problem_rejects_annealing(fixture):
+    _, _, _, _, xi, zeta = fixture
+    p = OTProblem.from_features(xi, zeta, eps=EPS)
+    with pytest.raises(ValueError, match="anneal"):
+        solve(p, method="log_factored", schedule=EpsSchedule(eps_init=1.0))
+
+
+# ---------------------------------------------------------------------------
+# Batched engine
+# ---------------------------------------------------------------------------
+
+
+def _batch_clouds(B, n, m, d=2, seed=5):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jnp.clip(jax.random.normal(ks[0], (B, n, d)), -2, 2)
+    y = jnp.clip(jax.random.normal(ks[1], (B, m, d)) * 0.7, -2, 2)
+    return x, y
+
+
+@pytest.mark.parametrize("method", ["factored", "log_factored"])
+def test_batched_matches_per_problem_loop(fixture, method):
+    """The tentpole contract: stacked vmapped solves match a Python loop of
+    single solves element-wise to <= 1e-5 relative cost error."""
+    _, _, U, fm, _, _ = fixture
+    B, n, m = 4, 48, 40
+    x, y = _batch_clouds(B, n, m)
+    feat = gaussian_log_features if method == "log_factored" else \
+        gaussian_features
+    ka = jnp.stack([feat(x[i], U, eps=EPS, q=fm.q) for i in range(B)])
+    kb = jnp.stack([feat(y[i], U, eps=EPS, q=fm.q) for i in range(B)])
+    a = jnp.full((B, n), 1.0 / n)
+    b = jnp.full((B, m), 1.0 / m)
+    eng = BatchedSinkhorn(eps=EPS, method=method, tol=1e-7, max_iter=4000)
+    res = eng.solve_stacked(ka, kb, a, b)
+    assert res.cost.shape == (B,)
+    for i in range(B):
+        if method == "log_factored":
+            p = OTProblem.from_log_features(ka[i], kb[i], eps=EPS)
+        else:
+            p = OTProblem.from_features(ka[i], kb[i], eps=EPS)
+        single = solve(p, method=method, tol=1e-7, max_iter=4000)
+        rel = abs(float(res.cost[i] - single.cost)) / abs(float(single.cost))
+        assert rel <= 1e-5, (i, rel)
+
+
+def test_solve_many_ragged_buckets(fixture):
+    """Ragged sizes land in different buckets; padded solves must match
+    unpadded per-problem solves exactly (zero-weight atoms are masked)."""
+    _, _, U, fm, _, _ = fixture
+    sizes = [(60, 50), (40, 70), (100, 30), (60, 50)]
+    probs = []
+    for i, (n, m) in enumerate(sizes):
+        kk = jax.random.fold_in(jax.random.PRNGKey(9), i)
+        x = jnp.clip(jax.random.normal(kk, (n, 2)), -2, 2)
+        y = jnp.clip(jax.random.normal(jax.random.fold_in(kk, 1), (m, 2)),
+                     -2, 2)
+        probs.append(OTProblem.from_log_features(
+            gaussian_log_features(x, U, eps=EPS, q=fm.q),
+            gaussian_log_features(y, U, eps=EPS, q=fm.q), eps=EPS))
+    outs = solve_many(probs, method="log_factored", tol=1e-7, max_iter=4000)
+    assert len(outs) == len(probs)
+    for p, o in zip(probs, outs):
+        n, m = p.a.shape[0], p.b.shape[0]
+        assert o.u.shape == (n,) and o.v.shape == (m,)
+        single = solve(p, method="log_factored", tol=1e-7, max_iter=4000)
+        rel = abs(float(o.cost - single.cost)) / abs(float(single.cost))
+        assert rel <= 1e-5
+
+
+def test_solve_many_quadratic_padding(fixture):
+    """Dense-cost problems pad on both axes; still exact."""
+    sizes = [(30, 45), (50, 20)]
+    probs = []
+    for i, (n, m) in enumerate(sizes):
+        kk = jax.random.fold_in(jax.random.PRNGKey(11), i)
+        x = jax.random.normal(kk, (n, 2))
+        y = jax.random.normal(jax.random.fold_in(kk, 1), (m, 2)) * 0.5
+        from repro.core import squared_euclidean
+        probs.append(OTProblem.from_cost(squared_euclidean(x, y), eps=EPS))
+    outs = solve_many(probs, method="log_quadratic", tol=1e-7, max_iter=4000)
+    for p, o in zip(probs, outs):
+        single = solve(p, method="log_quadratic", tol=1e-7, max_iter=4000)
+        rel = abs(float(o.cost - single.cost)) / abs(float(single.cost))
+        assert rel <= 1e-5
+
+
+def test_batched_point_cloud_mode(fixture):
+    """Geometry mode with shared anchors matches per-problem geometry
+    solves."""
+    _, _, U, fm, _, _ = fixture
+    B, n, m = 3, 40, 36
+    x, y = _batch_clouds(B, n, m, seed=13)
+    R = 3.0     # shared bound so batch and single use identical features
+    eng = BatchedSinkhorn(eps=EPS, method="log_factored", tol=1e-7,
+                          max_iter=4000)
+    res = eng.solve_point_clouds(x, y, U, R=R)
+    for i in range(B):
+        p = OTProblem.from_point_clouds(x[i], y[i], U, eps=EPS, R=R)
+        single = solve(p, method="log_factored", tol=1e-7, max_iter=4000)
+        np.testing.assert_allclose(float(res.cost[i]), float(single.cost),
+                                   rtol=1e-5)
+
+
+def test_engine_rejects_bad_config():
+    with pytest.raises(ValueError, match="batched engine supports"):
+        BatchedSinkhorn(eps=0.5, method="sharded")
+    with pytest.raises(ValueError, match="log domain"):
+        BatchedSinkhorn(eps=0.5, method="factored",
+                        schedule=EpsSchedule(eps_init=1.0))
+
+
+# ---------------------------------------------------------------------------
+# Bucket machinery (configs.shapes)
+# ---------------------------------------------------------------------------
+
+
+def test_ot_bucket_rounding():
+    assert ot_bucket(1) == 64
+    assert ot_bucket(64) == 64
+    assert ot_bucket(65) == 128
+    assert ot_bucket(1000) == 1024
+    top = OT_SUPPORT_BUCKETS[-1]
+    assert ot_bucket(top + 1) == 2 * top
+    with pytest.raises(ValueError):
+        ot_bucket(0)
+
+
+def test_ot_batch_shape_groups():
+    s1 = OTBatchShape.for_problem(60, 50, 128)
+    s2 = OTBatchShape.for_problem(33, 64, 128)
+    assert s1 == OTBatchShape(64, 64, 128) == s2
+    assert OTBatchShape.for_problem(100, 50, 128) != s1

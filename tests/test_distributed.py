@@ -51,10 +51,36 @@ def test_sharded_sinkhorn_matches_single_device():
     """)
 
 
+def test_api_solve_sharded_dispatch():
+    """solve(method='sharded') routes through the shard_map solver and
+    matches the single-device factored path."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core import OTProblem, solve, gaussian_features
+        from repro.core.features import GaussianFeatureMap
+        key = jax.random.PRNGKey(0)
+        n, m, d, r, eps = 64, 64, 2, 128, 0.7
+        x = jax.random.normal(key, (n, d))
+        y = jax.random.normal(jax.random.fold_in(key, 1), (m, d)) * 0.5
+        fm = GaussianFeatureMap(r=r, d=d, eps=eps, R=3.0)
+        U = fm.init(jax.random.fold_in(key, 2))
+        xi = gaussian_features(x, U, eps=eps, q=fm.q)
+        zt = gaussian_features(y, U, eps=eps, q=fm.q)
+        p = OTProblem.from_features(xi, zt, eps=eps)
+        ref = solve(p, method="factored", tol=1e-7, max_iter=3000)
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+        out = solve(p, method="sharded", mesh=mesh, tol=1e-7, max_iter=3000)
+        np.testing.assert_allclose(float(out.cost), float(ref.cost), rtol=1e-5)
+        print("api sharded dispatch OK", float(out.cost))
+    """)
+
+
 def test_moe_ep_multidevice_matches_dense():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
+        from repro.distributed.sharding import shard_map
         from repro.models.moe import init_moe, moe_dense, moe_ep_local
         key = jax.random.PRNGKey(0)
         T, d, f, E = 128, 16, 32, 8
@@ -62,7 +88,7 @@ def test_moe_ep_multidevice_matches_dense():
         x = jax.random.normal(jax.random.fold_in(key, 1), (T, d)) * 0.5
         out_d, _ = moe_dense(p, x, top_k=2)
         mesh = Mesh(np.array(jax.devices()).reshape(1, 8), ("data", "model"))
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda p_, x_: moe_ep_local(p_, x_, top_k=2, n_experts=E,
                                         axis="model", capacity_factor=8.0),
             mesh=mesh,
@@ -83,10 +109,11 @@ def test_compressed_psum_close_to_exact():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
+        from repro.distributed.sharding import shard_map
         from repro.optim import compressed_psum
         mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 512)) * 0.1
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda v: (jax.lax.psum(v, "data"),
                        compressed_psum(v, "data")),
             mesh=mesh, in_specs=P("data", None),

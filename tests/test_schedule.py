@@ -1,0 +1,96 @@
+"""Epsilon-annealing schedule properties (repro.core.api.EpsSchedule).
+
+The three contracts promised by the schedule design:
+  1. the annealed solve lands on the SAME cost as a direct small-eps solve;
+  2. per-stage marginal error is monotone non-increasing (enforced by the
+     adaptive cap at the previous stage's achieved error);
+  3. at small eps (<= 0.05) the cascade takes strictly fewer TOTAL
+     iterations than a cold start — the reason the schedule exists.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EpsSchedule, OTProblem, solve, solve_annealed
+from repro.core.features import GaussianFeatureMap
+
+EPS_TARGET = 0.02           # the paper's hard small-regularization regime
+TOL = 1e-4                  # above the f32 L1-marginal noise floor
+SCHED = EpsSchedule(eps_init=0.8, decay=0.4)
+SEEDS = (0, 3, 4, 5)
+
+
+@pytest.fixture(scope="module")
+def anchors():
+    return GaussianFeatureMap(r=128, d=2, eps=EPS_TARGET, R=3.0).init(
+        jax.random.PRNGKey(7)
+    )
+
+
+def _problem(seed, anchors, n=60, m=50, d=2):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jnp.clip(jax.random.normal(k1, (n, d)), -2, 2)
+    y = jnp.clip(jax.random.normal(k2, (m, d)) * 0.7 + 0.3, -2, 2)
+    return OTProblem.from_point_clouds(x, y, anchors, eps=EPS_TARGET)
+
+
+def _pair(seed, anchors):
+    p = _problem(seed, anchors)
+    ann = solve_annealed(p, method="log_factored", schedule=SCHED, tol=TOL,
+                         max_iter=100_000)
+    cold = solve(p, method="log_factored", tol=TOL, max_iter=100_000)
+    return ann, cold
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_annealed_cost_matches_direct_solve(seed, anchors):
+    ann, cold = _pair(seed, anchors)
+    assert bool(ann.result.converged) and bool(cold.converged)
+    rel = abs(float(ann.result.cost - cold.cost)) / abs(float(cold.cost))
+    assert rel <= 1e-3, rel
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_stage_errors_monotone_non_increasing(seed, anchors):
+    ann, _ = _pair(seed, anchors)
+    errs = np.asarray(ann.stage_errs)
+    assert len(errs) == len(ann.stage_eps) >= 3
+    assert np.all(np.isfinite(errs))
+    assert np.all(errs[1:] <= errs[:-1]), errs
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_annealing_beats_cold_start_iterations(seed, anchors):
+    assert EPS_TARGET <= 0.05
+    ann, cold = _pair(seed, anchors)
+    assert int(ann.result.n_iter) < int(cold.n_iter), (
+        int(ann.result.n_iter), int(cold.n_iter)
+    )
+    # and n_iter really is the total over stages
+    assert int(ann.result.n_iter) == int(np.sum(np.asarray(ann.stage_iters)))
+
+
+def test_stage_ladder_shape():
+    s = EpsSchedule(eps_init=0.8, decay=0.4)
+    stages = s.stages(0.02)
+    assert stages[0] == 0.8 and stages[-1] == 0.02
+    assert all(b < a for a, b in zip(stages, stages[1:]))
+    # degenerate: eps_init at or below target collapses to one stage
+    assert s.stages(0.9) == (0.9,)
+
+
+def test_stage_tols_ladder():
+    s = EpsSchedule(eps_init=0.8, decay=0.4, stage_tol=1e-2)
+    tols = s.stage_tols(1e-4, 6)
+    assert tols[0] == 1e-2 and tols[-1] == 1e-4
+    assert all(b <= a for a, b in zip(tols, tols[1:]))
+    # intermediates stay loose: none tighter than sqrt(stage_tol * tol)
+    assert min(tols[:-1]) >= np.sqrt(1e-2 * 1e-4) * (1 - 1e-6)
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="decay"):
+        EpsSchedule(eps_init=1.0, decay=1.5)
+    with pytest.raises(ValueError, match="eps_init"):
+        EpsSchedule(eps_init=-1.0)
