@@ -10,6 +10,7 @@ reproduce at this size.
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Dict, List
 
@@ -18,6 +19,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    ArcCosinePointCloud,
+    GaussianPointCloud,
+    GridSeparable,
+    NystromLowRank,
+    OTProblem,
     gaussian_log_features,
     nystrom_factors,
     sinkhorn_factored,
@@ -25,6 +31,7 @@ from repro.core import (
     sinkhorn_log_quadratic,
     sinkhorn_nystrom,
     sinkhorn_quadratic,
+    solve,
     squared_euclidean,
 )
 from repro.core.features import GaussianFeatureMap
@@ -119,14 +126,84 @@ def run_setting(setting: str, n: int = 2000,
     return rows
 
 
-def main(n: int = 2000, quick: bool = False):
+GEOMETRIES = ("gaussian", "arccos", "nystrom", "grid")
+
+
+def _geometry_problem(family: str, n: int, r: int, eps: float):
+    """One OTProblem per cost family through the unified Geometry layer."""
+    x, y = SETTINGS["gauss2d"](n)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    key = jax.random.PRNGKey(0)
+    if family == "gaussian":
+        R = float(max(jnp.max(jnp.linalg.norm(x, axis=1)),
+                      jnp.max(jnp.linalg.norm(y, axis=1))))
+        fm = GaussianFeatureMap(r=r, d=x.shape[1], eps=eps, R=R)
+        return OTProblem.from_geometry(
+            GaussianPointCloud.build(x, y, fm.init(key), eps=eps, R=R))
+    if family == "arccos":
+        anchors = 1.5 * jax.random.normal(key, (r, x.shape[1]))
+        return OTProblem.from_geometry(
+            ArcCosinePointCloud(x, y, anchors, eps=eps))
+    if family == "nystrom":
+        return OTProblem.from_geometry(NystromLowRank.from_point_clouds(
+            x, y, eps=eps, rank=r, key=key))
+    if family == "grid":
+        side = max(2, int(round(n ** 0.5)))
+        ax = (jnp.linspace(0.0, 1.0, side), jnp.linspace(0.0, 1.0, side))
+        return OTProblem.from_grid(ax, eps=eps)
+    raise ValueError(family)
+
+
+def run_geometries(n: int = 1000, r: int = 200, eps_list=(0.1, 0.5),
+                   families=GEOMETRIES, tol: float = 1e-4,
+                   max_iter: int = 2000) -> List[Dict]:
+    """The ``--geometry`` axis: one solve per cost family through the
+    Geometry protocol (auto method dispatch per family), timing the jitted
+    solve and reporting the structured divergence flag — the Nys small-eps
+    blow-up shows up here as converged=False without any NaN handling at
+    the call site."""
+    rows = []
+    for eps in eps_list:
+        for fam in families:
+            p = _geometry_problem(fam, n, r, eps)
+            # zero-arg jit: problem data is baked in as constants, so the
+            # second call hits the compiled cache and times pure solve work
+            run = jax.jit(lambda: solve(p, tol=tol, max_iter=max_iter))
+
+            res = run()                         # compile
+            jax.block_until_ready(res.cost)
+            t0 = time.perf_counter()
+            res = run()
+            jax.block_until_ready(res.cost)
+            dt = time.perf_counter() - t0
+            ok = bool(res.converged) and not bool(res.diverged)
+            rows.append(dict(
+                family=fam, eps=eps, n=p.a.shape[0], time_s=dt,
+                cost=float(res.cost), converged=ok,
+                diverged=bool(res.diverged),
+            ))
+    return rows
+
+
+def main(n: int = 2000, quick: bool = False, geometry: bool = False):
+    all_rows = []
+    print("name,us_per_call,derived")
+    if geometry:
+        all_rows = run_geometries(n=min(n, 1024),
+                                  eps_list=(0.1, 0.5) if quick
+                                  else (0.05, 0.1, 0.5, 2.0))
+        for row in all_rows:
+            name = (f"tradeoff/geometry/{row['family']}/eps{row['eps']}"
+                    f"/n{row['n']}")
+            print(f"{name},{row['time_s'] * 1e6:.1f},cost={row['cost']:.4f};"
+                  f"converged={row['converged']};diverged={row['diverged']}")
+        return all_rows
     settings = ["gauss2d"] if quick else list(SETTINGS)
     eps_list = (0.5, 5.0) if quick else (0.1, 0.5, 2.0, 5.0)
     r_list = (100, 500) if quick else (100, 500, 2000)
-    all_rows = []
     for s in settings:
         all_rows += run_setting(s, n=n, eps_list=eps_list, r_list=r_list)
-    print("name,us_per_call,derived")
     for row in all_rows:
         name = f"tradeoff/{row['setting']}/{row['method']}/eps{row['eps']}/r{row['r']}"
         us = row["time_s"] * 1e6
@@ -136,4 +213,11 @@ def main(n: int = 2000, quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--geometry", action="store_true",
+                    help="run the geometry-family axis (gaussian / arccos "
+                         "/ nystrom / grid) instead of the RF/Nys/Sin grid")
+    ap.add_argument("--n", type=int, default=2000)
+    args = ap.parse_args()
+    main(n=args.n, quick=args.quick, geometry=args.geometry)

@@ -81,6 +81,15 @@ def main() -> None:
         print("\n".join(l for l in buf.getvalue().splitlines()
                         if not l.startswith("name,")))
 
+    section("geometry families (Geometry protocol, tradeoff --geometry)")
+    from . import bench_tradeoff as bt
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        bt.main(n=512 if args.quick else 1024, quick=args.quick,
+                geometry=True)
+    print("\n".join(l for l in buf.getvalue().splitlines()
+                    if not l.startswith("name,")))
+
     section("batched engine vs per-problem loop (api.BatchedSinkhorn)")
     from . import bench_batch
     buf = io.StringIO()

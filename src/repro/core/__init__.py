@@ -1,16 +1,23 @@
 """Core of the reproduction: linear-time Sinkhorn with positive features.
 
 Public API:
+  geometry    — the kernel-operator protocol: DenseCost / FactoredPositive /
+                GaussianPointCloud / ArcCosinePointCloud / NystromLowRank /
+                GridSeparable (one class per cost family)
   api         — unified front-end: solve()/solve_many()/BatchedSinkhorn/EpsSchedule
   features    — Lemma-1 Gaussian / Lemma-3 arc-cosine / learnable feature maps
-  sinkhorn    — factored + quadratic + log-domain solvers (Alg. 1)
-  grad        — envelope-theorem custom VJPs (Prop. 3.2)
-  divergence  — Sinkhorn divergence (Eq. 2)
-  nystrom     — the paper's Nys baseline
+  sinkhorn    — operator-generic solvers (Alg. 1) over any Geometry
+  grad        — envelope-theorem custom VJPs (Prop. 3.2), incl. the generic
+                rot_geometry rule that differentiates through any geometry
+  divergence  — Sinkhorn divergence (Eq. 2) on any Geometry
+  nystrom     — the paper's Nys baseline (NystromLowRank wrapper)
   sharded     — shard_map distributed solver (r-vector psum per iteration)
   routing     — Sinkhorn-balanced MoE routing
 """
-from .accelerated import accelerated_sinkhorn_log_factored
+from .accelerated import (
+    accelerated_sinkhorn_geometry,
+    accelerated_sinkhorn_log_factored,
+)
 from .api import (
     BatchedSinkhorn,
     EpsSchedule,
@@ -19,7 +26,11 @@ from .api import (
     solve_annealed,
     solve_many,
 )
-from .barycenter import BarycenterResult, barycenter_log_factored
+from .barycenter import (
+    BarycenterResult,
+    barycenter_geometry,
+    barycenter_log_factored,
+)
 from .features import (
     ArcCosineFeatureMap,
     GaussianFeatureMap,
@@ -29,20 +40,40 @@ from .features import (
     gaussian_q,
     lambert_w0,
 )
-from .geometry import data_radius, gibbs_kernel, squared_euclidean
+from .geometry import (
+    ArcCosinePointCloud,
+    DenseCost,
+    FactoredPositive,
+    GaussianPointCloud,
+    Geometry,
+    GridSeparable,
+    NystromLowRank,
+    as_geometry,
+    data_radius,
+    gibbs_kernel,
+    squared_euclidean,
+)
 from .grad import (
     rot_factored,
     rot_factored_batched,
+    rot_geometry,
     rot_log_factored,
     rot_log_factored_batched,
 )
 from .nystrom import nystrom_factors, sinkhorn_nystrom
 from .routing import sinkhorn_route
-from .sharded import make_sharded_sinkhorn, sharded_sinkhorn_factored
+from .sharded import (
+    RowShardedFactored,
+    make_sharded_sinkhorn,
+    sharded_sinkhorn_factored,
+    sharded_sinkhorn_geometry,
+)
 from .sinkhorn import (
     SinkhornResult,
     sinkhorn_factored,
+    sinkhorn_geometry,
     sinkhorn_log_factored,
+    sinkhorn_log_geometry,
     sinkhorn_log_quadratic,
     sinkhorn_operator,
     sinkhorn_quadratic,
@@ -52,22 +83,31 @@ from .divergence import (
     sinkhorn_divergence_features_batched,
     sinkhorn_divergence_gaussian,
     sinkhorn_divergence_gaussian_batched,
+    sinkhorn_divergence_geometry,
 )
 
 __all__ = [
     "ArcCosineFeatureMap",
+    "ArcCosinePointCloud",
     "BarycenterResult",
     "BatchedSinkhorn",
+    "DenseCost",
     "EpsSchedule",
-    "OTProblem",
-    "accelerated_sinkhorn_log_factored",
-    "barycenter_log_factored",
+    "FactoredPositive",
     "GaussianFeatureMap",
+    "GaussianPointCloud",
+    "Geometry",
+    "GridSeparable",
+    "NystromLowRank",
+    "OTProblem",
+    "RowShardedFactored",
     "SinkhornResult",
-    "solve",
-    "solve_annealed",
-    "solve_many",
+    "accelerated_sinkhorn_geometry",
+    "accelerated_sinkhorn_log_factored",
     "arccos_features",
+    "as_geometry",
+    "barycenter_geometry",
+    "barycenter_log_factored",
     "data_radius",
     "gaussian_features",
     "gaussian_log_features",
@@ -78,19 +118,27 @@ __all__ = [
     "nystrom_factors",
     "rot_factored",
     "rot_factored_batched",
+    "rot_geometry",
     "rot_log_factored",
     "rot_log_factored_batched",
     "sharded_sinkhorn_factored",
+    "sharded_sinkhorn_geometry",
     "sinkhorn_divergence_features",
     "sinkhorn_divergence_features_batched",
     "sinkhorn_divergence_gaussian",
     "sinkhorn_divergence_gaussian_batched",
+    "sinkhorn_divergence_geometry",
     "sinkhorn_factored",
+    "sinkhorn_geometry",
     "sinkhorn_log_factored",
+    "sinkhorn_log_geometry",
     "sinkhorn_log_quadratic",
     "sinkhorn_nystrom",
     "sinkhorn_operator",
     "sinkhorn_quadratic",
     "sinkhorn_route",
+    "solve",
+    "solve_annealed",
+    "solve_many",
     "squared_euclidean",
 ]

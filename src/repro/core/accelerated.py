@@ -25,13 +25,16 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from .geometry import FactoredPositive, Geometry
 from .sinkhorn import (
     SinkhornResult,
-    factored_log_matvecs,
     masked_dual_value,
 )
 
-__all__ = ["accelerated_sinkhorn_log_factored"]
+__all__ = [
+    "accelerated_sinkhorn_geometry",
+    "accelerated_sinkhorn_log_factored",
+]
 
 
 def _lse(x, axis):
@@ -50,12 +53,33 @@ def accelerated_sinkhorn_log_factored(
     f_init: Optional[jax.Array] = None,
     g_init: Optional[jax.Array] = None,
 ) -> SinkhornResult:
+    """AGM on an explicit positive-feature factorization (thin wrapper
+    over :func:`accelerated_sinkhorn_geometry`)."""
+    return accelerated_sinkhorn_geometry(
+        FactoredPositive(log_xi=log_xi, log_zeta=log_zeta, eps=eps),
+        a, b, tol=tol, max_iter=max_iter, f_init=f_init, g_init=g_init,
+    )
+
+
+def accelerated_sinkhorn_geometry(
+    geom: Geometry,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 2000,
+    f_init: Optional[jax.Array] = None,
+    g_init: Optional[jax.Array] = None,
+) -> SinkhornResult:
+    """Accelerated alternating minimization on any log-capable Geometry."""
+    eps = geom.eps
     n, m = a.shape[0], b.shape[0]
     dtype = a.dtype
     loga, logb = jnp.log(a), jnp.log(b)
 
-    # the same exact two-stage-LSE operators every log-domain solver uses
-    log_K, log_K_T = factored_log_matvecs(log_xi, log_zeta, eps=eps)
+    # the same exact log-operators every log-domain solver uses, supplied
+    # hoisted by the geometry (factored LSE, grid log-convolution, dense)
+    log_K, log_K_T = geom.log_operators()
 
     def neg_F(f, g):
         # -F: convex objective to MINIMIZE; log-partition form

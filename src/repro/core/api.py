@@ -1,8 +1,9 @@
 """Unified solver front-end: ``solve`` / ``BatchedSinkhorn`` / ``EpsSchedule``.
 
 Every solver variant in the repo (scaling-space factored, log-domain
-factored, accelerated AGM, dense quadratic baselines, shard_map
-distributed) is reachable through ONE entry point:
+factored, accelerated AGM, dense quadratic baselines, signed Nystrom,
+arc-cosine, separable-grid, shard_map distributed) is reachable through ONE
+entry point:
 
     problem = OTProblem.from_point_clouds(x, y, anchors, eps=0.05)
     res = solve(problem, method="log_factored",
@@ -17,21 +18,29 @@ go through the vmapped engine:
 
 Design notes
 ------------
+* **The Geometry protocol carries the kernel.** An :class:`OTProblem` is a
+  thin ``(geometry, a, b)`` record; the geometry (``repro.core.geometry``)
+  owns the kernel representation — features, log-features, dense cost,
+  point clouds + anchors, Nystrom factors, or grid axes — and exposes the
+  operators every solver consumes. There is no representation branching
+  here: a ``method`` picks an *algorithm* (scaling-space, log-domain,
+  accelerated, densified baseline, sharded) from a dispatch table, and
+  every kernel application inside it routes through the geometry.
 * **One kernel, many algorithms.** For a problem built from (log-)features
   the quadratic methods run on the *induced* cost ``C = -eps log(Xi Zeta^T)``
-  so all methods share one fixed point and agree to solver tolerance (the
-  oracle-consistency contract tested in ``tests/test_api.py``). Problems
-  built from point clouds use the true squared-Euclidean cost for the
-  quadratic methods — the paper's ``Sin`` baseline — so there the factored
-  methods differ by the feature-approximation error (Theorem 3.1).
+  (``geometry.cost_matrix()``) so all methods share one fixed point and
+  agree to solver tolerance (the oracle-consistency contract tested in
+  ``tests/test_api.py``). Problems built from point clouds use the true
+  squared-Euclidean cost for the quadratic methods — the paper's ``Sin``
+  baseline — so there the factored methods differ by the
+  feature-approximation error (Theorem 3.1).
 * **Annealing** (``EpsSchedule``) runs a geometric cascade
-  ``eps_0 > eps_0*decay > ... > eps`` re-deriving the stage kernel from the
-  problem's geometry (or dense cost) and warm-starting the potentials
-  (f, g) — equivalently ``u = e^{f/eps}`` — between stages. At small eps
-  this cuts total iterations by a large factor versus a cold start
-  (property-tested in ``tests/test_schedule.py``). Feature-only problems
-  cannot be annealed: their kernel is pinned to the eps the features were
-  drawn at.
+  ``eps_0 > eps_0*decay > ... > eps`` re-deriving each stage's kernel via
+  ``geometry.rebuild_at(eps_k)`` and warm-starting the potentials (f, g) —
+  equivalently ``u = e^{f/eps}`` — between stages. At small eps this cuts
+  total iterations by a large factor versus a cold start (property-tested
+  in ``tests/test_schedule.py``). Families whose kernel is pinned to one
+  eps (explicit features, arc-cosine, Nystrom) cannot be annealed.
 * **Batching** pads each problem's supports up to the power-of-two buckets
   in ``configs/shapes.py`` (``ot_bucket``) with ZERO-weight atoms — exact,
   not approximate, because every solver masks zero weights (see
@@ -51,15 +60,21 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.shapes import OTBatchShape, ot_bucket
-from .accelerated import accelerated_sinkhorn_log_factored
-from .features import gaussian_log_features, gaussian_q
-from .geometry import data_radius, squared_euclidean
+from .accelerated import accelerated_sinkhorn_geometry
+from .geometry import (
+    ArcCosinePointCloud,
+    DenseCost,
+    FactoredPositive,
+    GaussianPointCloud,
+    Geometry,
+    GridSeparable,
+    NystromLowRank,
+    data_radius,
+)
 from .sinkhorn import (
     SinkhornResult,
-    sinkhorn_factored,
-    sinkhorn_log_factored,
-    sinkhorn_log_quadratic,
-    sinkhorn_quadratic,
+    sinkhorn_geometry,
+    sinkhorn_log_geometry,
 )
 
 __all__ = [
@@ -80,122 +95,124 @@ METHODS = (
     "accelerated",
     "quadratic",
     "log_quadratic",
+    "arccos",
+    "nystrom",
     "sharded",
 )
 
 
 # ---------------------------------------------------------------------------
-# Problem specification
+# Problem specification: a thin (geometry, a, b) record
 # ---------------------------------------------------------------------------
+
+
+def _uniform(n: int, dtype) -> jax.Array:
+    return jnp.full((n,), 1.0 / n, dtype)
 
 
 @dataclasses.dataclass(frozen=True)
 class OTProblem:
-    """One entropic OT problem. Built from exactly one kernel source:
-    positive features, log-features, a dense cost matrix, or raw point
-    clouds + Gaussian anchors (the only form that supports eps-annealing
-    and learnable-anchor gradients)."""
+    """One entropic OT problem: a Geometry (the kernel) plus marginals.
 
+    The geometry owns the kernel representation; ``a``/``b`` are the
+    measure weights (zeros allowed — zero-weight atoms are masked exactly
+    by every solver, which is what makes bucket padding exact). The
+    ``from_*`` constructors below are kept as the stable public surface;
+    the kernel-view accessors (``features_at`` etc.) are deprecated shims
+    over the geometry and will go once external callers migrate.
+    """
+
+    geometry: Geometry
     a: jax.Array                       # (n,) weights, sum 1 (zeros allowed)
     b: jax.Array                       # (m,)
-    eps: float
-    xi: Optional[jax.Array] = None         # (n, r) positive features
-    zeta: Optional[jax.Array] = None       # (m, r)
-    log_xi: Optional[jax.Array] = None     # (n, r) log-features
-    log_zeta: Optional[jax.Array] = None   # (m, r)
-    C: Optional[jax.Array] = None          # (n, m) dense cost
-    x: Optional[jax.Array] = None          # (n, d) support of mu
-    y: Optional[jax.Array] = None          # (m, d) support of nu
-    anchors: Optional[jax.Array] = None    # (r, d) Lemma-1 anchors
-    R: Optional[float] = None              # data radius bound (geometry mode)
+
+    def __post_init__(self):
+        if not isinstance(self.geometry, Geometry):
+            raise TypeError(
+                "OTProblem.geometry must be a Geometry; build one via the "
+                "from_* constructors or repro.core.geometry"
+            )
+
+    @property
+    def eps(self) -> float:
+        return self.geometry.eps
 
     # -- constructors -------------------------------------------------------
 
-    @staticmethod
-    def _uniform(n: int, dtype) -> jax.Array:
-        return jnp.full((n,), 1.0 / n, dtype)
+    @classmethod
+    def from_geometry(cls, geometry: Geometry, a=None, b=None) -> "OTProblem":
+        n, m = geometry.shape
+        a = _uniform(n, jnp.float32) if a is None else a
+        b = _uniform(m, jnp.float32) if b is None else b
+        return cls(geometry=geometry, a=a, b=b)
 
     @classmethod
     def from_features(cls, xi, zeta, a=None, b=None, *, eps: float) -> "OTProblem":
-        a = cls._uniform(xi.shape[0], xi.dtype) if a is None else a
-        b = cls._uniform(zeta.shape[0], zeta.dtype) if b is None else b
-        return cls(a=a, b=b, eps=eps, xi=xi, zeta=zeta)
+        return cls.from_geometry(
+            FactoredPositive(xi=xi, zeta=zeta, eps=eps),
+            _uniform(xi.shape[0], xi.dtype) if a is None else a,
+            _uniform(zeta.shape[0], zeta.dtype) if b is None else b,
+        )
 
     @classmethod
     def from_log_features(cls, log_xi, log_zeta, a=None, b=None, *,
                           eps: float) -> "OTProblem":
-        a = cls._uniform(log_xi.shape[0], log_xi.dtype) if a is None else a
-        b = cls._uniform(log_zeta.shape[0], log_zeta.dtype) if b is None else b
-        return cls(a=a, b=b, eps=eps, log_xi=log_xi, log_zeta=log_zeta)
+        return cls.from_geometry(
+            FactoredPositive(log_xi=log_xi, log_zeta=log_zeta, eps=eps),
+            _uniform(log_xi.shape[0], log_xi.dtype) if a is None else a,
+            _uniform(log_zeta.shape[0], log_zeta.dtype) if b is None else b,
+        )
 
     @classmethod
     def from_cost(cls, C, a=None, b=None, *, eps: float) -> "OTProblem":
-        a = cls._uniform(C.shape[0], C.dtype) if a is None else a
-        b = cls._uniform(C.shape[1], C.dtype) if b is None else b
-        return cls(a=a, b=b, eps=eps, C=C)
+        return cls.from_geometry(
+            DenseCost(C, eps),
+            _uniform(C.shape[0], C.dtype) if a is None else a,
+            _uniform(C.shape[1], C.dtype) if b is None else b,
+        )
 
     @classmethod
     def from_point_clouds(cls, x, y, anchors, a=None, b=None, *, eps: float,
                           R: Optional[float] = None) -> "OTProblem":
-        a = cls._uniform(x.shape[0], x.dtype) if a is None else a
-        b = cls._uniform(y.shape[0], y.dtype) if b is None else b
-        R = float(data_radius(x, y)) if R is None else R
-        return cls(a=a, b=b, eps=eps, x=x, y=y, anchors=anchors, R=R)
+        return cls.from_geometry(
+            GaussianPointCloud.build(x, y, anchors, eps=eps, R=R),
+            _uniform(x.shape[0], x.dtype) if a is None else a,
+            _uniform(y.shape[0], y.dtype) if b is None else b,
+        )
 
-    # -- kernel views -------------------------------------------------------
+    @classmethod
+    def from_grid(cls, axes_x, axes_y=None, a=None, b=None, *,
+                  eps: float) -> "OTProblem":
+        """Separable-grid problem (images / histograms): measures live on
+        the cartesian product of the axis coordinates, weights in C order
+        (``image.reshape(-1)``)."""
+        return cls.from_geometry(
+            GridSeparable.build(axes_x, axes_y, eps=eps), a, b
+        )
+
+    # -- deprecated kernel-view shims (pre-Geometry API) --------------------
 
     @property
     def has_geometry(self) -> bool:
-        return self.x is not None
+        """Deprecated: use ``isinstance(problem.geometry, ...)``."""
+        return isinstance(self.geometry,
+                          (GaussianPointCloud, ArcCosinePointCloud))
 
     @property
     def anneal_capable(self) -> bool:
-        """Annealing needs the kernel re-derivable at arbitrary eps."""
-        return self.has_geometry or self.C is not None
+        return self.geometry.anneal_capable
 
     def log_features_at(self, eps: float) -> Tuple[jax.Array, jax.Array]:
-        """(log_xi, log_zeta) for the Gibbs kernel at ``eps``."""
-        if self.has_geometry:
-            q = gaussian_q(self.R, eps, self.x.shape[-1])
-            lxi = gaussian_log_features(self.x, self.anchors, eps=eps, q=q)
-            lzt = gaussian_log_features(self.y, self.anchors, eps=eps, q=q)
-            return lxi, lzt
-        if self.log_xi is None and self.xi is None:
-            raise ValueError("no factored kernel available (dense-cost "
-                             "problem); use a quadratic method")
-        if eps != self.eps:
-            raise ValueError(
-                "feature-built problems pin the kernel to their native eps "
-                f"({self.eps}); got {eps}. Build the problem with "
-                "from_point_clouds to enable eps-annealing."
-            )
-        if self.log_xi is not None:
-            return self.log_xi, self.log_zeta
-        return jnp.log(self.xi), jnp.log(self.zeta)
+        """Deprecated: ``geometry.rebuild_at(eps).log_features()``."""
+        return self.geometry.rebuild_at(eps).log_features()
 
     def features_at(self, eps: float) -> Tuple[jax.Array, jax.Array]:
-        if self.xi is not None and eps == self.eps:
-            return self.xi, self.zeta
-        lxi, lzt = self.log_features_at(eps)
-        return jnp.exp(lxi), jnp.exp(lzt)
+        """Deprecated: ``geometry.rebuild_at(eps).features()``."""
+        return self.geometry.rebuild_at(eps).features()
 
     def cost_matrix(self) -> jax.Array:
-        """Dense cost for the quadratic baselines. True cost in geometry
-        mode (the paper's Sin baseline); the factored-kernel-induced cost
-        ``-eps log(Xi Zeta^T)`` in feature mode so all methods share one
-        fixed point."""
-        if self.C is not None:
-            return self.C
-        if self.has_geometry:
-            return squared_euclidean(self.x, self.y)
-        if self.xi is not None:
-            return -self.eps * jnp.log(self.xi @ self.zeta.T)
-        # max-shifted product keeps peak memory at O(nm) instead of the
-        # O(nmr) broadcast a direct pairwise LSE would allocate
-        m1 = jnp.max(self.log_xi, axis=1, keepdims=True)      # (n, 1)
-        m2 = jnp.max(self.log_zeta, axis=1, keepdims=True)    # (m, 1)
-        K = jnp.exp(self.log_xi - m1) @ jnp.exp(self.log_zeta - m2).T
-        return -self.eps * (jnp.log(K) + m1 + m2.T)
+        """Deprecated: ``geometry.cost_matrix()``."""
+        return self.geometry.cost_matrix()
 
 
 # ---------------------------------------------------------------------------
@@ -269,16 +286,137 @@ class AnnealedResult(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# Dispatch
+# Dispatch: method -> (geometry coercion, solver runner)
 # ---------------------------------------------------------------------------
+#
+# A method names an ALGORITHM; the geometry supplies the kernel operators.
+# Coercers turn the problem's geometry into the one the algorithm runs on
+# (identity for native methods, densification for the quadratic baselines,
+# cost-family conversion for arccos / nystrom); runners call the matching
+# operator-generic solver. No kernel application happens outside a Geometry.
+
+
+def _run_scaling(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
+                 mesh, mesh_axis):
+    u_init = None if f_init is None else jnp.exp(f_init / geom.eps)
+    return sinkhorn_geometry(
+        geom, a, b, tol=tol, max_iter=max_iter, momentum=momentum,
+        u_init=u_init,
+    )
+
+
+def _run_log(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
+             mesh, mesh_axis):
+    return sinkhorn_log_geometry(
+        geom, a, b, tol=tol, max_iter=max_iter, f_init=f_init, g_init=g_init,
+    )
+
+
+def _run_accelerated(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
+                     mesh, mesh_axis):
+    return accelerated_sinkhorn_geometry(
+        geom, a, b, tol=tol, max_iter=max_iter, f_init=f_init, g_init=g_init,
+    )
+
+
+def _run_sharded(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
+                 mesh, mesh_axis):
+    from .sharded import sharded_sinkhorn_geometry
+
+    if mesh is None:
+        raise ValueError("method='sharded' requires a mesh=...")
+    return sharded_sinkhorn_geometry(
+        mesh, geom, a, b, axis=mesh_axis, tol=tol, max_iter=max_iter,
+    )
+
+
+def _coerce_native_factored(geom, eps, *, rank, key):
+    if isinstance(geom, DenseCost):
+        raise ValueError(
+            "no factored kernel available (dense-cost problem); use a "
+            "quadratic method or build the problem from point clouds"
+        )
+    return geom
+
+
+def _coerce_identity(geom, eps, *, rank, key):
+    return geom
+
+
+def _coerce_densify(geom, eps, *, rank, key):
+    if isinstance(geom, DenseCost):
+        return geom
+    return DenseCost(geom.cost_matrix(), eps)
+
+
+def _coerce_arccos(geom, eps, *, rank, key):
+    if isinstance(geom, ArcCosinePointCloud):
+        return geom
+    if isinstance(geom, GaussianPointCloud):
+        # swap the cost family on the same supports: fresh arc-cosine
+        # anchors (u ~ N(0, sigma^2 I)), rank defaulting to the problem's
+        # existing anchor count
+        from .features import ArcCosineFeatureMap
+
+        r = geom.anchors.shape[0] if rank is None else rank
+        fm = ArcCosineFeatureMap(r=r, d=geom.x.shape[-1])
+        anchors = fm.init(jax.random.PRNGKey(0) if key is None else key)
+        return ArcCosinePointCloud(
+            geom.x, geom.y, anchors, eps=eps, s=fm.s, sigma=fm.sigma,
+            kappa=fm.kappa,
+        )
+    raise ValueError(
+        "method='arccos' needs point-cloud supports (an ArcCosinePointCloud "
+        f"or GaussianPointCloud geometry); got {type(geom).__name__}"
+    )
+
+
+def _coerce_nystrom(geom, eps, *, rank, key):
+    if isinstance(geom, NystromLowRank):
+        return geom
+    if isinstance(geom, (GaussianPointCloud, ArcCosinePointCloud)):
+        r = geom.anchors.shape[0] if rank is None else rank
+        return NystromLowRank.from_point_clouds(
+            geom.x, geom.y, eps=eps, rank=r,
+            key=jax.random.PRNGKey(0) if key is None else key,
+        )
+    raise ValueError(
+        "method='nystrom' needs point-cloud supports (a NystromLowRank or "
+        f"point-cloud geometry); got {type(geom).__name__}"
+    )
+
+
+# method -> (coerce geometry, runner). The only dispatch table in the file.
+_SOLVERS: Dict[str, Tuple[Callable, Callable]] = {
+    "factored": (_coerce_native_factored, _run_scaling),
+    "log_factored": (_coerce_native_factored, _run_log),
+    "accelerated": (_coerce_native_factored, _run_accelerated),
+    "quadratic": (_coerce_densify, _run_scaling),
+    "log_quadratic": (_coerce_densify, _run_log),
+    "arccos": (_coerce_arccos, _run_log),
+    "nystrom": (_coerce_nystrom, _run_scaling),
+    "sharded": (_coerce_native_factored, _run_sharded),
+}
+
+# auto-dispatch table: first matching geometry type wins; factored
+# geometries carrying linear-space features prefer the scaling solver.
+_AUTO_METHODS: Tuple[Tuple[type, str], ...] = (
+    (NystromLowRank, "nystrom"),
+    (ArcCosinePointCloud, "arccos"),
+    (DenseCost, "log_quadratic"),
+    (GridSeparable, "log_factored"),
+    (GaussianPointCloud, "log_factored"),
+)
 
 
 def _auto_method(problem: OTProblem) -> str:
-    if problem.has_geometry or problem.log_xi is not None:
-        return "log_factored"
-    if problem.xi is not None:
+    g = problem.geometry
+    for typ, meth in _AUTO_METHODS:
+        if isinstance(g, typ):
+            return meth
+    if isinstance(g, FactoredPositive) and g.xi is not None:
         return "factored"
-    return "log_quadratic"
+    return "log_factored"
 
 
 def _solve_stage(
@@ -293,50 +431,19 @@ def _solve_stage(
     g_init: Optional[jax.Array],
     mesh=None,
     mesh_axis: str = "data",
+    rank: Optional[int] = None,
+    key: Optional[jax.Array] = None,
 ) -> SinkhornResult:
     """One solve at a fixed eps with optional warm-started potentials."""
-    if method == "factored":
-        xi, zeta = problem.features_at(eps)
-        u_init = None if f_init is None else jnp.exp(f_init / eps)
-        return sinkhorn_factored(
-            xi, zeta, problem.a, problem.b, eps=eps, tol=tol,
-            max_iter=max_iter, momentum=momentum, u_init=u_init,
-        )
-    if method == "log_factored":
-        lxi, lzt = problem.log_features_at(eps)
-        return sinkhorn_log_factored(
-            lxi, lzt, problem.a, problem.b, eps=eps, tol=tol,
-            max_iter=max_iter, f_init=f_init, g_init=g_init,
-        )
-    if method == "accelerated":
-        lxi, lzt = problem.log_features_at(eps)
-        return accelerated_sinkhorn_log_factored(
-            lxi, lzt, problem.a, problem.b, eps=eps, tol=tol,
-            max_iter=max_iter, f_init=f_init, g_init=g_init,
-        )
-    if method == "quadratic":
-        K = jnp.exp(-problem.cost_matrix() / eps)
-        u_init = None if f_init is None else jnp.exp(f_init / eps)
-        return sinkhorn_quadratic(
-            K, problem.a, problem.b, eps=eps, tol=tol, max_iter=max_iter,
-            momentum=momentum, u_init=u_init,
-        )
-    if method == "log_quadratic":
-        return sinkhorn_log_quadratic(
-            problem.cost_matrix(), problem.a, problem.b, eps=eps, tol=tol,
-            max_iter=max_iter, f_init=f_init, g_init=g_init,
-        )
-    if method == "sharded":
-        from .sharded import sharded_sinkhorn_factored
-
-        if mesh is None:
-            raise ValueError("method='sharded' requires a mesh=...")
-        xi, zeta = problem.features_at(eps)
-        return sharded_sinkhorn_factored(
-            mesh, xi, zeta, problem.a, problem.b, eps=eps, axis=mesh_axis,
-            tol=tol, max_iter=max_iter,
-        )
-    raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    if method not in _SOLVERS:
+        raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    coerce, run = _SOLVERS[method]
+    geom = coerce(problem.geometry.rebuild_at(eps), eps, rank=rank, key=key)
+    return run(
+        geom, problem.a, problem.b, tol=tol, max_iter=max_iter,
+        momentum=momentum, f_init=f_init, g_init=g_init, mesh=mesh,
+        mesh_axis=mesh_axis,
+    )
 
 
 def solve_annealed(
@@ -349,33 +456,31 @@ def solve_annealed(
     momentum: float = 1.0,
     mesh=None,
     mesh_axis: str = "data",
+    rank: Optional[int] = None,
+    key: Optional[jax.Array] = None,
 ) -> AnnealedResult:
     """Annealed solve with per-stage diagnostics.
 
-    Each stage solves at eps_k re-deriving the kernel from geometry / dense
-    cost, then hands its potentials (f, g) to the next stage as warm start.
-    The returned ``result.n_iter`` is the TOTAL across stages so it compares
-    directly against a cold-start solve's iteration count.
+    Each stage solves at eps_k re-deriving the kernel via
+    ``geometry.rebuild_at``, then hands its potentials (f, g) to the next
+    stage as warm start. The returned ``result.n_iter`` is the TOTAL across
+    stages so it compares directly against a cold-start solve's iteration
+    count.
     """
     if method == "auto":
         method = _auto_method(problem)
-    if not problem.anneal_capable:
+    if not problem.geometry.anneal_capable:
         raise ValueError(
-            "eps-annealing needs a geometry- or cost-built problem; "
-            "feature-built problems pin the kernel to one eps"
+            "eps-annealing needs a geometry whose kernel is re-derivable at "
+            f"any eps; {type(problem.geometry).__name__} pins the kernel to "
+            "one eps. Build the problem from point clouds, a dense cost, or "
+            "grid axes to enable annealing."
         )
     if method == "sharded":
         raise ValueError(
             "method='sharded' does not compose with an EpsSchedule: the "
             "shard_map solver has no warm-start inputs, so every stage "
             "would cold-start. Solve sharded without a schedule instead."
-        )
-    if method in ("factored", "log_factored", "accelerated") \
-            and not problem.has_geometry and problem.C is not None:
-        raise ValueError(
-            f"method={method!r} needs a factored kernel, but this problem "
-            "only carries a dense cost matrix; use a quadratic method or "
-            "build the problem with from_point_clouds"
         )
     # NOTE: the stage loop below (ladder tols, prev_err cap, warm-started
     # f/g, total-iteration accumulation) has a vmap-compatible twin in
@@ -396,7 +501,7 @@ def solve_annealed(
             tol=tol_k,
             max_iter=max_iter if last else schedule.stage_iters,
             momentum=momentum, f_init=f, g_init=g,
-            mesh=mesh, mesh_axis=mesh_axis,
+            mesh=mesh, mesh_axis=mesh_axis, rank=rank, key=key,
         )
         prev_err = res.marginal_err
         f, g = res.f, res.g
@@ -419,13 +524,22 @@ def solve(
     momentum: float = 1.0,
     mesh=None,
     mesh_axis: str = "data",
+    rank: Optional[int] = None,
+    key: Optional[jax.Array] = None,
 ) -> SinkhornResult:
     """Solve one entropic OT problem with any solver variant in the repo.
 
     ``method``: "auto" | "factored" | "log_factored" | "accelerated" |
-    "quadratic" | "log_quadratic" | "sharded" (needs ``mesh``).
+    "quadratic" | "log_quadratic" | "arccos" | "nystrom" | "sharded"
+    (needs ``mesh``). "auto" dispatches on the problem's geometry type.
     ``schedule``: optional :class:`EpsSchedule` eps-annealing cascade
-    (geometry- or cost-built problems only).
+    (anneal-capable geometries only).
+    ``rank``/``key``: optional knobs for the cost-family converting
+    methods — "arccos" draws ``rank`` fresh arc-cosine anchors with
+    ``key``; "nystrom" samples ``rank`` landmarks with ``key``. A
+    Nystrom run that blows up at small eps reports
+    ``result.diverged == True`` (the paper's Fig. 1/3/5 failure mode)
+    instead of handing back unexplained NaNs.
     """
     if method == "auto":
         method = _auto_method(problem)
@@ -433,12 +547,12 @@ def solve(
         return solve_annealed(
             problem, method=method, schedule=schedule, tol=tol,
             max_iter=max_iter, momentum=momentum, mesh=mesh,
-            mesh_axis=mesh_axis,
+            mesh_axis=mesh_axis, rank=rank, key=key,
         ).result
     return _solve_stage(
         problem, method, problem.eps, tol=tol, max_iter=max_iter,
         momentum=momentum, f_init=None, g_init=None, mesh=mesh,
-        mesh_axis=mesh_axis,
+        mesh_axis=mesh_axis, rank=rank, key=key,
     )
 
 
@@ -460,6 +574,28 @@ def _pad_rows(arr: jax.Array, n_pad: int, *, replicate: bool) -> jax.Array:
     return jnp.concatenate([arr, fill], axis=0)
 
 
+# Batched-engine dispatch: method -> (stacked kernel data -> Geometry).
+# ka/kb are one problem's slices of the stacked arrays; the builders run
+# INSIDE the vmapped solver body, so every kernel application in the
+# batched hot loop routes through the same Geometry operators as the
+# single-problem path.
+_ENGINE_GEOMETRIES: Dict[str, Callable[..., Geometry]] = {
+    "factored": lambda ka, kb, eps: FactoredPositive(xi=ka, zeta=kb, eps=eps),
+    "log_factored": lambda ka, kb, eps: FactoredPositive(
+        log_xi=ka, log_zeta=kb, eps=eps),
+    "accelerated": lambda ka, kb, eps: FactoredPositive(
+        log_xi=ka, log_zeta=kb, eps=eps),
+    "quadratic": lambda ka, kb, eps: DenseCost(ka, eps),
+    "log_quadratic": lambda ka, kb, eps: DenseCost(ka, eps),
+}
+
+# runners are shared with the single-problem path: same method, same
+# algorithm, whether vmapped or not
+_ENGINE_RUNNERS: Dict[str, Callable] = {
+    m: _SOLVERS[m][1] for m in _ENGINE_GEOMETRIES
+}
+
+
 class BatchedSinkhorn:
     """vmapped solver engine for batches of independent OT problems.
 
@@ -472,7 +608,9 @@ class BatchedSinkhorn:
 
     Stacked entry points (``solve_stacked``, ``solve_point_clouds``) take
     already-uniform (B, ...) arrays; ``solve_many`` handles ragged problem
-    lists via bucketing.
+    lists via bucketing. Each per-problem solve constructs its Geometry
+    from the stacked slices inside the vmapped body, so the batched path
+    shares the operator implementations with everything else.
     """
 
     _FACTORED = ("factored", "log_factored", "accelerated")
@@ -505,40 +643,26 @@ class BatchedSinkhorn:
                 "batched annealing runs in log domain (small-eps stages); "
                 f"use method='log_factored' or 'accelerated', got {method!r}"
             )
-        self._vsolve_features = jax.jit(jax.vmap(self._solve_one_features))
+        self._build_geometry = _ENGINE_GEOMETRIES[method]
+        self._runner = _ENGINE_RUNNERS[method]
+        self._vsolve_features = jax.jit(jax.vmap(self._solve_one))
         self._vsolve_clouds_cache: Dict[Tuple[int, float], Callable] = {}
 
     # -- single-problem bodies (vmapped) ------------------------------------
 
-    def _solve_one_features(self, ka, kb, a, b) -> SinkhornResult:
+    def _solve_one(self, ka, kb, a, b) -> SinkhornResult:
         """ka/kb: (log-)features (n, r)/(m, r) — or (C, unused) dense."""
-        if self.method == "factored":
-            return sinkhorn_factored(
-                ka, kb, a, b, eps=self.eps, tol=self.tol,
-                max_iter=self.max_iter, momentum=self.momentum,
-            )
-        if self.method == "log_factored":
-            return sinkhorn_log_factored(
-                ka, kb, a, b, eps=self.eps, tol=self.tol,
-                max_iter=self.max_iter,
-            )
-        if self.method == "accelerated":
-            return accelerated_sinkhorn_log_factored(
-                ka, kb, a, b, eps=self.eps, tol=self.tol,
-                max_iter=self.max_iter,
-            )
-        if self.method == "quadratic":
-            return sinkhorn_quadratic(
-                jnp.exp(-ka / self.eps), a, b, eps=self.eps, tol=self.tol,
-                max_iter=self.max_iter, momentum=self.momentum,
-            )
-        return sinkhorn_log_quadratic(
-            ka, a, b, eps=self.eps, tol=self.tol, max_iter=self.max_iter,
+        geom = self._build_geometry(ka, kb, self.eps)
+        return self._runner(
+            geom, a, b, tol=self.tol, max_iter=self.max_iter,
+            momentum=self.momentum, f_init=None, g_init=None,
+            mesh=None, mesh_axis="data",
         )
 
     def _make_cloud_solver(self, d: int, R: float):
-        """Geometry-mode body: features rebuilt per annealing stage.
-        ``anchors`` is a broadcast argument (shared across the batch).
+        """Geometry-mode body: the GaussianPointCloud is rebuilt per
+        annealing stage. ``anchors`` is a broadcast argument (shared
+        across the batch).
 
         NOTE: the stage loop is the vmap-compatible twin of the one in
         :func:`solve_annealed` (log-domain only, no per-stage diagnostics)
@@ -558,17 +682,13 @@ class BatchedSinkhorn:
                 last = k == len(stages) - 1
                 tol_k = (tols[k] if prev_err is None
                          else jnp.minimum(tols[k], prev_err))
-                q = gaussian_q(R, e, d)
-                lxi = gaussian_log_features(x, anchors, eps=e, q=q)
-                lzt = gaussian_log_features(y, anchors, eps=e, q=q)
-                solver = (accelerated_sinkhorn_log_factored
-                          if self.method == "accelerated"
-                          else sinkhorn_log_factored)
-                res = solver(
-                    lxi, lzt, a, b, eps=e, tol=tol_k,
+                geom = GaussianPointCloud(x, y, anchors, eps=e, R=R)
+                res = self._runner(
+                    geom, a, b, tol=tol_k,
                     max_iter=(self.max_iter if last
                               else self.schedule.stage_iters),
-                    f_init=f, g_init=g,
+                    momentum=self.momentum, f_init=f, g_init=g,
+                    mesh=None, mesh_axis="data",
                 )
                 prev_err = res.marginal_err
                 f, g = res.f, res.g
@@ -687,11 +807,12 @@ class BatchedSinkhorn:
         return out
 
     def _kernel_data(self, p: OTProblem) -> Tuple[jax.Array, jax.Array]:
+        geom = p.geometry.rebuild_at(self.eps)
         if self.method == "factored":
-            return p.features_at(self.eps)
+            return geom.features()
         if self.method in ("log_factored", "accelerated"):
-            return p.log_features_at(self.eps)
-        C = p.cost_matrix()
+            return geom.log_features()
+        C = geom.cost_matrix()
         return C, C
 
 

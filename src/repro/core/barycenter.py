@@ -1,11 +1,14 @@
-"""Wasserstein barycenters through factored kernels (paper Fig. 6 / App C).
+"""Wasserstein barycenters through kernel geometries (paper Fig. 6 / App C).
 
 Iterative Bregman projections [Benamou et al. '15] where every kernel
-application is O(r n) via K = Xi Xi^T. The paper's positive-sphere
-demonstration uses the ultimate special case phi(x) = x (linear kernel,
-r = d); the general entry point accepts any positive feature matrix —
-including Lemma-1 Gaussian features — so barycenters inherit the paper's
-linear-time scaling. Log-domain throughout (stable at small eps).
+application routes through a symmetric :class:`~repro.core.geometry.Geometry`
+on the COMMON support — O(r n) for factored kernels, O(n^{1+1/d}) axis-wise
+convolutions for :class:`~repro.core.geometry.GridSeparable` (image
+barycenters). The paper's positive-sphere demonstration uses the ultimate
+special case phi(x) = x (linear kernel, r = d); the general entry point
+accepts any log-capable geometry — including Lemma-1 Gaussian features — so
+barycenters inherit the paper's linear-time scaling. Log-domain throughout
+(stable at small eps).
 """
 from __future__ import annotations
 
@@ -14,7 +17,13 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["BarycenterResult", "barycenter_log_factored"]
+from .geometry import FactoredPositive, Geometry
+
+__all__ = [
+    "BarycenterResult",
+    "barycenter_geometry",
+    "barycenter_log_factored",
+]
 
 
 def _lse(x, axis):
@@ -28,22 +37,40 @@ class BarycenterResult(NamedTuple):
     converged: jax.Array
 
 
-def barycenter_log_factored(
-    log_xi: jax.Array,       # (n, r) log-features of the COMMON support
+def barycenter_geometry(
+    geom: Geometry,          # symmetric geometry on the COMMON support
     hists: jax.Array,        # (k, n) input histograms on that support
     *,
-    eps: float,
     weights: Optional[jax.Array] = None,   # (k,) barycentric weights
     tol: float = 1e-7,
     max_iter: int = 500,
 ) -> BarycenterResult:
+    """Bregman-projection barycenter with geometry-supplied log-operators.
+
+    ``geom`` must be symmetric (n == m) and log-capable; each projection
+    applies K once per input histogram through ``geom.log_apply_k``.
+    """
+    n_g, m_g = geom.shape
+    if n_g != m_g:
+        raise ValueError(
+            f"barycenter needs a symmetric geometry on one common support; "
+            f"got shape {(n_g, m_g)}"
+        )
     k, n = hists.shape
+    if n != n_g:
+        raise ValueError(
+            f"histograms live on {n} atoms but the geometry has {n_g}"
+        )
+    eps = geom.eps
     lam = jnp.full((k,), 1.0 / k) if weights is None else weights
     log_hists = jnp.log(jnp.maximum(hists, 1e-38))
 
-    def log_K(s):            # log(K e^{s}) with K = Xi Xi^T, per problem
-        t = _lse(log_xi[None, :, :] + s[:, :, None], axis=1)   # (k, r)
-        return _lse(log_xi[None, :, :] + t[:, None, :], axis=2)
+    # log(K e^{s}) for the k stacked log-scalings; the geometry operator
+    # expects potentials (divided by eps internally), so feed eps * s.
+    # Hoisted log_operators: any feature materialization happens once,
+    # outside the Bregman while_loop.
+    log_matvec = geom.log_operators()[0]
+    log_K = jax.vmap(lambda s: log_matvec(eps * s))
 
     def body(state):
         it, lf, lg, _, logb_prev = state
@@ -68,3 +95,20 @@ def barycenter_log_factored(
     state = body((jnp.array(0, jnp.int32), lf0, lg0, jnp.inf, logb0))
     it, lf, lg, err, logb = jax.lax.while_loop(cond, body, state)
     return BarycenterResult(jnp.exp(logb), it, err, err <= tol)
+
+
+def barycenter_log_factored(
+    log_xi: jax.Array,       # (n, r) log-features of the COMMON support
+    hists: jax.Array,        # (k, n) input histograms on that support
+    *,
+    eps: float,
+    weights: Optional[jax.Array] = None,   # (k,) barycentric weights
+    tol: float = 1e-7,
+    max_iter: int = 500,
+) -> BarycenterResult:
+    """Factored-kernel barycenter: K = Xi Xi^T from one log-feature matrix
+    (thin wrapper over :func:`barycenter_geometry`)."""
+    geom = FactoredPositive(log_xi=log_xi, log_zeta=log_xi, eps=eps)
+    return barycenter_geometry(
+        geom, hists, weights=weights, tol=tol, max_iter=max_iter
+    )

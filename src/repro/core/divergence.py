@@ -1,11 +1,14 @@
-"""Sinkhorn divergence (Eq. 2) on positive-feature kernels.
+"""Sinkhorn divergence (Eq. 2) on any Geometry.
 
     Wbar(mu, nu) = W(mu, nu) - 1/2 W(mu, mu) - 1/2 W(nu, nu)
 
-All three terms share ONE feature evaluation per measure (xi for mu, zeta
-for nu), so the divergence costs three linear-time solves and two feature
-passes. Fully differentiable w.r.t. supports, weights and feature params via
-the envelope-theorem VJPs in ``grad.py``.
+The three terms share ONE parametrization: a Geometry supplies the (mu, nu)
+kernel and its ``xx()``/``yy()`` self-geometries supply the two correction
+terms, so the divergence costs three linear-time solves and (for factored
+families) two feature passes. Fully differentiable w.r.t. supports, weights
+and feature params via the envelope-theorem VJPs in ``grad.py`` — the
+generic :func:`~repro.core.grad.rot_geometry` for the log-domain path, the
+specialized scaling-space rule for positive features.
 
 The ``*_batched`` variants evaluate B independent divergences (the OT-GAN
 minibatch objective, Section 4) through the batched envelope VJPs — one
@@ -13,25 +16,48 @@ vmapped solve per term instead of 3B separate solver dispatches.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .features import GaussianFeatureMap, gaussian_log_features
+from .features import gaussian_log_features
+from .geometry import FactoredPositive, Geometry
 from .grad import (
     rot_factored,
     rot_factored_batched,
-    rot_log_factored,
-    rot_log_factored_batched,
+    rot_geometry,
 )
 
 __all__ = [
+    "sinkhorn_divergence_geometry",
     "sinkhorn_divergence_features",
     "sinkhorn_divergence_features_batched",
     "sinkhorn_divergence_gaussian",
     "sinkhorn_divergence_gaussian_batched",
 ]
+
+
+def sinkhorn_divergence_geometry(
+    geom: Geometry,
+    a: Optional[jax.Array] = None,
+    b: Optional[jax.Array] = None,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 2000,
+) -> jax.Array:
+    """Wbar on any log-capable Geometry with per-measure parametrization
+    (factored, point-cloud, arccos, grid — families defining ``xx``/``yy``
+    self-geometries; a bare DenseCost carries no (mu, mu) cost and cannot
+    form the correction terms). Differentiable in the geometry's arrays
+    and weights."""
+    n, m = geom.shape
+    a = jnp.full((n,), 1.0 / n) if a is None else a
+    b = jnp.full((m,), 1.0 / m) if b is None else b
+    w_xy = rot_geometry(geom, a, b, tol, max_iter)
+    w_xx = rot_geometry(geom.xx(), a, a, tol, max_iter)
+    w_yy = rot_geometry(geom.yy(), b, b, tol, max_iter)
+    return w_xy - 0.5 * (w_xx + w_yy)
 
 
 def sinkhorn_divergence_features(
@@ -47,15 +73,15 @@ def sinkhorn_divergence_features(
 ) -> jax.Array:
     """Wbar from precomputed (log-)features. ``xi``/``zeta`` are (n,r)/(m,r);
     if ``log_domain`` they are log-features."""
-    rot = rot_log_factored if log_domain else rot_factored
     if log_domain:
-        w_xy = rot(xi, zeta, a, b, eps, tol, max_iter)
-        w_xx = rot(xi, xi, a, a, eps, tol, max_iter)
-        w_yy = rot(zeta, zeta, b, b, eps, tol, max_iter)
-    else:
-        w_xy = rot(xi, zeta, a, b, eps, tol, max_iter, 1.0)
-        w_xx = rot(xi, xi, a, a, eps, tol, max_iter, 1.0)
-        w_yy = rot(zeta, zeta, b, b, eps, tol, max_iter, 1.0)
+        geom = FactoredPositive(log_xi=xi, log_zeta=zeta, eps=eps)
+        return sinkhorn_divergence_geometry(
+            geom, a, b, tol=tol, max_iter=max_iter
+        )
+    # scaling-space path keeps the specialized factored envelope rule
+    w_xy = rot_factored(xi, zeta, a, b, eps, tol, max_iter, 1.0)
+    w_xx = rot_factored(xi, xi, a, a, eps, tol, max_iter, 1.0)
+    w_yy = rot_factored(zeta, zeta, b, b, eps, tol, max_iter, 1.0)
     return w_xy - 0.5 * (w_xx + w_yy)
 
 
@@ -110,13 +136,18 @@ def sinkhorn_divergence_features_batched(
     log_domain: bool = False,
 ) -> jax.Array:
     """Stacked Wbar, shape (B,). Three batched solves, each vmapped over
-    the batch — differentiable through the batched envelope VJPs."""
+    the batch — differentiable through the batched envelope VJPs (the
+    per-slice Geometry is built inside the vmapped body)."""
     if log_domain:
-        rot = lambda p, q, w, z: rot_log_factored_batched(
-            p, q, w, z, eps, tol, max_iter)
+        def rot(p, q_, w, z):
+            return jax.vmap(
+                lambda p_, q__, w_, z_: rot_geometry(
+                    FactoredPositive(log_xi=p_, log_zeta=q__, eps=eps),
+                    w_, z_, tol, max_iter)
+            )(p, q_, w, z)
     else:
-        rot = lambda p, q, w, z: rot_factored_batched(
-            p, q, w, z, eps, tol, max_iter, 1.0)
+        def rot(p, q_, w, z):
+            return rot_factored_batched(p, q_, w, z, eps, tol, max_iter, 1.0)
     w_xy = rot(xi, zeta, a, b)
     w_xx = rot(xi, xi, a, a)
     w_yy = rot(zeta, zeta, b, b)

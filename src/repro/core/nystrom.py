@@ -4,12 +4,15 @@ K_tilde = K[:, S] (K[S, S] + lam I)^+ K[S, :]  with S a set of l landmark
 columns. Applying K_tilde to a vector costs O(n l) — same asymptotics as the
 positive-feature path — BUT entries of K_tilde can be NEGATIVE, so Sinkhorn
 scalings can cross zero and the iteration diverges. The paper's Figures 1/3/5
-show exactly this at small eps; our benchmark reproduces it (we detect the
-failure via non-finite marginal error and report it).
+show exactly this at small eps; our benchmark reproduces it, and the failure
+is surfaced as ``SinkhornResult.diverged`` (non-finite marginal blow-up as a
+structured flag rather than raw NaNs).
 
-We use uniform landmark sampling + ridge pseudo-inverse; the recursive
-leverage-score sampler of [40] changes constants, not the failure mode
-(documented deviation in DESIGN.md §6).
+The representation now lives in :class:`repro.core.geometry.NystromLowRank`
+— reachable from ``solve(problem, method="nystrom")`` — and this module is
+the thin stable wrapper around it. We use uniform landmark sampling + ridge
+pseudo-inverse; the recursive leverage-score sampler of [40] changes
+constants, not the failure mode (documented deviation in DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -18,8 +21,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .geometry import squared_euclidean
-from .sinkhorn import SinkhornResult, sinkhorn_operator
+from .geometry import NystromLowRank
+from .sinkhorn import SinkhornResult, sinkhorn_geometry
 
 __all__ = ["NystromFactors", "nystrom_factors", "sinkhorn_nystrom"]
 
@@ -41,20 +44,10 @@ def nystrom_factors(
     ridge: float = 1e-10,
 ) -> NystromFactors:
     """Landmark-Nystrom factorization of the Gibbs kernel exp(-C/eps)."""
-    pool = jnp.concatenate([x, y], axis=0)
-    idx = jax.random.choice(key, pool.shape[0], (rank,), replace=False)
-    z = pool[idx]                                        # (l, d) landmarks
-    K_xz = jnp.exp(-squared_euclidean(x, z) / eps)       # (n, l)
-    K_zy = jnp.exp(-squared_euclidean(z, y) / eps)       # (l, m)
-    K_zz = jnp.exp(-squared_euclidean(z, z) / eps)
-    # eigenvalue-truncated pseudo-inverse (stable Nystrom in f32): invert
-    # only the spectrum above tau * lambda_max, zero the rest.
-    w, Q = jnp.linalg.eigh(K_zz)
-    tau = ridge if ridge > 1e-8 else 1e-5
-    keep = w > tau * jnp.max(w)
-    w_inv = jnp.where(keep, 1.0 / jnp.where(keep, w, 1.0), 0.0)
-    inv = (Q * w_inv[None, :]) @ Q.T
-    return NystromFactors(L=K_xz @ inv, Rt=K_zy)
+    geom = NystromLowRank.from_point_clouds(
+        x, y, eps=eps, rank=rank, key=key, ridge=ridge
+    )
+    return NystromFactors(L=geom.L, Rt=geom.Rt)
 
 
 def sinkhorn_nystrom(
@@ -69,17 +62,9 @@ def sinkhorn_nystrom(
     """Sinkhorn on the (possibly signed!) Nystrom kernel.
 
     Divergence shows up as non-finite/negative scalings -> marginal_err goes
-    non-finite and ``converged`` stays False; callers treat that as the
-    method's documented failure (paper Fig. 1, middle/left panels).
+    non-finite, ``converged`` stays False and ``diverged`` reports True;
+    callers treat that as the method's documented failure (paper Fig. 1,
+    middle/left panels).
     """
-    L, Rt = factors
-
-    def matvec(v):
-        return L @ (Rt @ v)
-
-    def rmatvec(u):
-        return Rt.T @ (L.T @ u)
-
-    return sinkhorn_operator(
-        matvec, rmatvec, a, b, eps=eps, tol=tol, max_iter=max_iter
-    )
+    geom = NystromLowRank(L=factors.L, Rt=factors.Rt, eps=eps)
+    return sinkhorn_geometry(geom, a, b, tol=tol, max_iter=max_iter)

@@ -20,7 +20,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .sinkhorn import sinkhorn_quadratic
+from .geometry import DenseCost
+from .sinkhorn import sinkhorn_geometry
 
 __all__ = ["SinkhornRouting", "sinkhorn_route"]
 
@@ -47,11 +48,13 @@ def sinkhorn_route(
     T, E = logits.shape
     a = jnp.full((T,), 1.0 / T, logits.dtype)
     b = jnp.full((E,), 1.0 / E, logits.dtype)
-    K = jnp.exp((logits - jax.lax.stop_gradient(jnp.max(logits))) / eps)
-    res = sinkhorn_quadratic(
-        jax.lax.stop_gradient(K), a, b, eps=eps, tol=0.0, max_iter=n_iter
+    # the router's Gibbs kernel K = exp(logits/eps) as a DenseCost geometry:
+    # c = max(logits) - logits is the exact kernel-first cost (Eq. 7)
+    geom = DenseCost(
+        jax.lax.stop_gradient(jnp.max(logits) - logits), eps
     )
-    plan = res.u[:, None] * jax.lax.stop_gradient(K) * res.v[None, :]  # (T,E)
+    res = sinkhorn_geometry(geom, a, b, tol=0.0, max_iter=n_iter)
+    plan = res.u[:, None] * geom.dense_kernel() * res.v[None, :]       # (T,E)
     plan = jax.lax.stop_gradient(plan)
     # top-k experts per token under the BALANCED plan
     _, top_idx = jax.lax.top_k(plan, top_k)                            # (T,k)

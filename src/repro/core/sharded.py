@@ -17,12 +17,18 @@ K (an O(n m / p) all-to-all per iteration). The r-vector psum is the entire
 communication cost of the paper's method — this is the collective-term win
 quantified in EXPERIMENTS.md §Roofline.
 
+The distribution-aware operators live in :class:`RowShardedFactored` — a
+Geometry subclass whose ``apply_k``/``apply_kt`` psum the thin contraction
+— so the SPMD body composes the exact same ``make_scaling_step`` building
+block as the single-device solver, fed by a geometry like everywhere else.
+
 Convergence is checked with a psum'd local L1 error, so the while_loop
 carries a replicated scalar and all devices exit together (no divergence of
 control flow — a requirement for SPMD).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Optional
 
@@ -30,6 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .geometry import FactoredPositive, Geometry
 from .sinkhorn import (
     SinkhornResult,
     make_scaling_step,
@@ -37,36 +44,81 @@ from .sinkhorn import (
     run_marginal_loop,
 )
 
-__all__ = ["sharded_sinkhorn_factored", "make_sharded_sinkhorn"]
+__all__ = [
+    "RowShardedFactored",
+    "sharded_sinkhorn_factored",
+    "sharded_sinkhorn_geometry",
+    "make_sharded_sinkhorn",
+]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RowShardedFactored(FactoredPositive):
+    """Per-device shard of a factored geometry, used INSIDE ``shard_map``.
+
+    ``xi``/``zeta`` hold the local (n/p, r)/(m/p, r) feature rows; the
+    operators produce locally-sharded outputs after psum-ing the shared
+    r-vector over ``axis`` — the only cross-device traffic per iteration.
+
+    Log-domain operators are DISABLED: the inherited factored LSE would
+    reduce over only the local feature rows (a psum'd logsumexp is not
+    implemented), silently dropping every other device's contribution.
+    The sharded solver runs in scaling space.
+    """
+
+    axis: str = dataclasses.field(default="data",
+                                  metadata=dict(static=True))
+
+    supports_log = False
+
+    def apply_k(self, v):                        # K v, sharded (n/p,)
+        t = jax.lax.psum(self.zeta.T @ v, self.axis)     # (r,) replicated
+        return self.xi @ t
+
+    def apply_kt(self, u):                       # K^T u, sharded (m/p,)
+        t = jax.lax.psum(self.xi.T @ u, self.axis)
+        return self.zeta @ t
+
+    def operators(self):
+        # the psum'd matvecs read fields directly — nothing to hoist
+        return self.apply_k, self.apply_kt
+
+    def _no_log(self, *_):
+        raise ValueError(
+            "RowShardedFactored has no log-domain operators: the local LSE "
+            "would miss the other shards' feature rows; use the "
+            "scaling-space sharded solver"
+        )
+
+    log_apply_k = _no_log
+    log_apply_kt = _no_log
+
+    def log_operators(self):
+        self._no_log()
 
 
 def _sharded_body(xi, zeta, a, b, *, eps, tol, max_iter, axis):
     """Runs INSIDE shard_map. All arrays are per-device shards.
 
     Composes the SAME ``make_scaling_step`` block as the single-device
-    solver — only the operators (psum'd thin contractions) and the error
-    reduction (psum'd local L1) are distribution-aware.
+    solver — only the geometry (psum'd :class:`RowShardedFactored`
+    operators) and the error reduction (psum'd local L1) are
+    distribution-aware.
     """
     n_loc = a.shape[0]
     m_loc = b.shape[0]
     dtype = a.dtype
-
-    def rmatvec(u):                              # K^T u, sharded (m/p,)
-        t = jax.lax.psum(xi.T @ u, axis)         # (r,) replicated
-        return zeta @ t
-
-    def matvec(v):                               # K v, sharded (n/p,)
-        t = jax.lax.psum(zeta.T @ v, axis)
-        return xi @ t
+    geom = RowShardedFactored(xi=xi, zeta=zeta, eps=eps, axis=axis)
 
     step = make_scaling_step(
-        matvec, rmatvec, a, b,
+        geom.apply_k, geom.apply_kt, a, b,
         err_reduce=lambda e: jax.lax.psum(jnp.sum(e), axis),
     )
     u0 = jnp.ones((n_loc,), dtype)
     v0 = jnp.ones((m_loc,), dtype)
     it, (u, v, _), err = run_marginal_loop(
-        step, (u0, v0, rmatvec(u0)), tol=tol, max_iter=max_iter, dtype=dtype
+        step, (u0, v0, geom.apply_kt(u0)), tol=tol, max_iter=max_iter,
+        dtype=dtype
     )
     f, g = eps * jnp.log(u), eps * jnp.log(v)
     cost = jax.lax.psum(masked_dual_value(a, b, f, g), axis)
@@ -104,3 +156,24 @@ def sharded_sinkhorn_factored(
     fn = make_sharded_sinkhorn(mesh, axis=axis, eps=eps, tol=tol,
                                max_iter=max_iter)
     return fn(xi, zeta, a, b)
+
+
+def sharded_sinkhorn_geometry(
+    mesh, geom: Geometry, a, b, *, axis: str = "data",
+    tol: float = 1e-6, max_iter: int = 2000
+) -> SinkhornResult:
+    """Shard-map solve of any feature-capable Geometry.
+
+    Materializes the strictly positive factors once (``geom.features()``),
+    shards their rows over ``axis`` and runs the psum'd scaling loop.
+    """
+    if not geom.supports_features:
+        raise ValueError(
+            "method='sharded' needs a geometry with materializable positive "
+            f"features; {type(geom).__name__} has none"
+        )
+    xi, zeta = geom.features()
+    return sharded_sinkhorn_factored(
+        mesh, xi, zeta, a, b, eps=geom.eps, axis=axis, tol=tol,
+        max_iter=max_iter,
+    )

@@ -47,6 +47,8 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .geometry import DenseCost, FactoredPositive, Geometry, _masked_log
+
 __all__ = [
     "SinkhornResult",
     "make_scaling_step",
@@ -56,6 +58,8 @@ __all__ = [
     "run_marginal_loop",
     "masked_dual_value",
     "sinkhorn_operator",
+    "sinkhorn_geometry",
+    "sinkhorn_log_geometry",
     "sinkhorn_factored",
     "sinkhorn_quadratic",
     "sinkhorn_log_factored",
@@ -76,6 +80,17 @@ class SinkhornResult(NamedTuple):
     marginal_err: jax.Array
     converged: jax.Array
 
+    @property
+    def diverged(self) -> jax.Array:
+        """Structured divergence flag: the iteration blew up (non-finite
+        marginal error or dual value) rather than merely not converging
+        yet. This is how the signed-Nystrom small-eps failure mode (paper
+        Figs. 1/3/5) is surfaced — ``converged=False, diverged=True`` —
+        instead of handing callers raw NaNs to interpret. Implemented as a
+        property so the pytree structure (vmap / shard_map out_specs) is
+        unchanged."""
+        return ~(jnp.isfinite(self.marginal_err) & jnp.isfinite(self.cost))
+
 
 # ---------------------------------------------------------------------------
 # Building blocks
@@ -91,11 +106,6 @@ def masked_dual_value(a, b, f, g):
     ta = jnp.sum(jnp.where(a > 0, a * f, 0.0))
     tb = jnp.sum(jnp.where(b > 0, b * g, 0.0))
     return ta + tb
-
-
-def _masked_log(w):
-    """log w with log(0) pinned to -inf without the 0*inf nan hazards."""
-    return jnp.where(w > 0, jnp.log(jnp.where(w > 0, w, 1.0)), -jnp.inf)
 
 
 def make_scaling_step(
@@ -140,34 +150,19 @@ def factored_log_matvecs(
         log_matvec(g)  = log(K   e^{g/eps})   (n,)
         log_rmatvec(f) = log(K^T e^{f/eps})   (m,)
 
-    Cost O(r (n + m)) each — shared by the plain, accelerated and batched
-    log-domain solvers.
+    Cost O(r (n + m)) each. Thin wrapper over the
+    :class:`~repro.core.geometry.FactoredPositive` geometry's operators —
+    the single source of truth for the factored log-matvec math.
     """
-    lse = jax.scipy.special.logsumexp
-
-    def log_rmatvec(f):
-        t = lse(log_xi + (f / eps)[:, None], axis=0)         # (r,)
-        return lse(log_zeta + t[None, :], axis=1)
-
-    def log_matvec(g):
-        t = lse(log_zeta + (g / eps)[:, None], axis=0)       # (r,)
-        return lse(log_xi + t[None, :], axis=1)
-
-    return log_matvec, log_rmatvec
+    geom = FactoredPositive(log_xi=log_xi, log_zeta=log_zeta, eps=eps)
+    return geom.log_operators()
 
 
 def dense_log_matvecs(C: jax.Array, *, eps: float) -> Tuple[Callable, Callable]:
-    """Dense O(nm) log-operators on the Gibbs kernel of cost matrix C."""
-    lse = jax.scipy.special.logsumexp
-    negC = -C / eps
-
-    def log_rmatvec(f):
-        return lse(negC + (f / eps)[:, None], axis=0)
-
-    def log_matvec(g):
-        return lse(negC + (g / eps)[None, :], axis=1)
-
-    return log_matvec, log_rmatvec
+    """Dense O(nm) log-operators on the Gibbs kernel of cost matrix C
+    (the :class:`~repro.core.geometry.DenseCost` geometry's operators)."""
+    geom = DenseCost(C, eps)
+    return geom.log_operators()
 
 
 def make_log_step(
@@ -244,6 +239,34 @@ def sinkhorn_operator(
     return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
 
 
+def sinkhorn_geometry(
+    geom: Geometry,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 2000,
+    momentum: float = 1.0,
+    u_init: Optional[jax.Array] = None,
+) -> SinkhornResult:
+    """Algorithm 1 in scaling space on any Geometry's native operators.
+
+    This is the one scaling-space entry point every cost family shares:
+    factored kernels get O(r(n+m)) iterations, grids get axis-wise
+    convolutions, dense costs get the O(nm) baseline, and signed Nystrom
+    factors run (and possibly diverge — see ``SinkhornResult.diverged``)
+    without any representation branching at the call site. Uses the
+    geometry's HOISTED operators so per-family precomputation (dense
+    Gibbs kernel, feature materialization, per-axis grid kernels) happens
+    once per solve, not inside the while_loop.
+    """
+    matvec, rmatvec = geom.operators()
+    return sinkhorn_operator(
+        matvec, rmatvec, a, b, eps=geom.eps, tol=tol,
+        max_iter=max_iter, momentum=momentum, u_init=u_init,
+    )
+
+
 def sinkhorn_factored(
     xi: jax.Array,          # (n, r) strictly positive features of mu's support
     zeta: jax.Array,        # (m, r) strictly positive features of nu's support
@@ -257,16 +280,9 @@ def sinkhorn_factored(
     u_init: Optional[jax.Array] = None,
 ) -> SinkhornResult:
     """Linear-time Sinkhorn on K = xi @ zeta.T (the paper's Section 3.1)."""
-
-    def matvec(v):
-        return xi @ (zeta.T @ v)
-
-    def rmatvec(u):
-        return zeta @ (xi.T @ u)
-
-    return sinkhorn_operator(
-        matvec, rmatvec, a, b, eps=eps, tol=tol, max_iter=max_iter,
-        momentum=momentum, u_init=u_init,
+    return sinkhorn_geometry(
+        FactoredPositive(xi=xi, zeta=zeta, eps=eps), a, b, tol=tol,
+        max_iter=max_iter, momentum=momentum, u_init=u_init,
     )
 
 
@@ -291,6 +307,30 @@ def sinkhorn_quadratic(
 # ---------------------------------------------------------------------------
 # Log-domain (small-eps safe)
 # ---------------------------------------------------------------------------
+
+
+def sinkhorn_log_geometry(
+    geom: Geometry,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 2000,
+    f_init: Optional[jax.Array] = None,
+    g_init: Optional[jax.Array] = None,
+) -> SinkhornResult:
+    """Log-domain (small-eps safe) Sinkhorn on any log-capable Geometry.
+
+    The geometry supplies its hoisted ``log_operators()`` — exact
+    two-stage LSE for positive-factored families, axis-wise log-convolution
+    for grids, dense LSE for explicit costs. ``f_init``/``g_init``
+    warm-start the potentials (epsilon annealing).
+    """
+    log_matvec, log_rmatvec = geom.log_operators()
+    return _log_domain_solve(
+        log_matvec, log_rmatvec, a, b, eps=geom.eps, tol=tol,
+        max_iter=max_iter, f_init=f_init, g_init=g_init,
+    )
 
 
 def _log_domain_solve(

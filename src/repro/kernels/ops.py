@@ -8,11 +8,17 @@ the backend unless overridden.
 ``fused_sinkhorn_iteration`` composes the kernels into one full Alg.-1
 iteration (v then u) — this is the paper's O(r(n+m)) hot loop as it would
 run on hardware.
+
+``geometry_ops`` is the consumer of the Geometry layer's ``pallas_ops()``
+hook: the GEOMETRY decides which fused kernels apply to its cost family
+(fused Lemma-1 feature map + feature_contract + half-step for Gaussian
+point clouds, feature_contract + half-step for explicit factors), and call
+sites just ask for the plan instead of hard-coding a kernel choice.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +36,8 @@ __all__ = [
     "fused_sinkhorn_iteration",
     "batched_sinkhorn_halfstep",
     "fused_batched_sinkhorn_iteration",
+    "GeometryOps",
+    "geometry_ops",
 ]
 
 
@@ -153,3 +161,63 @@ def fused_batched_sinkhorn_iteration(
     v = batched_sinkhorn_halfstep(zeta, u, b, xi, interpret=interpret)
     u_new = batched_sinkhorn_halfstep(xi, v, a, zeta, interpret=interpret)
     return u_new, v
+
+
+# ---------------------------------------------------------------------------
+# Geometry-chosen dispatch (the pallas_ops() hook consumer)
+# ---------------------------------------------------------------------------
+
+
+class GeometryOps(NamedTuple):
+    """Fused Pallas execution plan for one geometry's cost family.
+
+    ``features``  — the materialized positive factors (xi, zeta) the plan
+                    operates on; for Gaussian point clouds these come out
+                    of the fused feature-map kernel (MXU dot + rank-1 norm
+                    corrections + exp, no (n, r) sq-dist tensor in HBM).
+    ``iteration`` — ``(a, b, u) -> (u', v)``: one full Alg.-1 iteration
+                    (contract, half-step, contract, half-step), marginals
+                    and scalings as (n, B)/(m, B) column blocks.
+    """
+
+    features: Tuple[jax.Array, jax.Array]
+    iteration: Callable[[jax.Array, jax.Array, jax.Array],
+                        Tuple[jax.Array, jax.Array]]
+
+
+def _factored_plan(xi, zeta, interpret) -> GeometryOps:
+    def iteration(a, b, u):
+        return fused_sinkhorn_iteration(
+            xi, zeta, a, b, u, interpret=interpret
+        )
+
+    return GeometryOps(features=(xi, zeta), iteration=iteration)
+
+
+def geometry_ops(geom, *, interpret: Optional[bool] = None
+                 ) -> Optional[GeometryOps]:
+    """Fused-kernel plan for ``geom``, chosen by the geometry itself.
+
+    Returns ``None`` when the geometry declares no fused path (dense
+    costs, signed Nystrom factors, grids) — callers then fall back to the
+    geometry's XLA operators. The spec format is owned by
+    ``Geometry.pallas_ops``; this function only maps specs to kernels.
+    """
+    spec = geom.pallas_ops()
+    if spec is None:
+        return None
+    interpret = default_interpret() if interpret is None else interpret
+    kind = spec["kind"]
+    if kind == "factored":
+        return _factored_plan(spec["xi"], spec["zeta"], interpret)
+    if kind == "gaussian":
+        xi = gaussian_feature_map(
+            spec["x"], spec["anchors"], spec["log_const"],
+            inv_eps=spec["inv_eps"], interpret=interpret,
+        )
+        zeta = gaussian_feature_map(
+            spec["y"], spec["anchors"], spec["log_const"],
+            inv_eps=spec["inv_eps"], interpret=interpret,
+        )
+        return _factored_plan(xi, zeta, interpret)
+    raise ValueError(f"unknown pallas_ops spec kind {kind!r}")

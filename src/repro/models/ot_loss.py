@@ -18,8 +18,9 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from ..core.divergence import sinkhorn_divergence_features
+from ..core.divergence import sinkhorn_divergence_geometry
 from ..core.features import gaussian_log_features, gaussian_q
+from ..core.geometry import FactoredPositive
 from ..distributed.sharding import shard
 from .layers import trunc_normal
 
@@ -75,6 +76,7 @@ def ot_prototype_loss(
     n, m = lxi.shape[0], lzeta.shape[0]
     a = jnp.full((n,), 1.0 / n, jnp.float32)
     b = jnp.full((m,), 1.0 / m, jnp.float32)
-    return sinkhorn_divergence_features(
-        lxi, lzeta, a, b, eps=eps, tol=0.0, max_iter=n_iter, log_domain=True
+    geom = FactoredPositive(log_xi=lxi, log_zeta=lzeta, eps=eps)
+    return sinkhorn_divergence_geometry(
+        geom, a, b, tol=0.0, max_iter=n_iter
     )
