@@ -186,9 +186,49 @@ def run_geometries(n: int = 1000, r: int = 200, eps_list=(0.1, 0.5),
     return rows
 
 
-def main(n: int = 2000, quick: bool = False, geometry: bool = False):
+def run_pallas(n: int = 256, r: int = 64, eps_list=(0.1, 0.5),
+               tol: float = 1e-5, max_iter: int = 2000) -> List[Dict]:
+    """The ``--pallas`` axis: per cost family and eps, solve through the
+    fused Pallas plan (``use_pallas=True`` — interpret mode off-TPU) and
+    through the XLA operators, reporting elementwise cost parity and the
+    iteration counts. Small eps exercises the LOG plan (fused LSE kernels),
+    moderate eps the scaling plan."""
+    rows = []
+    for eps in eps_list:
+        for fam in ("gaussian", "arccos"):
+            p = _geometry_problem(fam, n, r, eps)
+            res_p = solve(p, tol=tol, max_iter=max_iter, use_pallas=True)
+            res_x = solve(p, tol=tol, max_iter=max_iter, use_pallas=False)
+            dcost = abs(float(res_p.cost - res_x.cost))
+            rel = dcost / max(abs(float(res_x.cost)), 1e-12)
+            rows.append(dict(
+                family=fam, eps=eps, n=n, rel_dcost=rel,
+                iters_pallas=int(res_p.n_iter), iters_xla=int(res_x.n_iter),
+                match=bool(int(res_p.n_iter) == int(res_x.n_iter)),
+            ))
+    return rows
+
+
+def main(n: int = 2000, quick: bool = False, geometry: bool = False,
+         pallas: bool = False):
     all_rows = []
     print("name,us_per_call,derived")
+    if pallas:
+        all_rows = run_pallas(n=min(n, 256) if quick else min(n, 512))
+        for row in all_rows:
+            name = (f"tradeoff/pallas/{row['family']}/eps{row['eps']}"
+                    f"/n{row['n']}")
+            print(f"{name},0,rel_dcost={row['rel_dcost']:.3e};"
+                  f"iters_pallas={row['iters_pallas']};"
+                  f"iters_xla={row['iters_xla']};match={row['match']}")
+        # gate row (run.py fails the process on ok=False): costs must agree
+        # to solver tolerance; iteration counts may differ by <= 2 from f32
+        # noise at the tol boundary but not more
+        ok = all(r["rel_dcost"] < 1e-4
+                 and abs(r["iters_pallas"] - r["iters_xla"]) <= 2
+                 for r in all_rows)
+        print(f"tradeoff/pallas_ok,0,ok={ok}")
+        return all_rows
     if geometry:
         all_rows = run_geometries(n=min(n, 1024),
                                   eps_list=(0.1, 0.5) if quick
@@ -218,6 +258,10 @@ if __name__ == "__main__":
     ap.add_argument("--geometry", action="store_true",
                     help="run the geometry-family axis (gaussian / arccos "
                          "/ nystrom / grid) instead of the RF/Nys/Sin grid")
+    ap.add_argument("--pallas", action="store_true",
+                    help="run the fused-plan parity axis (use_pallas=True "
+                         "vs XLA operators, interpret mode off-TPU)")
     ap.add_argument("--n", type=int, default=2000)
     args = ap.parse_args()
-    main(n=args.n, quick=args.quick, geometry=args.geometry)
+    main(n=args.n, quick=args.quick, geometry=args.geometry,
+         pallas=args.pallas)

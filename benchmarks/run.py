@@ -1,6 +1,7 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--pallas]
+                                            [--json BENCH_quick.json]
 
 Emits ``name,us_per_call,derived`` CSV rows:
   tradeoff/*   — Fig. 1/3/5  RF vs Nys vs Sin time-accuracy
@@ -8,15 +9,21 @@ Emits ``name,us_per_call,derived`` CSV rows:
   gan_grad/*   — §4          GAN gradient cost vs batch size
   solver/*     — Alg. 1      fused-kernel iteration microbench
   batch/*      — api.py      vmapped BatchedSinkhorn vs per-problem loop
+  */pallas*    — kernels.ops fused-plan vs XLA parity + iteration counts
+                 (``--pallas``; interpret mode off-TPU, compiled on TPU)
   roofline/*   — §Roofline   dry-run derived terms per (arch x shape x mesh)
 
 ``--quick`` is the tier-1 smoke entry: CPU-sized problems, minutes total.
+``--json PATH`` additionally writes the rows as a ``BENCH_*.json`` artifact
+(CI uploads it per-PR so the perf trajectory accumulates).
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
 import io
+import json
+import platform
 import sys
 import time
 
@@ -51,16 +58,32 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-tradeoff", action="store_true")
+    ap.add_argument("--pallas", action="store_true",
+                    help="add the fused-plan parity axes (bench_batch "
+                         "--pallas, bench_tradeoff --pallas)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as a BENCH_*.json artifact")
     args = ap.parse_args()
+
+    rows: list = []
 
     def section(title):
         print(f"# --- {title} ---", file=sys.stderr)
+
+    def emit(text: str) -> None:
+        # strip each sub-benchmark's own CSV header so stdout stays the
+        # single-header stream documented above
+        kept = [l for l in text.splitlines()
+                if l.strip() and not l.startswith("name,")]
+        rows.extend(l for l in kept if not l.startswith("#"))
+        if kept:
+            print("\n".join(kept))
 
     print("name,us_per_call,derived")
 
     section("solver microbench")
     for row in bench_solver_iteration():
-        print(row)
+        emit(row)
 
     section("scaling (linear vs quadratic, Sec 3.1)")
     from . import bench_scaling
@@ -68,8 +91,7 @@ def main() -> None:
     with contextlib.redirect_stdout(buf):
         bench_scaling.main(n_list=(500, 1000, 2000) if args.quick
                            else (500, 1000, 2000, 4000))
-    print("\n".join(l for l in buf.getvalue().splitlines()
-                    if not l.startswith("name,")))
+    emit(buf.getvalue())
 
     if not args.skip_tradeoff:
         section("tradeoff (Fig 1/3/5)")
@@ -78,8 +100,7 @@ def main() -> None:
         with contextlib.redirect_stdout(buf):
             bench_tradeoff.main(n=1000 if args.quick else 1200,
                                 quick=args.quick)
-        print("\n".join(l for l in buf.getvalue().splitlines()
-                        if not l.startswith("name,")))
+        emit(buf.getvalue())
 
     section("geometry families (Geometry protocol, tradeoff --geometry)")
     from . import bench_tradeoff as bt
@@ -87,16 +108,22 @@ def main() -> None:
     with contextlib.redirect_stdout(buf):
         bt.main(n=512 if args.quick else 1024, quick=args.quick,
                 geometry=True)
-    print("\n".join(l for l in buf.getvalue().splitlines()
-                    if not l.startswith("name,")))
+    emit(buf.getvalue())
+
+    if args.pallas:
+        section("fused-plan parity (solve --pallas axis)")
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            bt.main(n=256 if args.quick else 512, quick=args.quick,
+                    pallas=True)
+        emit(buf.getvalue())
 
     section("batched engine vs per-problem loop (api.BatchedSinkhorn)")
     from . import bench_batch
     buf = io.StringIO()
     with contextlib.redirect_stdout(buf):
-        speedup = bench_batch.main(quick=args.quick)
-    print("\n".join(l for l in buf.getvalue().splitlines()
-                    if not l.startswith("name,")))
+        speedup = bench_batch.main(quick=args.quick, pallas=args.pallas)
+    emit(buf.getvalue())
     print(f"# batched speedup {speedup:.2f}x (target >= 3x)", file=sys.stderr)
 
     section("gan gradient cost (Sec 4)")
@@ -105,8 +132,7 @@ def main() -> None:
     with contextlib.redirect_stdout(buf):
         bench_gan.main(batch_sizes=(250, 500) if args.quick
                        else (250, 500, 1000, 2000))
-    print("\n".join(l for l in buf.getvalue().splitlines()
-                    if not l.startswith("name,")))
+    emit(buf.getvalue())
 
     section("roofline (from dry-run artifacts)")
     try:
@@ -114,10 +140,45 @@ def main() -> None:
         buf = io.StringIO()
         with contextlib.redirect_stdout(buf):
             roofline.main()
-        print("\n".join(l for l in buf.getvalue().splitlines()
-                        if not l.startswith("name,")))
+        emit(buf.getvalue())
     except Exception as e:  # noqa: BLE001
-        print(f"roofline/unavailable,0,reason={e!r}")
+        emit(f"roofline/unavailable,0,reason={e!r}")
+
+    if args.json:
+        parsed = []
+        for line in rows:
+            parts = line.split(",", 2)
+            if len(parts) == 3:
+                name, us, derived = parts
+                try:
+                    us_val = float(us)
+                except ValueError:
+                    continue
+                parsed.append(dict(name=name, us_per_call=us_val,
+                                   derived=derived))
+        artifact = dict(
+            schema="bench-rows-v1",
+            backend=jax.default_backend(),
+            platform=platform.platform(),
+            quick=bool(args.quick),
+            pallas=bool(args.pallas),
+            batched_speedup=float(speedup),
+            rows=parsed,
+        )
+        with open(args.json, "w") as fh:
+            json.dump(artifact, fh, indent=1)
+        print(f"# wrote {len(parsed)} rows to {args.json}", file=sys.stderr)
+
+    # gate: the tier-1 perf contracts fail the process, not just the rows
+    failures = []
+    if speedup < 3.0:
+        failures.append(f"batched speedup {speedup:.2f}x < 3x")
+    if args.pallas and any("pallas_ok" in r and "ok=False" in r
+                           for r in rows):
+        failures.append("fused-plan parity check failed (batch/pallas_ok)")
+    if failures:
+        print("# FAIL: " + "; ".join(failures), file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

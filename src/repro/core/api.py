@@ -297,32 +297,50 @@ class AnnealedResult(NamedTuple):
 
 
 def _run_scaling(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
-                 mesh, mesh_axis):
+                 mesh, mesh_axis, use_pallas=None):
     u_init = None if f_init is None else jnp.exp(f_init / geom.eps)
     return sinkhorn_geometry(
         geom, a, b, tol=tol, max_iter=max_iter, momentum=momentum,
-        u_init=u_init,
+        u_init=u_init, use_pallas=use_pallas,
     )
 
 
 def _run_log(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
-             mesh, mesh_axis):
+             mesh, mesh_axis, use_pallas=None):
     return sinkhorn_log_geometry(
-        geom, a, b, tol=tol, max_iter=max_iter, f_init=f_init, g_init=g_init,
+        geom, a, b, tol=tol, max_iter=max_iter, momentum=momentum,
+        f_init=f_init, g_init=g_init, use_pallas=use_pallas,
     )
 
 
 def _run_accelerated(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
-                     mesh, mesh_axis):
+                     mesh, mesh_axis, use_pallas=None):
+    # AGM's Nesterov extrapolation IS its acceleration — an extra
+    # over-relaxation has no defined place in the scheme, so reject rather
+    # than silently drop it. The dual-gradient structure also keeps this
+    # solver on the XLA log-operators (use_pallas is ignored).
+    if momentum != 1.0:
+        raise ValueError(
+            "momentum (over-relaxation) is not supported by "
+            "method='accelerated': the AGM extrapolation already plays "
+            f"that role; got momentum={momentum}. Use momentum=1.0 or a "
+            "plain method ('factored', 'log_factored', ...)."
+        )
     return accelerated_sinkhorn_geometry(
         geom, a, b, tol=tol, max_iter=max_iter, f_init=f_init, g_init=g_init,
     )
 
 
 def _run_sharded(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
-                 mesh, mesh_axis):
+                 mesh, mesh_axis, use_pallas=None):
     from .sharded import sharded_sinkhorn_geometry
 
+    if momentum != 1.0:
+        raise ValueError(
+            "momentum (over-relaxation) is not supported by "
+            f"method='sharded' (got momentum={momentum}); the shard_map "
+            "solver runs the plain scaling iteration."
+        )
     if mesh is None:
         raise ValueError("method='sharded' requires a mesh=...")
     return sharded_sinkhorn_geometry(
@@ -433,6 +451,7 @@ def _solve_stage(
     mesh_axis: str = "data",
     rank: Optional[int] = None,
     key: Optional[jax.Array] = None,
+    use_pallas: Optional[bool] = None,
 ) -> SinkhornResult:
     """One solve at a fixed eps with optional warm-started potentials."""
     if method not in _SOLVERS:
@@ -442,7 +461,7 @@ def _solve_stage(
     return run(
         geom, problem.a, problem.b, tol=tol, max_iter=max_iter,
         momentum=momentum, f_init=f_init, g_init=g_init, mesh=mesh,
-        mesh_axis=mesh_axis,
+        mesh_axis=mesh_axis, use_pallas=use_pallas,
     )
 
 
@@ -458,6 +477,7 @@ def solve_annealed(
     mesh_axis: str = "data",
     rank: Optional[int] = None,
     key: Optional[jax.Array] = None,
+    use_pallas: Optional[bool] = None,
 ) -> AnnealedResult:
     """Annealed solve with per-stage diagnostics.
 
@@ -502,6 +522,7 @@ def solve_annealed(
             max_iter=max_iter if last else schedule.stage_iters,
             momentum=momentum, f_init=f, g_init=g,
             mesh=mesh, mesh_axis=mesh_axis, rank=rank, key=key,
+            use_pallas=use_pallas,
         )
         prev_err = res.marginal_err
         f, g = res.f, res.g
@@ -526,6 +547,7 @@ def solve(
     mesh_axis: str = "data",
     rank: Optional[int] = None,
     key: Optional[jax.Array] = None,
+    use_pallas: Optional[bool] = None,
 ) -> SinkhornResult:
     """Solve one entropic OT problem with any solver variant in the repo.
 
@@ -540,6 +562,11 @@ def solve(
     Nystrom run that blows up at small eps reports
     ``result.diverged == True`` (the paper's Fig. 1/3/5 failure mode)
     instead of handing back unexplained NaNs.
+    ``use_pallas``: route the solver hot loop through the fused Pallas
+    plan the geometry declares (``None`` = auto-on when the backend
+    compiles Pallas, i.e. TPU; ``True`` forces it — interpret mode
+    off-TPU; ``False`` forces the XLA operators). Families without a
+    fused plan fall back to XLA operators either way.
     """
     if method == "auto":
         method = _auto_method(problem)
@@ -547,12 +574,12 @@ def solve(
         return solve_annealed(
             problem, method=method, schedule=schedule, tol=tol,
             max_iter=max_iter, momentum=momentum, mesh=mesh,
-            mesh_axis=mesh_axis, rank=rank, key=key,
+            mesh_axis=mesh_axis, rank=rank, key=key, use_pallas=use_pallas,
         ).result
     return _solve_stage(
         problem, method, problem.eps, tol=tol, max_iter=max_iter,
         momentum=momentum, f_init=None, g_init=None, mesh=mesh,
-        mesh_axis=mesh_axis, rank=rank, key=key,
+        mesh_axis=mesh_axis, rank=rank, key=key, use_pallas=use_pallas,
     )
 
 
@@ -625,6 +652,7 @@ class BatchedSinkhorn:
         max_iter: int = 2000,
         momentum: float = 1.0,
         schedule: Optional[EpsSchedule] = None,
+        use_pallas: Optional[bool] = None,
     ):
         if method not in self._FACTORED + self._QUADRATIC:
             raise ValueError(
@@ -637,6 +665,10 @@ class BatchedSinkhorn:
         self.max_iter = max_iter
         self.momentum = momentum
         self.schedule = schedule
+        # threaded into the vmapped solver bodies: vmap over the fused
+        # Pallas kernels adds B as a leading grid axis, so the whole bucket
+        # group runs through one fused plan per iteration
+        self.use_pallas = use_pallas
         if schedule is not None and method not in ("log_factored",
                                                    "accelerated"):
             raise ValueError(
@@ -656,7 +688,7 @@ class BatchedSinkhorn:
         return self._runner(
             geom, a, b, tol=self.tol, max_iter=self.max_iter,
             momentum=self.momentum, f_init=None, g_init=None,
-            mesh=None, mesh_axis="data",
+            mesh=None, mesh_axis="data", use_pallas=self.use_pallas,
         )
 
     def _make_cloud_solver(self, d: int, R: float):
@@ -688,7 +720,7 @@ class BatchedSinkhorn:
                     max_iter=(self.max_iter if last
                               else self.schedule.stage_iters),
                     momentum=self.momentum, f_init=f, g_init=g,
-                    mesh=None, mesh_axis="data",
+                    mesh=None, mesh_axis="data", use_pallas=self.use_pallas,
                 )
                 prev_err = res.marginal_err
                 f, g = res.f, res.g
@@ -737,7 +769,19 @@ class BatchedSinkhorn:
         if b is None:
             b = jnp.full((B, m), 1.0 / m, y.dtype)
         if R is None:
-            R = math.ceil(float(data_radius(x, y)) * 2.0) / 2.0
+            radius = data_radius(x, y)
+            if isinstance(radius, jax.core.Tracer):
+                # float(tracer) below would raise an opaque
+                # ConcretizationTypeError from inside jnp — fail with the
+                # actionable message instead: R is a TRACE-TIME constant.
+                raise ValueError(
+                    "solve_point_clouds cannot derive the default R from "
+                    "data values under jit/vmap tracing (R is a trace-time "
+                    "constant — Lemma 1's q comes from scalar Lambert-W "
+                    "math). Pass R= explicitly inside jit, e.g. a fixed "
+                    "upper bound on max_i ||p_i||."
+                )
+            R = math.ceil(float(radius) * 2.0) / 2.0
         d = anchors.shape[-1]
         key = d, round(R, 6)
         fn = self._vsolve_clouds_cache.get(key)
@@ -827,6 +871,7 @@ def solve_many(
     tol: float = 1e-6,
     max_iter: int = 2000,
     momentum: float = 1.0,
+    use_pallas: Optional[bool] = None,
 ) -> List[SinkhornResult]:
     """Convenience wrapper: batched solve of a ragged problem list.
 
@@ -842,12 +887,13 @@ def solve_many(
         if len(eps_set) != 1:
             raise ValueError(f"mixed problem eps {sorted(eps_set)}; pass eps=")
         eps = eps_set.pop()
-    key = (method, float(eps), float(tol), int(max_iter), float(momentum))
+    key = (method, float(eps), float(tol), int(max_iter), float(momentum),
+           use_pallas)
     engine = _ENGINE_CACHE.get(key)
     if engine is None:
         engine = BatchedSinkhorn(
             eps=eps, method=method, tol=tol, max_iter=max_iter,
-            momentum=momentum,
+            momentum=momentum, use_pallas=use_pallas,
         )
         _ENGINE_CACHE[key] = engine
     return engine.solve_many(problems)

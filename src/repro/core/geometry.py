@@ -454,8 +454,13 @@ class FactoredPositive(_FeatureKernelOps, Geometry):
                                 eps=self.eps)
 
     def pallas_ops(self):
-        xi, zeta = self.features()
-        return {"kind": "factored", "xi": xi, "zeta": zeta}
+        if self.xi is not None:
+            return {"kind": "factored", "xi": self.xi, "zeta": self.zeta}
+        # log mode: hand the raw log-factors over so the log plan never
+        # round-trips through exp (small-eps safety); the scaling plan
+        # exponentiates once at plan-build time.
+        return {"kind": "log_factored", "log_xi": self.log_xi,
+                "log_zeta": self.log_zeta, "eps": self.eps}
 
 
 # ---------------------------------------------------------------------------

@@ -96,6 +96,12 @@ class RowShardedFactored(FactoredPositive):
     def log_operators(self):
         self._no_log()
 
+    def pallas_ops(self):
+        # the inherited "factored" spec would hand the LOCAL feature shard
+        # to the fused plan, whose iteration has no psum — every other
+        # device's rows would be silently dropped. No fused path.
+        return None
+
 
 def _sharded_body(xi, zeta, a, b, *, eps, tol, max_iter, axis):
     """Runs INSIDE shard_map. All arrays are per-device shards.

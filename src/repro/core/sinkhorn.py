@@ -22,6 +22,14 @@ solver in the repo composes:
 blocks over a leading batch axis; ``sharded.py`` composes the same scaling
 step with psum'd contractions inside ``shard_map``.
 
+``sinkhorn_geometry`` / ``sinkhorn_log_geometry`` additionally accept
+``use_pallas``: when the geometry declares a fused Pallas plan
+(``Geometry.pallas_ops`` -> ``kernels.ops.geometry_ops``), the
+``lax.while_loop`` body runs through the plan's fused kernels (feature
+contraction + half-step with the marginal divide/subtract fused) instead
+of the XLA operators — auto-on on TPU backends, opt-in interpret mode in
+tests, elementwise-identical semantics either way.
+
 Implementation notes
 --------------------
 * We reuse ``s = K^T u`` across the marginal check and the next v-update,
@@ -41,12 +49,18 @@ Implementation notes
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ops import (
+    default_interpret,
+    geometry_ops,
+    notify_plan_selected,
+    relax_log,
+    relax_scaling,
+)
 from .geometry import DenseCost, FactoredPositive, Geometry, _masked_log
 
 __all__ = [
@@ -125,16 +139,11 @@ def make_scaling_step(
     scalar.
     """
 
-    def relax(new, old):
-        if momentum == 1.0:
-            return new
-        # geometric over-relaxation: u <- u_old^{1-w} * u_new^{w}
-        return old ** (1.0 - momentum) * new**momentum
-
     def step(carry):
         u, v, s = carry
-        v_new = relax(b / s, v)
-        u_new = relax(a / matvec(v_new), u)
+        # geometric over-relaxation: u <- u_old^{1-w} * u_new^{w}
+        v_new = relax_scaling(b / s, v, momentum)
+        u_new = relax_scaling(a / matvec(v_new), u, momentum)
         s_new = rmatvec(u_new)
         err = err_reduce(jnp.abs(v_new * s_new - b))
         return (u_new, v_new, s_new), err
@@ -172,15 +181,22 @@ def make_log_step(
     b: jax.Array,
     *,
     eps: float,
+    momentum: float = 1.0,
     err_reduce: Callable[[jax.Array], jax.Array] = jnp.sum,
 ):
-    """One full log-domain iteration: ``step((f, g)) -> ((f', g'), err)``."""
+    """One full log-domain iteration: ``step((f, g)) -> ((f', g'), err)``.
+
+    ``momentum`` in (1, 2) applies the log-space over-relaxation
+    ``f <- (1-w) f_old + w f_new`` — the exact log of the geometric
+    relaxation in :func:`make_scaling_step` (-inf potentials of zero-weight
+    atoms bypass the blend).
+    """
     loga, logb = _masked_log(a), _masked_log(b)
 
     def step(carry):
         f, g = carry
-        g = eps * (logb - log_rmatvec(f))
-        f = eps * (loga - log_matvec(g))
+        g = relax_log(eps * (logb - log_rmatvec(f)), g, momentum)
+        f = relax_log(eps * (loga - log_matvec(g)), f, momentum)
         log_col = log_rmatvec(f) + g / eps       # log of column marginal
         err = err_reduce(jnp.abs(jnp.exp(log_col) - b))
         return (f, g), err
@@ -209,6 +225,59 @@ def run_marginal_loop(step, carry0, *, tol: float, max_iter: int, dtype):
 
 
 # ---------------------------------------------------------------------------
+# Fused Pallas plan selection (the use_pallas policy)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_pallas_plan(geom: Geometry, use_pallas: Optional[bool],
+                       mode: str):
+    """Resolve the ``use_pallas`` policy into a fused plan (or ``None``).
+
+    ``None`` (auto) turns the fused path on exactly when the kernels would
+    COMPILE rather than interpret — i.e. on a real TPU backend; CPU runs
+    keep the XLA operators. ``True`` forces the plan (interpret mode off
+    TPU — the test configuration), ``False`` forces the XLA operators.
+    Geometries without a fused plan (dense, Nystrom, grids) always fall
+    back. Selections are reported through the
+    ``kernels.ops.observe_plan_selection`` hook.
+    """
+    if use_pallas is None:
+        use_pallas = not default_interpret()
+    if not use_pallas:
+        return None
+    plan = geometry_ops(geom, mode=mode)
+    if plan is not None:
+        notify_plan_selected({
+            "geometry": type(geom).__name__,
+            "mode": plan.mode,
+            "kind": plan.kind,
+        })
+    return plan
+
+
+def _finish_scaling(a, b, u, v, it, err, *, eps, tol) -> SinkhornResult:
+    f, g = eps * _masked_log(u), eps * _masked_log(v)
+    cost = masked_dual_value(a, b, f, g)
+    return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
+
+
+def _solve_scaling_plan(plan, a, b, *, eps, tol, max_iter, momentum,
+                        u_init) -> SinkhornResult:
+    """Alg. 1 with the ``lax.while_loop`` body routed through the fused
+    Pallas plan — semantics (masking, warm start, marginal check, momentum)
+    identical to :func:`sinkhorn_operator`."""
+    n, m = a.shape[0], b.shape[0]
+    dtype = a.dtype
+    u0 = jnp.ones((n,), dtype) if u_init is None else u_init
+    v0 = jnp.ones((m,), dtype)
+    step, init = plan.make_step(a, b, momentum=momentum)
+    it, (u, v, _), err = run_marginal_loop(
+        step, init(u0, v0), tol=tol, max_iter=max_iter, dtype=dtype,
+    )
+    return _finish_scaling(a, b, u, v, it, err, eps=eps, tol=tol)
+
+
+# ---------------------------------------------------------------------------
 # Scaling-space solvers
 # ---------------------------------------------------------------------------
 
@@ -234,9 +303,7 @@ def sinkhorn_operator(
     it, (u, v, _), err = run_marginal_loop(
         step, (u0, v0, rmatvec(u0)), tol=tol, max_iter=max_iter, dtype=dtype
     )
-    f, g = eps * _masked_log(u), eps * _masked_log(v)
-    cost = masked_dual_value(a, b, f, g)
-    return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
+    return _finish_scaling(a, b, u, v, it, err, eps=eps, tol=tol)
 
 
 def sinkhorn_geometry(
@@ -248,6 +315,7 @@ def sinkhorn_geometry(
     max_iter: int = 2000,
     momentum: float = 1.0,
     u_init: Optional[jax.Array] = None,
+    use_pallas: Optional[bool] = None,
 ) -> SinkhornResult:
     """Algorithm 1 in scaling space on any Geometry's native operators.
 
@@ -255,11 +323,22 @@ def sinkhorn_geometry(
     factored kernels get O(r(n+m)) iterations, grids get axis-wise
     convolutions, dense costs get the O(nm) baseline, and signed Nystrom
     factors run (and possibly diverge — see ``SinkhornResult.diverged``)
-    without any representation branching at the call site. Uses the
-    geometry's HOISTED operators so per-family precomputation (dense
+    without any representation branching at the call site.
+
+    ``use_pallas`` selects between the geometry's HOISTED XLA operators
+    and the fused Pallas plan (``kernels.ops.geometry_ops``) for the
+    while_loop body: ``None`` auto-enables the plan on TPU backends only,
+    ``True`` forces it (interpret mode off-TPU — the test path), ``False``
+    forces the XLA operators. Either way per-family precomputation (dense
     Gibbs kernel, feature materialization, per-axis grid kernels) happens
     once per solve, not inside the while_loop.
     """
+    plan = _maybe_pallas_plan(geom, use_pallas, "scaling")
+    if plan is not None:
+        return _solve_scaling_plan(
+            plan, a, b, eps=geom.eps, tol=tol, max_iter=max_iter,
+            momentum=momentum, u_init=u_init,
+        )
     matvec, rmatvec = geom.operators()
     return sinkhorn_operator(
         matvec, rmatvec, a, b, eps=geom.eps, tol=tol,
@@ -316,38 +395,73 @@ def sinkhorn_log_geometry(
     *,
     tol: float = 1e-6,
     max_iter: int = 2000,
+    momentum: float = 1.0,
     f_init: Optional[jax.Array] = None,
     g_init: Optional[jax.Array] = None,
+    use_pallas: Optional[bool] = None,
 ) -> SinkhornResult:
     """Log-domain (small-eps safe) Sinkhorn on any log-capable Geometry.
 
     The geometry supplies its hoisted ``log_operators()`` — exact
     two-stage LSE for positive-factored families, axis-wise log-convolution
     for grids, dense LSE for explicit costs. ``f_init``/``g_init``
-    warm-start the potentials (epsilon annealing).
+    warm-start the potentials (epsilon annealing); ``momentum`` applies the
+    log-space over-relaxation of :func:`make_log_step`. ``use_pallas``
+    routes the while_loop body through the fused log-feature Pallas plan
+    (``kernels.ops.geometry_ops(mode="log")``) — auto-on when the backend
+    compiles Pallas (TPU), opt-in interpret mode otherwise.
     """
+    plan = _maybe_pallas_plan(geom, use_pallas, "log")
+    if plan is not None:
+        return _solve_log_plan(
+            plan, a, b, eps=geom.eps, tol=tol, max_iter=max_iter,
+            momentum=momentum, f_init=f_init, g_init=g_init,
+        )
     log_matvec, log_rmatvec = geom.log_operators()
     return _log_domain_solve(
         log_matvec, log_rmatvec, a, b, eps=geom.eps, tol=tol,
-        max_iter=max_iter, f_init=f_init, g_init=g_init,
+        max_iter=max_iter, momentum=momentum, f_init=f_init, g_init=g_init,
     )
 
 
-def _log_domain_solve(
-    log_matvec, log_rmatvec, a, b, *, eps, tol, max_iter,
-    f_init=None, g_init=None,
-) -> SinkhornResult:
+def _log_init(a, b, f_init, g_init):
     n, m = a.shape[0], b.shape[0]
     dtype = a.dtype
     f0 = jnp.zeros((n,), dtype) if f_init is None else f_init
     g0 = jnp.zeros((m,), dtype) if g_init is None else g_init
-    step = make_log_step(log_matvec, log_rmatvec, a, b, eps=eps)
-    it, (f, g), err = run_marginal_loop(
-        step, (f0, g0), tol=tol, max_iter=max_iter, dtype=dtype
-    )
+    return f0, g0, dtype
+
+
+def _finish_log(a, b, f, g, it, err, *, eps, tol) -> SinkhornResult:
     cost = masked_dual_value(a, b, f, g)
     u, v = jnp.exp(f / eps), jnp.exp(g / eps)
     return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
+
+
+def _log_domain_solve(
+    log_matvec, log_rmatvec, a, b, *, eps, tol, max_iter, momentum=1.0,
+    f_init=None, g_init=None,
+) -> SinkhornResult:
+    f0, g0, dtype = _log_init(a, b, f_init, g_init)
+    step = make_log_step(log_matvec, log_rmatvec, a, b, eps=eps,
+                         momentum=momentum)
+    it, (f, g), err = run_marginal_loop(
+        step, (f0, g0), tol=tol, max_iter=max_iter, dtype=dtype
+    )
+    return _finish_log(a, b, f, g, it, err, eps=eps, tol=tol)
+
+
+def _solve_log_plan(plan, a, b, *, eps, tol, max_iter, momentum,
+                    f_init, g_init) -> SinkhornResult:
+    """Log-domain solve with the while_loop body routed through the fused
+    log-feature Pallas plan — semantics identical to
+    :func:`_log_domain_solve` (same iterates, masking, warm starts)."""
+    f0, g0, dtype = _log_init(a, b, f_init, g_init)
+    step, init = plan.make_step(a, b, momentum=momentum)
+    it, (f, g, _), err = run_marginal_loop(
+        step, init(f0, g0), tol=tol, max_iter=max_iter, dtype=dtype
+    )
+    return _finish_log(a, b, f, g, it, err, eps=eps, tol=tol)
 
 
 def sinkhorn_log_factored(

@@ -1,30 +1,49 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-  feature_map  — fused Gaussian positive-feature map (Lemma 1)
+  feature_map  — fused Gaussian positive-feature map (Lemma 1), linear or
+                 log-space epilogue
   kermatvec    — factored-kernel contraction + fused Sinkhorn half-step
-  logmatvec    — stabilized log-space matvec (small-eps path)
+  logmatvec    — stabilized log-space LSE contraction + fused log half-step
+                 (small-eps path)
+  tiling       — shared lane-padding + block-size selection policy
 
 Each kernel ships with a pure-jnp oracle in ``ref.py``; tests sweep shapes
-and dtypes in interpret mode. ``ops.py`` holds the jitted public wrappers.
+and dtypes in interpret mode. ``ops.py`` holds the jitted public wrappers
+plus ``geometry_ops`` — the fused execution plan the solvers route their
+hot loop through (``use_pallas``).
 """
 from .ops import (
+    GeometryOps,
     batched_sinkhorn_halfstep,
     default_interpret,
     feature_contract,
+    feature_matvec,
     fused_batched_sinkhorn_iteration,
+    fused_log_sinkhorn_iteration,
     fused_sinkhorn_iteration,
     gaussian_feature_map,
+    geometry_ops,
+    log_feature_contract,
+    log_halfstep,
     log_matvec,
+    observe_plan_selection,
     sinkhorn_halfstep,
 )
 
 __all__ = [
+    "GeometryOps",
     "batched_sinkhorn_halfstep",
     "default_interpret",
     "feature_contract",
+    "feature_matvec",
     "fused_batched_sinkhorn_iteration",
+    "fused_log_sinkhorn_iteration",
     "fused_sinkhorn_iteration",
     "gaussian_feature_map",
+    "geometry_ops",
+    "log_feature_contract",
+    "log_halfstep",
     "log_matvec",
+    "observe_plan_selection",
     "sinkhorn_halfstep",
 ]

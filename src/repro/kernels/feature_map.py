@@ -5,25 +5,39 @@ materializing the (n, r) squared-distance matrix in HBM: the MXU produces
 the x.u block, the VPU applies the rank-1 norm corrections and the exp, and
 only the finished Xi tile is written back.
 
+``log_space=True`` skips the exp in the epilogue and emits ``log Xi``
+directly — the small-eps path, where the features themselves would
+under/overflow f32 and the log-domain solver consumes ``log Xi`` through
+the fused LSE kernels (``logmatvec``). Padded anchors carry
+``log_const = -inf`` so their log-features are exactly ``-inf`` (the LSE
+identity) and their linear features exactly 0.
+
 Tiling: grid (n/bn, r/br, d/bd). The d axis is the innermost (sequential)
 grid dimension; the x.u partial products accumulate in the f32 output tile,
-and the epilogue on the last d-step applies norms + exp in place. Working
-set per step: bn*bd + br*bd + bn*br floats -> defaults (256, 512, 512) keep
-it < 2 MiB, comfortably inside VMEM with double buffering.
+and the epilogue on the last d-step applies norms (+ exp) in place. Block
+sizes default through ``kernels.tiling.pick_block`` — small d (2-64 in the
+point-cloud workloads) gets one lane-multiple tile instead of padding to
+512. Working set per step: bn*bd + br*bd + bn*br floats — the default caps
+(256, 512, 512) keep it < 2 MiB, comfortably inside VMEM with double
+buffering.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tiling import pad_axis, pick_block
+
 __all__ = ["gaussian_feature_map_kernel", "gaussian_feature_map_pallas"]
 
 
 def gaussian_feature_map_kernel(
-    x_ref, u_ref, x2_ref, u2c_ref, o_ref, *, inv_eps: float, d_steps: int
+    x_ref, u_ref, x2_ref, u2c_ref, o_ref, *, inv_eps: float, d_steps: int,
+    log_space: bool,
 ):
     """One (bn, br) output tile; accumulates over the d grid axis."""
     k = pl.program_id(2)
@@ -50,22 +64,14 @@ def gaussian_feature_map_kernel(
             - (2.0 * inv_eps) * x2_ref[...]
             + (4.0 * inv_eps) * dot
         )
-        o_ref[...] = jnp.exp(log_xi)
-
-
-def _pad_to(arr: jax.Array, axis: int, mult: int, value: float = 0.0):
-    size = arr.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return arr
-    widths = [(0, 0)] * arr.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(arr, widths, constant_values=value)
+        o_ref[...] = log_xi if log_space else jnp.exp(log_xi)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("inv_eps", "block_n", "block_r", "block_d", "interpret"),
+    static_argnames=(
+        "inv_eps", "block_n", "block_r", "block_d", "interpret", "log_space",
+    ),
 )
 def gaussian_feature_map_pallas(
     x: jax.Array,           # (n, d)
@@ -73,18 +79,23 @@ def gaussian_feature_map_pallas(
     log_const: jax.Array,   # (r,) per-anchor offset (incl. -0.5 log r)
     *,
     inv_eps: float,
-    block_n: int = 256,
-    block_r: int = 512,
-    block_d: int = 512,
+    block_n: Optional[int] = None,
+    block_r: Optional[int] = None,
+    block_d: Optional[int] = None,
     interpret: bool = False,
+    log_space: bool = False,
 ) -> jax.Array:
     n, d = x.shape
     r = anchors.shape[0]
+    block_n = pick_block(n, cap=256) if block_n is None else block_n
+    block_r = pick_block(r) if block_r is None else block_r
+    block_d = pick_block(d) if block_d is None else block_d
     # pad: zero-rows of x are sliced away; padded anchors get log_const=-inf
-    # so their features are exactly 0 and harmless to downstream contractions.
-    xp = _pad_to(_pad_to(x, 0, block_n), 1, block_d)
-    up = _pad_to(_pad_to(anchors, 0, block_r), 1, block_d)
-    cp = _pad_to(log_const, 0, block_r, value=-jnp.inf)
+    # so their features are exactly 0 (or -inf log-features) and harmless to
+    # downstream contractions / LSEs.
+    xp = pad_axis(pad_axis(x, 0, block_n), 1, block_d)
+    up = pad_axis(pad_axis(anchors, 0, block_r), 1, block_d)
+    cp = pad_axis(log_const, 0, block_r, value=-jnp.inf)
     npad, dpad = xp.shape
     rpad = up.shape[0]
 
@@ -95,7 +106,8 @@ def gaussian_feature_map_pallas(
     grid = (npad // block_n, rpad // block_r, dpad // block_d)
     out = pl.pallas_call(
         functools.partial(
-            gaussian_feature_map_kernel, inv_eps=inv_eps, d_steps=grid[2]
+            gaussian_feature_map_kernel, inv_eps=inv_eps, d_steps=grid[2],
+            log_space=log_space,
         ),
         grid=grid,
         in_specs=[

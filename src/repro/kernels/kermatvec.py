@@ -10,20 +10,31 @@ Fusing the marginal divide into phase 2 saves an HBM round-trip of the
 of the whole iteration once r is small (the op is memory-bound; see
 EXPERIMENTS.md §Perf napkin math).
 
+``feature_matvec_pallas`` is phase 2 WITHOUT the divide — the solver's
+convergence check needs the raw column marginal ``K^T u`` once per
+iteration, and it reuses the same tiling.
+
 The batch dim B (independent Sinkhorn problems — GAN minibatch pairs) rides
-whole in both kernels; the MXU sees (bn x r) @ (r x B) tiles.
+whole in both kernels; the MXU sees (bn x r) @ (r x B) tiles. All trailing
+dims (r, B) are padded to lane multiples via ``kernels.tiling`` with
+neutral fills (0 for features/scalings, 1 for marginals feeding a divide)
+and sliced back.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tiling import LANE, pad_axis, pick_block
+
 __all__ = [
     "feature_contract_pallas",
     "sinkhorn_halfstep_pallas",
+    "feature_matvec_pallas",
 ]
 
 
@@ -43,14 +54,6 @@ def _feature_contract_kernel(xi_ref, u_ref, t_ref):
     )
 
 
-def _pad0(arr, mult, value=0.0):
-    pad = (-arr.shape[0]) % mult
-    if pad == 0:
-        return arr
-    widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
-    return jnp.pad(arr, widths, constant_values=value)
-
-
 @functools.partial(
     jax.jit, static_argnames=("block_n", "block_r", "interpret")
 )
@@ -58,31 +61,31 @@ def feature_contract_pallas(
     xi: jax.Array,          # (n, r)
     u: jax.Array,           # (n, B)
     *,
-    block_n: int = 512,
-    block_r: int = 512,
+    block_n: Optional[int] = None,
+    block_r: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """t = Xi^T u, shape (r, B). Zero-padded rows contribute nothing."""
+    """t = Xi^T u, shape (r, B). Zero-padded rows/columns contribute 0."""
     n, r = xi.shape
     B = u.shape[1]
-    xp = _pad0(xi, block_n)
-    up = _pad0(u, block_n)
-    rpad = (-r) % block_r
-    if rpad:
-        xp = jnp.pad(xp, ((0, 0), (0, rpad)))
+    block_n = pick_block(n) if block_n is None else block_n
+    block_r = pick_block(r) if block_r is None else block_r
+    xp = pad_axis(pad_axis(xi, 0, block_n), 1, block_r)
+    up = pad_axis(pad_axis(u, 0, block_n), 1, LANE)
+    Bp = up.shape[1]
     grid = (xp.shape[1] // block_r, xp.shape[0] // block_n)
     t = pl.pallas_call(
         _feature_contract_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n, block_r), lambda i, j: (j, i)),
-            pl.BlockSpec((block_n, B), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, Bp), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((block_r, B), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((xp.shape[1], B), jnp.float32),
+        out_specs=pl.BlockSpec((block_r, Bp), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[1], Bp), jnp.float32),
         interpret=interpret,
     )(xp, up)
-    return t[:r]
+    return t[:r, :B]
 
 
 def _halfstep_kernel(xi_ref, t_ref, marg_ref, o_ref):
@@ -96,32 +99,73 @@ def _halfstep_kernel(xi_ref, t_ref, marg_ref, o_ref):
     o_ref[...] = marg_ref[...] / kv
 
 
+def _matvec_kernel(xi_ref, t_ref, o_ref):
+    """o = Xi_blk @ t — the divide-free twin (convergence-check marginal)."""
+    o_ref[...] = jax.lax.dot_general(
+        xi_ref[...],
+        t_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _matvec_like_call(kernel, xi, t, extra, *, block_n, interpret):
+    """Shared tiling for the (n, r) @ (r, B) kernels: r rides whole (lane
+    padded), n blocks, B lane padded; returns the (n, B) slice."""
+    n, r = xi.shape
+    B = t.shape[1]
+    block_n = pick_block(n) if block_n is None else block_n
+    xp = pad_axis(pad_axis(xi, 0, block_n), 1, LANE)
+    tp = pad_axis(pad_axis(t, 0, LANE), 1, LANE)
+    rp, Bp = tp.shape
+    operands = [xp, tp]
+    in_specs = [
+        pl.BlockSpec((block_n, rp), lambda i: (i, 0)),
+        pl.BlockSpec((rp, Bp), lambda i: (0, 0)),
+    ]
+    if extra is not None:
+        operands.append(extra)
+        in_specs.append(pl.BlockSpec((block_n, Bp), lambda i: (i, 0)))
+    grid = (xp.shape[0] // block_n,)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_n, Bp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], Bp), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out[:n, :B]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def sinkhorn_halfstep_pallas(
     xi: jax.Array,          # (n, r) features of the side being updated
     t: jax.Array,           # (r, B)
     marg: jax.Array,        # (n, B)
     *,
-    block_n: int = 512,
+    block_n: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """out = marg / (Xi @ t), shape (n, B). r rides whole in VMEM (r<=4096)."""
-    n, r = xi.shape
-    B = marg.shape[1]
-    xp = _pad0(xi, block_n)
-    # padded rows: marg=1 so the divide yields finite garbage we slice away
-    mp = _pad0(marg, block_n, value=1.0)
-    grid = (xp.shape[0] // block_n,)
-    out = pl.pallas_call(
-        _halfstep_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, r), lambda i: (i, 0)),
-            pl.BlockSpec((r, B), lambda i: (0, 0)),
-            pl.BlockSpec((block_n, B), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_n, B), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((xp.shape[0], B), jnp.float32),
-        interpret=interpret,
-    )(xp, t, mp)
-    return out[:n]
+    """out = marg / (Xi @ t), shape (n, B). r rides whole in VMEM (r<=4096).
+
+    Padded rows/columns: marg=1 so the divide yields finite garbage (or a
+    harmless inf for all-zero feature rows) that the slice discards.
+    """
+    block_n = pick_block(xi.shape[0]) if block_n is None else block_n
+    mp = pad_axis(pad_axis(marg, 0, block_n, value=1.0), 1, LANE, value=1.0)
+    return _matvec_like_call(_halfstep_kernel, xi, t, mp,
+                             block_n=block_n, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def feature_matvec_pallas(
+    xi: jax.Array,          # (n, r)
+    t: jax.Array,           # (r, B)
+    *,
+    block_n: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """out = Xi @ t, shape (n, B) — no divide (marginal-check matvec)."""
+    return _matvec_like_call(_matvec_kernel, xi, t, None,
+                             block_n=block_n, interpret=interpret)

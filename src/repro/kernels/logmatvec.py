@@ -1,27 +1,62 @@
-"""Pallas TPU kernel: stabilized log-space factored matvec.
+"""Pallas TPU kernels: stabilized log-space factored Sinkhorn operators.
 
-    out_j = logsumexp_k( log_m[j, k] + t[k] )
+Three kernels cover the exact two-stage log-domain update (small-eps regime
+where scalings under/overflow f32):
 
-This is the per-row half of the exact two-stage log-domain Sinkhorn update
-(small-eps regime where scalings under/overflow f32). Row-local max
-stabilization happens inside the tile, so nothing quadratic ever leaves
-VMEM. r rides whole per tile (r <= 4096 in all configs).
+  * ``log_matvec_pallas``          — the original single-column row-LSE
+        out_j = logsumexp_k( log_m[j, k] + t[k] )
+    with EXACT per-row max stabilization (B = 1 keeps the joint max 2D).
+  * ``log_feature_contract_pallas`` — stage 1 of the fused log iteration:
+        t[k, c] = logsumexp_i( log_w[i, k] + s[i, c] )      (r, B)
+    reduction over n via online ``logaddexp`` accumulation across n-blocks.
+  * ``log_halfstep_pallas``         — stage 2 with the DIVIDE-FREE log
+    half-step fused (the log-space twin of ``sinkhorn_halfstep_pallas``):
+        out[j, c] = scale * ( lmarg[j, c] - logsumexp_k(log_w[j,k]+t[k,c]) )
+    ``scale=eps`` yields the potential update  g = eps (log b - log K^T u);
+    ``scale=-1, lmarg=0`` yields the raw LSE (convergence check).
+
+Stabilization in the B-column kernels is EXACT: the B loop is unrolled at
+trace time (B is static) and each column takes a 2-D ``log_w + s[:, c]``
+broadcast with the true joint max — identical numerics to the XLA
+``logsumexp`` two-stage path, which is what makes the fused log hot loop
+elementwise-match the operator path even at small eps where log entries
+span hundreds of nats. B is therefore expected SMALL (the solvers run at
+B = 1 and batch via vmap, which adds a leading Pallas grid axis); a
+separable max-shift matmul would scale to wide B but underflows ~87 nats
+below its bound, which is exactly the regime the log domain exists for.
+
+Row-local stabilization happens inside the tile, so nothing quadratic ever
+leaves VMEM. r rides whole per tile (r <= 4096 in all configs) and is
+lane-padded with ``-inf`` (the logsumexp identity) via ``kernels.tiling``
+then sliced back.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["log_matvec_pallas"]
+from .tiling import LANE, pad_axis, pick_block
+
+__all__ = [
+    "log_matvec_pallas",
+    "log_feature_contract_pallas",
+    "log_halfstep_pallas",
+]
+
+
+def _finite_or_zero(m: jax.Array) -> jax.Array:
+    """Pin all-(-inf) shift rows/cols to 0 so ``x - m`` never produces NaN."""
+    return jnp.where(jnp.isfinite(m), m, 0.0)
 
 
 def _log_matvec_kernel(logm_ref, t_ref, o_ref):
     s = logm_ref[...] + t_ref[...]                    # (bm, r)
-    m = jnp.max(s, axis=1, keepdims=True)             # row max
-    m = jnp.where(jnp.isfinite(m), m, 0.0)            # all -inf rows -> 0
+    m = jnp.max(s, axis=1, keepdims=True)             # exact joint row max
+    m = _finite_or_zero(m)
     o_ref[...] = m + jnp.log(
         jnp.sum(jnp.exp(s - m), axis=1, keepdims=True)
     )
@@ -32,22 +67,148 @@ def log_matvec_pallas(
     log_m: jax.Array,       # (m, r)
     t: jax.Array,           # (r,)
     *,
-    block_m: int = 512,
+    block_m: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     m, r = log_m.shape
-    pad = (-m) % block_m
-    lp = jnp.pad(log_m, ((0, pad), (0, 0)), constant_values=-jnp.inf)
+    block_m = pick_block(m) if block_m is None else block_m
+    lp = pad_axis(pad_axis(log_m, 0, block_m, value=-jnp.inf),
+                  1, LANE, value=-jnp.inf)
+    tp = pad_axis(t, 0, LANE)       # added to -inf columns: fill irrelevant
+    rp = lp.shape[1]
     grid = (lp.shape[0] // block_m,)
     out = pl.pallas_call(
         _log_matvec_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_m, r), lambda i: (i, 0)),
-            pl.BlockSpec((1, r), lambda i: (0, 0)),
+            pl.BlockSpec((block_m, rp), lambda i: (i, 0)),
+            pl.BlockSpec((1, rp), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((lp.shape[0], 1), jnp.float32),
         interpret=interpret,
-    )(lp, t[None, :])
+    )(lp, tp[None, :])
     return out[:m, 0]
+
+
+def _log_contract_kernel(lw_ref, s_ref, t_ref, *, n_cols: int):
+    """t = logaddexp(t, LSE_i(lw_blk + s_blk)); n sequential grid axis.
+
+    Per column c the (bn, br) broadcast ``lw + s[:, c]`` is reduced with
+    its exact joint column max — B is unrolled at trace time."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        t_ref[...] = jnp.full_like(t_ref, -jnp.inf)
+
+    lw = lw_ref[...]                                   # (bn, br)
+    cols = []
+    for c in range(n_cols):
+        z = lw + s_ref[:, c][:, None]                  # (bn, br)
+        m = _finite_or_zero(jnp.max(z, axis=0, keepdims=True))
+        cols.append(
+            (m + jnp.log(jnp.sum(jnp.exp(z - m), axis=0, keepdims=True)))[0]
+        )                                              # (br,)
+    contrib = jnp.stack(cols, axis=1)                  # (br, B)
+    t_ref[...] = jnp.logaddexp(t_ref[...], contrib)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_r", "interpret")
+)
+def log_feature_contract_pallas(
+    log_w: jax.Array,       # (n, r) log-features
+    s: jax.Array,           # (n, B) log-scalings (f / eps columns)
+    *,
+    block_n: Optional[int] = None,
+    block_r: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """t[k, c] = LSE_i(log_w[i, k] + s[i, c]), shape (r, B).
+
+    The log-space twin of ``feature_contract_pallas``: -inf-padded rows
+    are the LSE identity, so padding contributes nothing. B stays
+    unpadded — the column loop is unrolled (B = 1 on the solver path).
+    """
+    n, r = log_w.shape
+    B = s.shape[1]
+    block_n = pick_block(n) if block_n is None else block_n
+    block_r = pick_block(r) if block_r is None else block_r
+    lp = pad_axis(pad_axis(log_w, 0, block_n, value=-jnp.inf),
+                  1, block_r, value=-jnp.inf)
+    sp = pad_axis(s, 0, block_n, value=-jnp.inf)
+    grid = (lp.shape[1] // block_r, lp.shape[0] // block_n)
+    t = pl.pallas_call(
+        functools.partial(_log_contract_kernel, n_cols=B),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_r), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, B), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, B), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lp.shape[1], B), jnp.float32),
+        interpret=interpret,
+    )(lp, sp)
+    return t[:r]
+
+
+def _log_halfstep_kernel(lw_ref, t_ref, lmarg_ref, o_ref, *, scale: float,
+                         n_cols: int):
+    """o = scale * (lmarg - LSE_k(lw + t)) — LSE matvec + log half-step
+    (subtract instead of divide) in one VMEM pass. Per column c the
+    (bm, r) broadcast ``lw + t[:, c]`` takes its exact joint row max — B
+    is unrolled at trace time."""
+    lw = lw_ref[...]                                   # (bm, r)
+    cols = []
+    for c in range(n_cols):
+        z = lw + t_ref[:, c][None, :]                  # (bm, r)
+        m = _finite_or_zero(jnp.max(z, axis=1, keepdims=True))
+        lse = m + jnp.log(jnp.sum(jnp.exp(z - m), axis=1, keepdims=True))
+        cols.append(lse[:, 0])                         # (bm,)
+    lse_all = jnp.stack(cols, axis=1)                  # (bm, B)
+    o_ref[...] = scale * (lmarg_ref[...] - lse_all)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_m", "interpret")
+)
+def log_halfstep_pallas(
+    log_w: jax.Array,       # (m, r) log-features of the side being updated
+    t: jax.Array,           # (r, B) stage-1 output
+    lmarg: jax.Array,       # (m, B) log target marginal (0 for raw LSE)
+    *,
+    scale: float = 1.0,
+    block_m: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """out = scale * (lmarg - LSE_k(log_w[:, k] + t[k, :])), shape (m, B).
+
+    The B-column generalization of :func:`log_matvec_pallas` with the
+    divide-free log half-step fused: ``scale=eps`` gives the potential
+    update ``eps (log b - log K^T e^{f/eps})`` directly; ``scale=-1`` with
+    ``lmarg=0`` recovers the raw LSE. r rides whole in VMEM; B stays
+    unpadded (unrolled columns, B = 1 on the solver path).
+    """
+    m, r = log_w.shape
+    B = t.shape[1]
+    block_m = pick_block(m) if block_m is None else block_m
+    lp = pad_axis(pad_axis(log_w, 0, block_m, value=-jnp.inf),
+                  1, LANE, value=-jnp.inf)
+    tp = pad_axis(t, 0, LANE, value=-jnp.inf)
+    mp = pad_axis(lmarg, 0, block_m)
+    rp = tp.shape[0]
+    grid = (lp.shape[0] // block_m,)
+    out = pl.pallas_call(
+        functools.partial(_log_halfstep_kernel, scale=scale, n_cols=B),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, rp), lambda i: (i, 0)),
+            pl.BlockSpec((rp, B), lambda i: (0, 0)),
+            pl.BlockSpec((block_m, B), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lp.shape[0], B), jnp.float32),
+        interpret=interpret,
+    )(lp, tp, mp)
+    return out[:m]

@@ -1,4 +1,4 @@
-"""Jitted public wrappers over the Pallas kernels.
+"""Jitted public wrappers over the Pallas kernels + the fused solve plans.
 
 On CPU (this container) every kernel runs in ``interpret=True`` mode — the
 kernel body executes in Python/XLA-CPU for correctness validation; on TPU
@@ -12,38 +12,69 @@ run on hardware.
 ``geometry_ops`` is the consumer of the Geometry layer's ``pallas_ops()``
 hook: the GEOMETRY decides which fused kernels apply to its cost family
 (fused Lemma-1 feature map + feature_contract + half-step for Gaussian
-point clouds, feature_contract + half-step for explicit factors), and call
-sites just ask for the plan instead of hard-coding a kernel choice.
+point clouds, feature_contract + half-step for explicit factors, the LSE
+twins for log-features), and call sites just ask for the plan instead of
+hard-coding a kernel choice. The returned :class:`GeometryOps` carries,
+besides the canonical fused ``iteration``, a ``make_step`` builder whose
+step is drop-in compatible with ``core.sinkhorn.run_marginal_loop`` — that
+is how ``sinkhorn_geometry`` / ``sinkhorn_log_geometry`` route their
+``lax.while_loop`` hot loop through the fused kernels (``use_pallas``).
+
+``observe_plan_selection`` is the test hook: while the context is active,
+every fused-plan selection on a solve path appends an event dict, so tests
+can assert the hot loop really ran through the plan.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .feature_map import gaussian_feature_map_pallas
-from .kermatvec import feature_contract_pallas, sinkhorn_halfstep_pallas
-from .logmatvec import log_matvec_pallas
+from .kermatvec import (
+    feature_contract_pallas,
+    feature_matvec_pallas,
+    sinkhorn_halfstep_pallas,
+)
+from .logmatvec import (
+    log_feature_contract_pallas,
+    log_halfstep_pallas,
+    log_matvec_pallas,
+)
 
 __all__ = [
     "default_interpret",
     "gaussian_feature_map",
     "feature_contract",
+    "feature_matvec",
     "sinkhorn_halfstep",
     "log_matvec",
+    "log_feature_contract",
+    "log_halfstep",
     "fused_sinkhorn_iteration",
+    "fused_log_sinkhorn_iteration",
     "batched_sinkhorn_halfstep",
     "fused_batched_sinkhorn_iteration",
+    "relax_scaling",
+    "relax_log",
     "GeometryOps",
     "geometry_ops",
+    "observe_plan_selection",
+    "notify_plan_selected",
 ]
 
 
 def default_interpret() -> bool:
     """Pallas interpret mode iff we're not actually on TPU."""
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Thin interpret-resolving wrappers
+# ---------------------------------------------------------------------------
 
 
 def gaussian_feature_map(
@@ -53,10 +84,12 @@ def gaussian_feature_map(
     *,
     inv_eps: float,
     interpret: Optional[bool] = None,
+    log_space: bool = False,
 ) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
     return gaussian_feature_map_pallas(
-        x, anchors, log_const, inv_eps=inv_eps, interpret=interpret
+        x, anchors, log_const, inv_eps=inv_eps, interpret=interpret,
+        log_space=log_space,
     )
 
 
@@ -65,6 +98,13 @@ def feature_contract(
 ) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
     return feature_contract_pallas(xi, u, interpret=interpret)
+
+
+def feature_matvec(
+    xi: jax.Array, t: jax.Array, *, interpret: Optional[bool] = None
+) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    return feature_matvec_pallas(xi, t, interpret=interpret)
 
 
 def sinkhorn_halfstep(
@@ -83,6 +123,31 @@ def log_matvec(
 ) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
     return log_matvec_pallas(log_m, t, interpret=interpret)
+
+
+def log_feature_contract(
+    log_w: jax.Array, s: jax.Array, *, interpret: Optional[bool] = None
+) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    return log_feature_contract_pallas(log_w, s, interpret=interpret)
+
+
+def log_halfstep(
+    log_w: jax.Array,
+    t: jax.Array,
+    lmarg: jax.Array,
+    *,
+    scale: float = 1.0,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    return log_halfstep_pallas(log_w, t, lmarg, scale=scale,
+                               interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused full iterations
+# ---------------------------------------------------------------------------
 
 
 def fused_sinkhorn_iteration(
@@ -108,6 +173,32 @@ def fused_sinkhorn_iteration(
     s = feature_contract(zeta, v, interpret=interpret)
     u_new = sinkhorn_halfstep(xi, s, a, interpret=interpret)
     return u_new, v
+
+
+def fused_log_sinkhorn_iteration(
+    log_xi: jax.Array,      # (n, r)
+    log_zeta: jax.Array,    # (m, r)
+    loga: jax.Array,        # (n, B) masked-log weights
+    logb: jax.Array,        # (m, B)
+    f: jax.Array,           # (n, B) current potential
+    *,
+    eps: float,
+    interpret: Optional[bool] = None,
+):
+    """One full LOG-domain Sinkhorn iteration, Pallas end to end:
+
+        t  = LSE-contract(logXi, f/eps)                  (r, B)
+        g  = eps (log b - LSE(logZeta + t))              (fused log halfstep)
+        s  = LSE-contract(logZeta, g/eps)                (r, B)
+        f' = eps (log a - LSE(logXi + s))                (fused log halfstep)
+
+    Returns (f', g) — the small-eps twin of :func:`fused_sinkhorn_iteration`.
+    """
+    t = log_feature_contract(log_xi, f / eps, interpret=interpret)
+    g = log_halfstep(log_zeta, t, logb, scale=eps, interpret=interpret)
+    s = log_feature_contract(log_zeta, g / eps, interpret=interpret)
+    f_new = log_halfstep(log_xi, s, loga, scale=eps, interpret=interpret)
+    return f_new, g
 
 
 def batched_sinkhorn_halfstep(
@@ -151,12 +242,9 @@ def fused_batched_sinkhorn_iteration(
     shared kernel, B marginal columns), every problem here has its own
     feature matrices — the GAN-minibatch shape.
 
-    This is the TPU lowering of the batched engine's hot loop (vmap adds B
-    as a leading Pallas grid axis). ``api.BatchedSinkhorn`` itself lowers
-    the same math through plain XLA contractions — on CPU these kernels
-    only run in interpret mode, so the engine does not route through them;
-    wiring the engine's factored method onto this path is the TPU
-    deployment step.
+    ``api.BatchedSinkhorn`` reaches the same kernels through its vmapped
+    per-problem solver when ``use_pallas`` is on: vmap adds B as a leading
+    Pallas grid axis, exactly as here.
     """
     v = batched_sinkhorn_halfstep(zeta, u, b, xi, interpret=interpret)
     u_new = batched_sinkhorn_halfstep(xi, v, a, zeta, interpret=interpret)
@@ -164,60 +252,242 @@ def fused_batched_sinkhorn_iteration(
 
 
 # ---------------------------------------------------------------------------
+# Over-relaxation (shared with the XLA solvers in core.sinkhorn)
+# ---------------------------------------------------------------------------
+
+
+def relax_scaling(new: jax.Array, old: jax.Array,
+                  momentum: float) -> jax.Array:
+    """Geometric over-relaxation  u <- old^{1-w} * new^w  (Thibault et al.),
+    the scaling-space form. ``momentum`` is a trace-time constant.
+
+    Zero scalings (zero-weight / bucket-padded atoms pin u = 0 from the
+    first iteration) bypass the blend: for w > 1 the geometric mean hits
+    0^{1-w} = inf and 0 * inf = NaN, which would poison the marginal error
+    and silently stop the while_loop. Masked entries take ``new`` verbatim
+    — the exact twin of the -inf guard in :func:`relax_log`."""
+    if momentum == 1.0:
+        return new
+    mixed = old ** (1.0 - momentum) * new ** momentum
+    return jnp.where((old > 0) & (new > 0), mixed, new)
+
+
+def relax_log(new: jax.Array, old: jax.Array, momentum: float) -> jax.Array:
+    """Log-space over-relaxation  f <- (1-w) old + w new  — the exact log of
+    the geometric scaling relaxation. Atoms whose potential is pinned at
+    -inf (zero weight) bypass the blend: (1-w)*(-inf) + w*(-inf) is NaN for
+    w > 1, so the masked entries take ``new`` verbatim."""
+    if momentum == 1.0:
+        return new
+    mixed = (1.0 - momentum) * old + momentum * new
+    return jnp.where(jnp.isfinite(old) & jnp.isfinite(new), mixed, new)
+
+
+# ---------------------------------------------------------------------------
 # Geometry-chosen dispatch (the pallas_ops() hook consumer)
 # ---------------------------------------------------------------------------
+
+
+def _masked_log(w: jax.Array) -> jax.Array:
+    """log w with log(0) pinned to -inf without 0*inf NaN hazards (local
+    twin of ``core.geometry._masked_log`` — kernels must not import core)."""
+    return jnp.where(w > 0, jnp.log(jnp.where(w > 0, w, 1.0)), -jnp.inf)
 
 
 class GeometryOps(NamedTuple):
     """Fused Pallas execution plan for one geometry's cost family.
 
-    ``features``  — the materialized positive factors (xi, zeta) the plan
-                    operates on; for Gaussian point clouds these come out
-                    of the fused feature-map kernel (MXU dot + rank-1 norm
-                    corrections + exp, no (n, r) sq-dist tensor in HBM).
-    ``iteration`` — ``(a, b, u) -> (u', v)``: one full Alg.-1 iteration
-                    (contract, half-step, contract, half-step), marginals
-                    and scalings as (n, B)/(m, B) column blocks.
+    ``mode``      — "scaling" (features/scalings) or "log" (log-features/
+                    potentials, the small-eps path).
+    ``kind``      — the ``pallas_ops()`` spec kind the plan was built from.
+    ``features``  — the materialized factors the plan operates on:
+                    (xi, zeta) in scaling mode, (log_xi, log_zeta) in log
+                    mode; for Gaussian point clouds these come out of the
+                    fused feature-map kernel (MXU dot + rank-1 norm
+                    corrections + exp — or no exp in log mode — with no
+                    (n, r) sq-dist tensor in HBM).
+    ``iteration`` — one full fused Alg.-1 iteration:
+                    scaling  ``(a, b, u) -> (u', v)``,
+                    log      ``(loga, logb, f) -> (f', g)``,
+                    marginals/scalings/potentials as (n, B)/(m, B) columns.
+    ``make_step`` — ``(a, b, *, momentum, err_reduce) -> (step, init)``
+                    where ``step`` is drop-in compatible with
+                    ``core.sinkhorn.run_marginal_loop`` and ELEMENTWISE
+                    matches ``make_scaling_step`` / ``make_log_step`` over
+                    the geometry's XLA operators (same iterates, same
+                    marginal error, same masking) — the solver hot loop.
+                    ``init`` lifts the primal/dual start values into the
+                    loop carry, which tacks on the reusable intermediate
+                    (``s = K^T u`` in scaling mode, the stage-1 LSE
+                    ``t = LSE(logXi + f/eps)`` in log mode) so the
+                    convergence check costs nothing extra per iteration.
+    ``apply_kt``  — scaling mode only: ``u (n,) -> K^T u (m,)`` for the
+                    loop-carry initialization.
+    ``eps``       — log mode only: the regularization the potentials live
+                    at.
     """
 
+    mode: str
+    kind: str
     features: Tuple[jax.Array, jax.Array]
-    iteration: Callable[[jax.Array, jax.Array, jax.Array],
-                        Tuple[jax.Array, jax.Array]]
+    iteration: Callable
+    make_step: Callable
+    apply_kt: Optional[Callable] = None
+    eps: Optional[float] = None
 
 
-def _factored_plan(xi, zeta, interpret) -> GeometryOps:
+def _scaling_plan(kind: str, xi, zeta, interpret) -> GeometryOps:
     def iteration(a, b, u):
-        return fused_sinkhorn_iteration(
-            xi, zeta, a, b, u, interpret=interpret
+        return fused_sinkhorn_iteration(xi, zeta, a, b, u,
+                                        interpret=interpret)
+
+    def apply_kt(u):
+        t = feature_contract(xi, u[:, None], interpret=interpret)
+        return feature_matvec(zeta, t, interpret=interpret)[:, 0]
+
+    def make_step(a, b, *, momentum: float = 1.0,
+                  err_reduce: Callable = jnp.sum):
+        ac = a[:, None]
+
+        def step(carry):
+            u, v, s = carry
+            v_new = relax_scaling(b / s, v, momentum)
+            t = feature_contract(zeta, v_new[:, None], interpret=interpret)
+            if momentum == 1.0:
+                # matvec + marginal divide fused in one VMEM pass
+                u_new = sinkhorn_halfstep(xi, t, ac, interpret=interpret)[:, 0]
+            else:
+                kv = feature_matvec(xi, t, interpret=interpret)[:, 0]
+                u_new = relax_scaling(a / kv, u, momentum)
+            t2 = feature_contract(xi, u_new[:, None], interpret=interpret)
+            s_new = feature_matvec(zeta, t2, interpret=interpret)[:, 0]
+            err = err_reduce(jnp.abs(v_new * s_new - b))
+            return (u_new, v_new, s_new), err
+
+        def init(u0, v0):
+            return (u0, v0, apply_kt(u0))
+
+        return step, init
+
+    return GeometryOps(mode="scaling", kind=kind, features=(xi, zeta),
+                       iteration=iteration, make_step=make_step,
+                       apply_kt=apply_kt)
+
+
+def _log_plan(kind: str, log_xi, log_zeta, eps: float,
+              interpret) -> GeometryOps:
+    def iteration(loga, logb, f):
+        return fused_log_sinkhorn_iteration(
+            log_xi, log_zeta, loga, logb, f, eps=eps, interpret=interpret
         )
 
-    return GeometryOps(features=(xi, zeta), iteration=iteration)
+    def contract_f(f):
+        """Stage-1 LSE over logXi — the carried intermediate: computing it
+        once per iteration serves BOTH the convergence check and the next
+        iteration's g-update (the log twin of carrying ``s = K^T u``)."""
+        return log_feature_contract(log_xi, f[:, None] / eps,
+                                    interpret=interpret)
+
+    def make_step(a, b, *, momentum: float = 1.0,
+                  err_reduce: Callable = jnp.sum):
+        loga = _masked_log(a)[:, None]
+        logb = _masked_log(b)[:, None]
+        zero = jnp.zeros_like(logb)
+
+        def step(carry):
+            f, g, t1 = carry                     # t1 = LSE(logXi + f/eps)
+            g_new = relax_log(
+                log_halfstep(log_zeta, t1, logb, scale=eps,
+                             interpret=interpret)[:, 0], g, momentum)
+            t2 = log_feature_contract(log_zeta, g_new[:, None] / eps,
+                                      interpret=interpret)
+            f_new = relax_log(
+                log_halfstep(log_xi, t2, loga, scale=eps,
+                             interpret=interpret)[:, 0], f, momentum)
+            t3 = contract_f(f_new)
+            lse = log_halfstep(log_zeta, t3, zero, scale=-1.0,
+                               interpret=interpret)[:, 0]
+            log_col = lse + g_new / eps
+            err = err_reduce(jnp.abs(jnp.exp(log_col) - b))
+            return (f_new, g_new, t3), err
+
+        def init(f0, g0):
+            return (f0, g0, contract_f(f0))
+
+        return step, init
+
+    return GeometryOps(mode="log", kind=kind, features=(log_xi, log_zeta),
+                       iteration=iteration, make_step=make_step, eps=eps)
 
 
-def geometry_ops(geom, *, interpret: Optional[bool] = None
-                 ) -> Optional[GeometryOps]:
+def geometry_ops(geom, *, interpret: Optional[bool] = None,
+                 mode: str = "scaling") -> Optional[GeometryOps]:
     """Fused-kernel plan for ``geom``, chosen by the geometry itself.
 
-    Returns ``None`` when the geometry declares no fused path (dense
-    costs, signed Nystrom factors, grids) — callers then fall back to the
-    geometry's XLA operators. The spec format is owned by
-    ``Geometry.pallas_ops``; this function only maps specs to kernels.
+    ``mode="scaling"`` builds the linear-feature plan (Alg. 1 on scalings);
+    ``mode="log"`` builds the log-feature plan (small-eps potentials, exact
+    two-stage LSE through the fused log kernels). Returns ``None`` when the
+    geometry declares no fused path (dense costs, signed Nystrom factors,
+    grids) — callers then fall back to the geometry's XLA operators. The
+    spec format is owned by ``Geometry.pallas_ops``; this function only
+    maps specs to kernels.
     """
+    if mode not in ("scaling", "log"):
+        raise ValueError(f"unknown plan mode {mode!r}")
     spec = geom.pallas_ops()
     if spec is None:
         return None
     interpret = default_interpret() if interpret is None else interpret
     kind = spec["kind"]
     if kind == "factored":
-        return _factored_plan(spec["xi"], spec["zeta"], interpret)
+        xi, zeta = spec["xi"], spec["zeta"]
+        if mode == "scaling":
+            return _scaling_plan(kind, xi, zeta, interpret)
+        return _log_plan(kind, _masked_log(xi), _masked_log(zeta),
+                         float(geom.eps), interpret)
+    if kind == "log_factored":
+        lxi, lzt = spec["log_xi"], spec["log_zeta"]
+        if mode == "log":
+            return _log_plan(kind, lxi, lzt, float(spec["eps"]), interpret)
+        return _scaling_plan(kind, jnp.exp(lxi), jnp.exp(lzt), interpret)
     if kind == "gaussian":
-        xi = gaussian_feature_map(
-            spec["x"], spec["anchors"], spec["log_const"],
+        fmap = functools.partial(
+            gaussian_feature_map,
+            anchors=spec["anchors"], log_const=spec["log_const"],
             inv_eps=spec["inv_eps"], interpret=interpret,
+            log_space=(mode == "log"),
         )
-        zeta = gaussian_feature_map(
-            spec["y"], spec["anchors"], spec["log_const"],
-            inv_eps=spec["inv_eps"], interpret=interpret,
-        )
-        return _factored_plan(xi, zeta, interpret)
+        xi, zeta = fmap(spec["x"]), fmap(spec["y"])
+        if mode == "scaling":
+            return _scaling_plan(kind, xi, zeta, interpret)
+        return _log_plan(kind, xi, zeta, float(geom.eps), interpret)
     raise ValueError(f"unknown pallas_ops spec kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Plan-selection hook (test observability)
+# ---------------------------------------------------------------------------
+
+_PLAN_OBSERVERS: List[Callable[[dict], None]] = []
+
+
+def notify_plan_selected(event: dict) -> None:
+    """Called by the solvers when a fused plan is installed on a hot loop.
+
+    Fires at TRACE time (plan selection is a Python-level decision), so a
+    jitted solve notifies on its first call per compilation."""
+    for cb in list(_PLAN_OBSERVERS):
+        cb(dict(event))
+
+
+@contextlib.contextmanager
+def observe_plan_selection():
+    """Collect plan-selection events: ``with observe_plan_selection() as ev:
+    solve(...)`` then assert on ``ev`` (list of dicts with ``geometry`` /
+    ``mode`` / ``kind`` keys)."""
+    events: List[dict] = []
+    _PLAN_OBSERVERS.append(events.append)
+    try:
+        yield events
+    finally:
+        _PLAN_OBSERVERS.remove(events.append)

@@ -10,8 +10,11 @@ import jax.numpy as jnp
 __all__ = [
     "gaussian_feature_map_ref",
     "feature_contract_ref",
+    "feature_matvec_ref",
     "sinkhorn_halfstep_ref",
     "log_matvec_ref",
+    "log_feature_contract_ref",
+    "log_halfstep_ref",
 ]
 
 
@@ -43,6 +46,26 @@ def sinkhorn_halfstep_ref(
     return marg / (xi @ t)
 
 
+def feature_matvec_ref(xi: jax.Array, t: jax.Array) -> jax.Array:
+    """out = Xi @ t : (n, r), (r, B) -> (n, B). The divide-free twin of
+    :func:`sinkhorn_halfstep_ref` (marginal-check matvec)."""
+    return xi @ t
+
+
 def log_matvec_ref(log_m: jax.Array, t: jax.Array) -> jax.Array:
     """out_j = logsumexp_k(log_m[j, k] + t[k]) : (m, r), (r,) -> (m,)."""
     return jax.scipy.special.logsumexp(log_m + t[None, :], axis=1)
+
+
+def log_feature_contract_ref(log_w: jax.Array, s: jax.Array) -> jax.Array:
+    """t[k, c] = LSE_i(log_w[i, k] + s[i, c]) : (n, r), (n, B) -> (r, B)."""
+    return jax.scipy.special.logsumexp(
+        log_w[:, :, None] + s[:, None, :], axis=0)
+
+
+def log_halfstep_ref(log_w: jax.Array, t: jax.Array, lmarg: jax.Array,
+                     *, scale: float = 1.0) -> jax.Array:
+    """out = scale * (lmarg - LSE_k(log_w[:, k] + t[k, :])), shape (m, B)."""
+    lse = jax.scipy.special.logsumexp(
+        log_w[:, :, None] + t[None, :, :], axis=1)
+    return scale * (lmarg - lse)

@@ -190,6 +190,67 @@ def test_batched_point_cloud_mode(fixture):
                                    rtol=1e-5)
 
 
+def test_momentum_threaded_or_rejected_for_every_method(fixture):
+    """Over-relaxation regression: ``momentum != 1`` used to be silently
+    DROPPED by the log-domain and accelerated runners. Now every method in
+    METHODS either changes the iterate trajectory or raises a clear error
+    naming momentum."""
+    from repro.core.api import METHODS
+
+    x, y, U, fm, xi, zeta = fixture
+    feat_p = OTProblem.from_features(xi, zeta, eps=EPS)
+    cloud_p = OTProblem.from_point_clouds(x, y, U, eps=EPS)
+    for method in METHODS:
+        prob = cloud_p if method in ("arccos", "nystrom") else feat_p
+        if method in ("accelerated", "sharded"):
+            with pytest.raises(ValueError, match="momentum"):
+                solve(prob, method=method, momentum=1.3, rank=16)
+            continue
+        # fixed iteration count, compare raw trajectories
+        kw = dict(method=method, tol=0.0, max_iter=6, rank=16,
+                  key=jax.random.PRNGKey(2))
+        base = solve(prob, momentum=1.0, **kw)
+        mom = solve(prob, momentum=1.3, **kw)
+        diff = float(jnp.max(jnp.abs(mom.g - base.g)))
+        assert np.isfinite(diff) and diff > 1e-7, (method, diff)
+
+
+def test_batched_engine_momentum_changes_log_trajectory(fixture):
+    """The vmapped engine threads momentum through the log runner too."""
+    _, _, U, fm, _, _ = fixture
+    B, n, m = 2, 32, 28
+    x, y = _batch_clouds(B, n, m, seed=21)
+    ka = jnp.stack([gaussian_log_features(x[i], U, eps=EPS, q=fm.q)
+                    for i in range(B)])
+    kb = jnp.stack([gaussian_log_features(y[i], U, eps=EPS, q=fm.q)
+                    for i in range(B)])
+    a = jnp.full((B, n), 1.0 / n)
+    b = jnp.full((B, m), 1.0 / m)
+    eng1 = BatchedSinkhorn(eps=EPS, method="log_factored", tol=0.0,
+                           max_iter=5, momentum=1.0)
+    eng2 = BatchedSinkhorn(eps=EPS, method="log_factored", tol=0.0,
+                           max_iter=5, momentum=1.3)
+    g1 = eng1.solve_stacked(ka, kb, a, b).g
+    g2 = eng2.solve_stacked(ka, kb, a, b).g
+    assert float(jnp.max(jnp.abs(g1 - g2))) > 1e-7
+
+
+def test_solve_point_clouds_default_R_under_jit_raises(fixture):
+    """float(data_radius(...)) on a tracer used to raise an opaque
+    ConcretizationTypeError; now a clear 'pass R=' ValueError."""
+    _, _, U, _, _, _ = fixture
+    x, y = _batch_clouds(2, 16, 12, seed=3)
+    eng = BatchedSinkhorn(eps=EPS, method="log_factored", tol=1e-5,
+                          max_iter=200)
+    with pytest.raises(ValueError, match="[Pp]ass R="):
+        jax.jit(lambda x_, y_: eng.solve_point_clouds(x_, y_, U).cost)(x, y)
+    # explicit R inside jit works
+    cost = jax.jit(
+        lambda x_, y_: eng.solve_point_clouds(x_, y_, U, R=4.0).cost
+    )(x, y)
+    assert np.all(np.isfinite(np.asarray(cost)))
+
+
 def test_engine_rejects_bad_config():
     with pytest.raises(ValueError, match="batched engine supports"):
         BatchedSinkhorn(eps=0.5, method="sharded")

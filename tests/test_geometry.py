@@ -350,6 +350,173 @@ def test_geometry_ops_matches_xla_operators(family):
 def test_geometry_ops_none_for_unfused_families():
     from repro.kernels.ops import geometry_ops
 
-    assert geometry_ops(_make_geometry("dense", 10, 10)) is None
-    assert geometry_ops(_make_geometry("nystrom", 10, 10)) is None
-    assert geometry_ops(_make_geometry("grid", 16, 16)) is None
+    for mode in ("scaling", "log"):
+        assert geometry_ops(_make_geometry("dense", 10, 10),
+                            mode=mode) is None
+        assert geometry_ops(_make_geometry("nystrom", 10, 10),
+                            mode=mode) is None
+        assert geometry_ops(_make_geometry("grid", 16, 16),
+                            mode=mode) is None
+
+
+@pytest.mark.parametrize("family", ["factored", "log_factored", "gaussian",
+                                    "arccos"])
+def test_geometry_ops_log_mode_matches_xla_operators(family):
+    """The fused LOG plan reproduces the geometry's exact two-stage LSE:
+    one fused log iteration == log_apply_kt / log_apply_k math."""
+    from repro.core.geometry import _masked_log
+    from repro.kernels.ops import geometry_ops
+
+    geom = _make_geometry(family, 24, 20)
+    plan = geometry_ops(geom, interpret=True, mode="log")
+    assert plan is not None and plan.mode == "log"
+    lxi, lzt = plan.features
+    lxi_ref, lzt_ref = geom.log_features()
+    np.testing.assert_allclose(np.asarray(lxi), np.asarray(lxi_ref),
+                               rtol=2e-4, atol=2e-4)
+    n, m = geom.shape
+    a = jnp.full((n,), 1.0 / n)
+    b = jnp.full((m,), 1.0 / m)
+    f0 = jnp.zeros((n, 1))
+    f1, g1 = plan.iteration(_masked_log(a)[:, None], _masked_log(b)[:, None],
+                            f0)
+    eps = geom.eps
+    g_ref = eps * (jnp.log(b) - geom.log_apply_kt(f0[:, 0]))
+    f_ref = eps * (jnp.log(a) - geom.log_apply_k(g_ref))
+    np.testing.assert_allclose(np.asarray(g1[:, 0]), np.asarray(g_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f1[:, 0]), np.asarray(f_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused plan on the solver hot path (use_pallas)
+# ---------------------------------------------------------------------------
+
+
+def _bucket_padded_problem(family: str, n: int, m: int):
+    """A problem padded to the engine's power-of-two buckets with
+    ZERO-WEIGHT atoms (replicated feature rows carry no mass) — the exact
+    shape ``BatchedSinkhorn`` solves at, exercising the unguarded divide in
+    ``_halfstep_kernel`` against padded rows."""
+    geom = _make_geometry(family, n, m)
+    n_pad, m_pad = ot_bucket(n), ot_bucket(m)
+    a = jnp.concatenate([jnp.full((n,), 1.0 / n), jnp.zeros((n_pad - n,))])
+    b = jnp.concatenate([jnp.full((m,), 1.0 / m), jnp.zeros((m_pad - m,))])
+    if family == "factored":
+        xi, zeta = geom.features()
+        pad = lambda w, k: jnp.concatenate(
+            [w, jnp.broadcast_to(w[-1:], (k - w.shape[0],) + w.shape[1:])])
+        geom = FactoredPositive(xi=pad(xi, n_pad), zeta=pad(zeta, m_pad),
+                                eps=geom.eps)
+    else:
+        assert family == "gaussian"
+        pad = lambda p, k: jnp.concatenate(
+            [p, jnp.broadcast_to(p[-1:], (k - p.shape[0],) + p.shape[1:])])
+        geom = GaussianPointCloud.build(
+            pad(geom.x, n_pad), pad(geom.y, m_pad), geom.anchors,
+            eps=geom.eps, R=geom.R)
+    return geom, a, b
+
+
+@pytest.mark.parametrize("family", ["factored", "gaussian"])
+def test_fused_hot_loop_parity_bucket_padded_zero_weights(family):
+    """Acceptance: a factored/Gaussian solve runs THROUGH the fused plan
+    (plan-selection hook fires) and matches the XLA operator path
+    elementwise at bucket-padded shapes with zero-weight atoms."""
+    from repro.core.sinkhorn import sinkhorn_geometry
+    from repro.kernels import observe_plan_selection
+
+    geom, a, b = _bucket_padded_problem(family, 40, 36)
+    with observe_plan_selection() as events:
+        res_p = sinkhorn_geometry(geom, a, b, tol=1e-6, max_iter=4000,
+                                  use_pallas=True)
+    assert events and events[0]["mode"] == "scaling"
+    assert events[0]["geometry"] == type(geom).__name__
+    res_x = sinkhorn_geometry(geom, a, b, tol=1e-6, max_iter=4000,
+                              use_pallas=False)
+    assert int(res_p.n_iter) == int(res_x.n_iter)
+    for field in ("u", "v", "f", "g"):
+        got, want = getattr(res_p, field), getattr(res_x, field)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-6,
+            err_msg=f"{family}.{field}")
+    np.testing.assert_allclose(float(res_p.cost), float(res_x.cost),
+                               rtol=1e-5, atol=1e-7)
+    # zero-weight atoms: scalings exactly 0, potentials exactly -inf
+    assert np.all(np.asarray(res_p.u[40:]) == 0.0)
+    assert np.all(np.isneginf(np.asarray(res_p.f[40:])))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_momentum_with_zero_weight_padded_atoms(use_pallas):
+    """Over-relaxation on a bucket-padded problem: padded atoms pin u = 0,
+    and 0^{1-w} in the geometric blend used to produce inf * 0 = NaN,
+    silently stopping the while_loop after ~2 iterations. The masked relax
+    must keep the solve converging on both the XLA and fused paths."""
+    from repro.core.sinkhorn import sinkhorn_geometry
+
+    geom, a, b = _bucket_padded_problem("factored", 40, 36)
+    res = sinkhorn_geometry(geom, a, b, tol=1e-6, max_iter=4000,
+                            momentum=1.3, use_pallas=use_pallas)
+    assert bool(res.converged), int(res.n_iter)
+    assert np.isfinite(float(res.cost))
+    assert np.all(np.asarray(res.u[40:]) == 0.0)
+    # same fixed point as the plain solve
+    ref = sinkhorn_geometry(geom, a, b, tol=1e-6, max_iter=4000,
+                            use_pallas=False)
+    np.testing.assert_allclose(float(res.cost), float(ref.cost), rtol=1e-4)
+
+
+@pytest.mark.parametrize("family", ["log_factored", "gaussian"])
+def test_fused_log_hot_loop_parity(family):
+    """Log-domain twin: sinkhorn_log_geometry through the fused LSE plan
+    elementwise-matches the exact two-stage XLA path, zero weights masked."""
+    from repro.core.sinkhorn import sinkhorn_log_geometry
+    from repro.kernels import observe_plan_selection
+
+    geom = _make_geometry(family, 28, 24)
+    n, m = geom.shape
+    a = jnp.full((n,), 1.0 / n).at[-2:].set(0.0)
+    a = a / jnp.sum(a)
+    b = jnp.full((m,), 1.0 / m)
+    with observe_plan_selection() as events:
+        res_p = sinkhorn_log_geometry(geom, a, b, tol=1e-6, max_iter=4000,
+                                      use_pallas=True)
+    assert events and events[0]["mode"] == "log"
+    res_x = sinkhorn_log_geometry(geom, a, b, tol=1e-6, max_iter=4000,
+                                  use_pallas=False)
+    assert int(res_p.n_iter) == int(res_x.n_iter)
+    np.testing.assert_allclose(np.asarray(res_p.g), np.asarray(res_x.g),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(res_p.cost), float(res_x.cost),
+                               rtol=1e-5, atol=1e-6)
+    assert np.all(np.isneginf(np.asarray(res_p.f[-2:])))
+
+
+def test_batched_engine_fused_plan_parity():
+    """Acceptance: BatchedSinkhorn.solve_stacked routes every problem in
+    the bucket through the fused plan (vmap adds B as a leading Pallas grid
+    axis) and matches the XLA engine elementwise."""
+    from repro.core import BatchedSinkhorn
+    from repro.kernels import observe_plan_selection
+
+    key = jax.random.PRNGKey(9)
+    B, n, m, r, eps = 3, 32, 24, 8, 0.5
+    xi = jax.random.uniform(key, (B, n, r)) + 0.05
+    zt = jax.random.uniform(jax.random.fold_in(key, 1), (B, m, r)) + 0.05
+    a = jnp.full((B, n), 1.0 / n)
+    b = jnp.full((B, m), 1.0 / m)
+    with observe_plan_selection() as events:
+        eng_p = BatchedSinkhorn(eps=eps, method="factored", tol=1e-6,
+                                max_iter=1000, use_pallas=True)
+        res_p = eng_p.solve_stacked(xi, zt, a, b)
+    assert events and events[0]["kind"] == "factored"
+    eng_x = BatchedSinkhorn(eps=eps, method="factored", tol=1e-6,
+                            max_iter=1000, use_pallas=False)
+    res_x = eng_x.solve_stacked(xi, zt, a, b)
+    np.testing.assert_allclose(np.asarray(res_p.u), np.asarray(res_x.u),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(res_p.cost),
+                               np.asarray(res_x.cost), rtol=1e-5)
+    assert np.array_equal(np.asarray(res_p.n_iter), np.asarray(res_x.n_iter))

@@ -7,12 +7,17 @@ import pytest
 from repro.core.features import GaussianFeatureMap
 from repro.kernels import (
     feature_contract,
+    feature_matvec,
+    fused_log_sinkhorn_iteration,
     fused_sinkhorn_iteration,
     gaussian_feature_map,
+    log_feature_contract,
+    log_halfstep,
     log_matvec,
     sinkhorn_halfstep,
 )
 from repro.kernels import ref
+from repro.kernels.tiling import pad_axis, pick_block
 
 
 @pytest.mark.parametrize("n,r,d", [
@@ -93,6 +98,132 @@ def test_fused_iteration_converges_like_reference(dtype):
     # marginal feasibility of the final plan
     col = v_k * (zeta @ (xi.T @ u_k))
     np.testing.assert_allclose(np.asarray(col), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Lane-padding regression sweep: odd r / B (TPU tiles quantize the trailing
+# dim to 128 — these shapes exercise the neutral-fill padding of every
+# kernel, including the B=1 single-problem solver shape)
+# ---------------------------------------------------------------------------
+
+
+ODD_SHAPES = [(19, 3, 1), (19, 3, 5), (200, 129, 5), (64, 127, 2)]
+
+
+@pytest.mark.parametrize("n,r,B", ODD_SHAPES)
+def test_lane_padding_parity_scaling_kernels(n, r, B):
+    key = jax.random.PRNGKey(n * 11 + r + B)
+    xi = jax.random.uniform(key, (n, r)) + 0.05
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (n, B)) + 0.05
+    t = jax.random.uniform(jax.random.fold_in(key, 2), (r, B)) + 0.05
+    marg = jax.random.uniform(jax.random.fold_in(key, 3), (n, B)) + 0.5
+    np.testing.assert_allclose(
+        np.asarray(feature_contract(xi, u, interpret=True)),
+        np.asarray(ref.feature_contract_ref(xi, u)), rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(sinkhorn_halfstep(xi, t, marg, interpret=True)),
+        np.asarray(ref.sinkhorn_halfstep_ref(xi, t, marg)),
+        rtol=2e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(feature_matvec(xi, t, interpret=True)),
+        np.asarray(xi @ t), rtol=2e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,r,B", ODD_SHAPES)
+def test_lane_padding_parity_log_kernels(n, r, B):
+    key = jax.random.PRNGKey(n * 7 + r * 3 + B)
+    lw = jax.random.normal(key, (n, r)) * 3.0
+    s = jax.random.normal(jax.random.fold_in(key, 1), (n, B)) * 2.0
+    t = jax.random.normal(jax.random.fold_in(key, 2), (r, B)) * 2.0
+    lmarg = jax.random.normal(jax.random.fold_in(key, 3), (n, B))
+    out_c = log_feature_contract(lw, s, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out_c), np.asarray(ref.log_feature_contract_ref(lw, s)),
+        rtol=1e-4, atol=1e-4)
+    out_h = log_halfstep(lw, t, lmarg, scale=0.37, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out_h),
+        np.asarray(ref.log_halfstep_ref(lw, t, lmarg, scale=0.37)),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,r", [(19, 3), (64, 127), (33, 129)])
+def test_log_matvec_odd_rank_lane_padding(m, r):
+    """r is the trailing (lane) dim of log_m — padding fills with -inf, the
+    logsumexp identity, so odd ranks match the oracle exactly."""
+    key = jax.random.PRNGKey(m + r)
+    log_m = jax.random.normal(key, (m, r)) * 3.0
+    t = jax.random.normal(jax.random.fold_in(key, 1), (r,)) * 2.0
+    np.testing.assert_allclose(
+        np.asarray(log_matvec(log_m, t, interpret=True)),
+        np.asarray(ref.log_matvec_ref(log_m, t)), rtol=1e-5, atol=1e-5)
+
+
+def test_log_kernels_masked_neutral_entries():
+    """-inf log-features (zero-weight / padded atoms) are the LSE identity:
+    rows carrying them contribute nothing and produce no NaNs."""
+    n, r, B = 12, 5, 2
+    key = jax.random.PRNGKey(0)
+    lw = jax.random.normal(key, (n, r))
+    lw = lw.at[3, :].set(-jnp.inf)          # fully masked feature row
+    s = jax.random.normal(jax.random.fold_in(key, 1), (n, B))
+    s = s.at[5, :].set(-jnp.inf)            # masked potential (zero weight)
+    out = log_feature_contract(lw, s, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.log_feature_contract_ref(lw, s)),
+        rtol=1e-4, atol=1e-4)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_fused_log_iteration_matches_xla_two_stage():
+    """One fused log iteration == the exact two-stage LSE update."""
+    n, m, r, B, eps = 40, 30, 16, 3, 0.5
+    key = jax.random.PRNGKey(2)
+    lxi = jax.random.normal(key, (n, r))
+    lzt = jax.random.normal(jax.random.fold_in(key, 1), (m, r))
+    loga = jnp.log(jnp.full((n, B), 1.0 / n))
+    logb = jnp.log(jnp.full((m, B), 1.0 / m))
+    f = jax.random.normal(jax.random.fold_in(key, 2), (n, B))
+    f_new, g = fused_log_sinkhorn_iteration(
+        lxi, lzt, loga, logb, f, eps=eps, interpret=True)
+    lse = jax.scipy.special.logsumexp
+    for c in range(B):
+        t = lse(lxi + (f[:, c] / eps)[:, None], axis=0)
+        g_ref = eps * (logb[:, c] - lse(lzt + t[None, :], axis=1))
+        t2 = lse(lzt + (g_ref / eps)[:, None], axis=0)
+        f_ref = eps * (loga[:, c] - lse(lxi + t2[None, :], axis=1))
+        np.testing.assert_allclose(np.asarray(g[:, c]), np.asarray(g_ref),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(f_new[:, c]),
+                                   np.asarray(f_ref), rtol=1e-4, atol=1e-5)
+
+
+def test_feature_map_log_space_epilogue():
+    """log_space=True skips the exp: output == log of the linear features,
+    with padded anchors at exactly -inf upstream (neutral for LSE)."""
+    n, r, d = 50, 7, 3
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (n, d))
+    fm = GaussianFeatureMap(r=r, d=d, eps=0.7, R=3.0)
+    U = fm.init(jax.random.fold_in(key, 1))
+    logc = jnp.zeros((r,), jnp.float32)
+    lin = gaussian_feature_map(x, U, logc, inv_eps=1 / 0.7, interpret=True)
+    log = gaussian_feature_map(x, U, logc, inv_eps=1 / 0.7, interpret=True,
+                               log_space=True)
+    np.testing.assert_allclose(np.asarray(jnp.exp(log)), np.asarray(lin),
+                               rtol=2e-4, atol=1e-6)
+
+
+def test_tiling_helpers():
+    assert pick_block(3) == 128
+    assert pick_block(129) == 256
+    assert pick_block(4096) == 512          # capped
+    assert pick_block(200, cap=256) == 256
+    arr = jnp.ones((5, 3))
+    padded = pad_axis(arr, 1, 128, value=-jnp.inf)
+    assert padded.shape == (5, 128)
+    assert bool(jnp.all(jnp.isinf(padded[:, 3:])))
+    assert pad_axis(arr, 0, 5) is arr       # already aligned: no copy
 
 
 def test_feature_map_dtype_bf16_inputs():
