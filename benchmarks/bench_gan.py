@@ -7,7 +7,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import gaussian_log_features, rot_log_factored
 from repro.core.grad import rot_gibbs_sqeuclid

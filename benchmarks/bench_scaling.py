@@ -2,9 +2,20 @@
 
 Fixed iteration count (tol=0, max_iter fixed) isolates per-iteration cost;
 the log-log slope of time vs n should be ~1 for RF and ~2 for Sin.
+
+``--mesh`` adds the distributed axis: per-iteration time of the sharded
+solver (scaling AND log mode) vs device count on CPU virtual devices
+(meshes over subsets of the 8 forced host devices), plus the derived
+per-iteration collective overhead vs the 1-device run — the measured twin
+of the EXPERIMENTS.md §Roofline psum-cost estimate. If the process was
+started with a single device it re-execs itself with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -66,5 +77,80 @@ def main(n_list=(500, 1000, 2000, 4000), r: int = 256, eps: float = 0.5,
     return s_rf, s_sin
 
 
+def main_mesh(n: int = 4096, r: int = 256, eps: float = 0.5,
+              iters: int = 30, device_counts=(1, 2, 4, 8)):
+    """Sharded iteration time vs device count (CPU virtual devices).
+
+    Fixed iteration count isolates per-iteration cost; each mesh uses the
+    first p of the forced host devices. The derived ``collective_us`` row
+    is t(p) - t(1)/p-ideal — on CPU "devices" this measures the psum /
+    psum-LSE dispatch overhead, the term that stays O(r) on real ICI.
+    """
+    from jax.sharding import Mesh
+
+    from repro.core import FactoredPositive, sharded_sinkhorn_geometry
+
+    devices = jax.devices()
+    counts = [p for p in device_counts if p <= len(devices)]
+    key = jax.random.PRNGKey(0)
+    xi = jax.random.uniform(key, (n, r)) + 0.05
+    zt = jax.random.uniform(jax.random.fold_in(key, 1), (n, r)) + 0.05
+    a = jnp.full((n,), 1.0 / n)
+
+    rows = []
+    base = {}
+    for mode in ("scaling", "log"):
+        for p in counts:
+            mesh = Mesh(np.array(devices[:p]), ("data",))
+            fn = jax.jit(lambda xi_, zt_, _m=mesh, _mode=mode: \
+                sharded_sinkhorn_geometry(
+                    _m, FactoredPositive(xi=xi_, zeta=zt_, eps=eps),
+                    a, a, mode=_mode, tol=0.0, max_iter=iters).f)
+            fn(xi, zt).block_until_ready()      # compile + warm
+            ts = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                fn(xi, zt).block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            us_it = min(ts) / iters * 1e6
+            if p == 1:
+                base[mode] = us_it
+            comm = us_it - base[mode] / p
+            rows.append(
+                f"scaling/mesh/{mode}/p{p},{us_it:.1f},"
+                f"n={n};r={r};iters={iters};collective_us={comm:.1f}")
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row)
+    return rows
+
+
+def _reexec_with_devices(count: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={count}"
+                        ).strip()
+    # host-device forcing only multiplies the CPU backend — pin it, or a
+    # single-GPU machine would still see 1 device and re-exec forever
+    env["JAX_PLATFORMS"] = "cpu"
+    env["_REPRO_MESH_BENCH_CHILD"] = "1"        # belt-and-braces recursion stop
+    res = subprocess.run([sys.executable, "-m", "benchmarks.bench_scaling",
+                          "--mesh"], env=env)
+    sys.exit(res.returncode)
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", action="store_true",
+                    help="measure sharded iteration time vs device count "
+                         "(forces 8 virtual CPU devices if needed)")
+    args = ap.parse_args()
+    if args.mesh:
+        if (len(jax.devices()) < 2
+                and not os.environ.get("_REPRO_MESH_BENCH_CHILD")):
+            _reexec_with_devices(8)
+        main_mesh()
+    else:
+        main()

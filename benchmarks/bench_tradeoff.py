@@ -21,12 +21,10 @@ import numpy as np
 from repro.core import (
     ArcCosinePointCloud,
     GaussianPointCloud,
-    GridSeparable,
     NystromLowRank,
     OTProblem,
     gaussian_log_features,
     nystrom_factors,
-    sinkhorn_factored,
     sinkhorn_log_factored,
     sinkhorn_log_quadratic,
     sinkhorn_nystrom,

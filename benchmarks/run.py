@@ -63,6 +63,11 @@ def main() -> None:
                          "--pallas, bench_tradeoff --pallas)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as a BENCH_*.json artifact")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="committed BENCH_*.json to gate against: fail on "
+                         ">25%% batched-speedup regression (speedup is a "
+                         "same-machine ratio, so it transfers across "
+                         "runner generations where raw us/call does not)")
     args = ap.parse_args()
 
     rows: list = []
@@ -173,6 +178,19 @@ def main() -> None:
     failures = []
     if speedup < 3.0:
         failures.append(f"batched speedup {speedup:.2f}x < 3x")
+    if args.baseline:
+        with open(args.baseline) as fh:
+            base = json.load(fh)
+        base_speedup = float(base["batched_speedup"])
+        floor = 0.75 * base_speedup
+        status = "PASS" if speedup >= floor else "FAIL"
+        print(f"batch/baseline_gate,0,speedup={speedup:.2f};"
+              f"baseline={base_speedup:.2f};floor={floor:.2f};ok={status}")
+        if speedup < floor:
+            failures.append(
+                f"batched speedup {speedup:.2f}x regressed >25% vs "
+                f"committed baseline {base_speedup:.2f}x "
+                f"(floor {floor:.2f}x, {args.baseline})")
     if args.pallas and any("pallas_ok" in r and "ok=False" in r
                            for r in rows):
         failures.append("fused-plan parity check failed (batch/pallas_ok)")

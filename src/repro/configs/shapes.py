@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 from .base import ArchConfig
 

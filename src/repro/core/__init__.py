@@ -64,7 +64,9 @@ from .nystrom import nystrom_factors, sinkhorn_nystrom
 from .routing import sinkhorn_route
 from .sharded import (
     RowShardedFactored,
+    RowShardedGeometry,
     make_sharded_sinkhorn,
+    sharded_sinkhorn_divergence,
     sharded_sinkhorn_factored,
     sharded_sinkhorn_geometry,
 )
@@ -101,6 +103,7 @@ __all__ = [
     "NystromLowRank",
     "OTProblem",
     "RowShardedFactored",
+    "RowShardedGeometry",
     "SinkhornResult",
     "accelerated_sinkhorn_geometry",
     "accelerated_sinkhorn_log_factored",
@@ -121,6 +124,7 @@ __all__ = [
     "rot_geometry",
     "rot_log_factored",
     "rot_log_factored_batched",
+    "sharded_sinkhorn_divergence",
     "sharded_sinkhorn_factored",
     "sharded_sinkhorn_geometry",
     "sinkhorn_divergence_features",

@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -98,6 +99,7 @@ METHODS = (
     "arccos",
     "nystrom",
     "sharded",
+    "sharded_log",
 )
 
 
@@ -332,19 +334,15 @@ def _run_accelerated(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
 
 
 def _run_sharded(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
-                 mesh, mesh_axis, use_pallas=None):
+                 mesh, mesh_axis, use_pallas=None, mode="scaling"):
     from .sharded import sharded_sinkhorn_geometry
 
-    if momentum != 1.0:
-        raise ValueError(
-            "momentum (over-relaxation) is not supported by "
-            f"method='sharded' (got momentum={momentum}); the shard_map "
-            "solver runs the plain scaling iteration."
-        )
     if mesh is None:
-        raise ValueError("method='sharded' requires a mesh=...")
+        raise ValueError(f"method='sharded{'_log' * (mode == 'log')}' "
+                         "requires a mesh=...")
     return sharded_sinkhorn_geometry(
-        mesh, geom, a, b, axis=mesh_axis, tol=tol, max_iter=max_iter,
+        mesh, geom, a, b, axis=mesh_axis, mode=mode, tol=tol,
+        max_iter=max_iter, momentum=momentum, f_init=f_init, g_init=g_init,
     )
 
 
@@ -413,7 +411,10 @@ _SOLVERS: Dict[str, Tuple[Callable, Callable]] = {
     "log_quadratic": (_coerce_densify, _run_log),
     "arccos": (_coerce_arccos, _run_log),
     "nystrom": (_coerce_nystrom, _run_scaling),
-    "sharded": (_coerce_native_factored, _run_sharded),
+    "sharded": (_coerce_native_factored,
+                partial(_run_sharded, mode="scaling")),
+    "sharded_log": (_coerce_native_factored,
+                    partial(_run_sharded, mode="log")),
 }
 
 # auto-dispatch table: first matching geometry type wins; factored
@@ -427,14 +428,24 @@ _AUTO_METHODS: Tuple[Tuple[type, str], ...] = (
 )
 
 
-def _auto_method(problem: OTProblem) -> str:
+def _auto_method(problem: OTProblem, mesh=None) -> str:
     g = problem.geometry
+    local = None
     for typ, meth in _AUTO_METHODS:
         if isinstance(g, typ):
-            return meth
-    if isinstance(g, FactoredPositive) and g.xi is not None:
-        return "factored"
-    return "log_factored"
+            local = meth
+            break
+    if local is None:
+        local = ("factored"
+                 if isinstance(g, FactoredPositive) and g.xi is not None
+                 else "log_factored")
+    if mesh is None:
+        return local
+    # mesh given: select the sharded execution mode, scaling vs log
+    # EXACTLY like the local table — explicit linear factors keep the
+    # scaling iteration, every other family runs the psum'd-LSE log
+    # domain (mandatory at the small eps where scalings over/underflow)
+    return "sharded" if local == "factored" else "sharded_log"
 
 
 def _solve_stage(
@@ -456,6 +467,18 @@ def _solve_stage(
     """One solve at a fixed eps with optional warm-started potentials."""
     if method not in _SOLVERS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    if mesh is not None and not method.startswith("sharded"):
+        # a mesh must never be silently dropped: local methods with a
+        # sharded twin are promoted (matching solve_many's mapping),
+        # everything else is rejected rather than run single-device
+        twin = _SHARDED_TWIN.get(method)
+        if twin is None or twin == "auto":
+            raise ValueError(
+                f"method={method!r} does not run on a mesh; with mesh= use "
+                "method='auto', 'factored'/'sharded', or "
+                "'log_factored'/'sharded_log'"
+            )
+        method = twin
     coerce, run = _SOLVERS[method]
     geom = coerce(problem.geometry.rebuild_at(eps), eps, rank=rank, key=key)
     return run(
@@ -488,19 +511,13 @@ def solve_annealed(
     count.
     """
     if method == "auto":
-        method = _auto_method(problem)
+        method = _auto_method(problem, mesh)
     if not problem.geometry.anneal_capable:
         raise ValueError(
             "eps-annealing needs a geometry whose kernel is re-derivable at "
             f"any eps; {type(problem.geometry).__name__} pins the kernel to "
             "one eps. Build the problem from point clouds, a dense cost, or "
             "grid axes to enable annealing."
-        )
-    if method == "sharded":
-        raise ValueError(
-            "method='sharded' does not compose with an EpsSchedule: the "
-            "shard_map solver has no warm-start inputs, so every stage "
-            "would cold-start. Solve sharded without a schedule instead."
         )
     # NOTE: the stage loop below (ladder tols, prev_err cap, warm-started
     # f/g, total-iteration accumulation) has a vmap-compatible twin in
@@ -552,8 +569,9 @@ def solve(
     """Solve one entropic OT problem with any solver variant in the repo.
 
     ``method``: "auto" | "factored" | "log_factored" | "accelerated" |
-    "quadratic" | "log_quadratic" | "arccos" | "nystrom" | "sharded"
-    (needs ``mesh``). "auto" dispatches on the problem's geometry type.
+    "quadratic" | "log_quadratic" | "arccos" | "nystrom" | "sharded" |
+    "sharded_log" (both need ``mesh``). "auto" dispatches on the
+    problem's geometry type (and onto the sharded twins under ``mesh``).
     ``schedule``: optional :class:`EpsSchedule` eps-annealing cascade
     (anneal-capable geometries only).
     ``rank``/``key``: optional knobs for the cost-family converting
@@ -562,6 +580,13 @@ def solve(
     Nystrom run that blows up at small eps reports
     ``result.diverged == True`` (the paper's Fig. 1/3/5 failure mode)
     instead of handing back unexplained NaNs.
+    ``mesh``/``mesh_axis``: run on a device mesh — with ``method="auto"``
+    the solver picks the sharded execution mode matching the local table
+    (scaling for explicit linear factors, psum'd-LSE log domain for
+    everything else); ``method="sharded"``/``"sharded_log"`` force one.
+    Supports shard over ``mesh_axis`` (padded with inert zero-weight
+    atoms when ``n % p != 0``); per-iteration cross-device traffic is a
+    single r-vector collective.
     ``use_pallas``: route the solver hot loop through the fused Pallas
     plan the geometry declares (``None`` = auto-on when the backend
     compiles Pallas, i.e. TPU; ``True`` forces it — interpret mode
@@ -569,7 +594,7 @@ def solve(
     fused plan fall back to XLA operators either way.
     """
     if method == "auto":
-        method = _auto_method(problem)
+        method = _auto_method(problem, mesh)
     if schedule is not None:
         return solve_annealed(
             problem, method=method, schedule=schedule, tol=tol,
@@ -588,17 +613,21 @@ def solve(
 # ---------------------------------------------------------------------------
 
 
-def _pad_rows(arr: jax.Array, n_pad: int, *, replicate: bool) -> jax.Array:
+def _pad_rows(arr: jax.Array, n_pad: int, *, replicate: bool,
+              fill: float = 0.0) -> jax.Array:
     """Pad axis 0 to n_pad: replicate the last row (features / supports —
-    keeps log-features finite) or append zeros (weights)."""
+    keeps log-features finite) or append ``fill`` (0 for weights/scalings,
+    -inf for the sharded path's padded log-potentials). Shared by the
+    batched engine and ``core.sharded`` so the padding semantics live in
+    one place."""
     pad = n_pad - arr.shape[0]
     if pad <= 0:
         return arr
     if replicate:
-        fill = jnp.broadcast_to(arr[-1:], (pad,) + arr.shape[1:])
+        tail = jnp.broadcast_to(arr[-1:], (pad,) + arr.shape[1:])
     else:
-        fill = jnp.zeros((pad,) + arr.shape[1:], arr.dtype)
-    return jnp.concatenate([arr, fill], axis=0)
+        tail = jnp.full((pad,) + arr.shape[1:], fill, arr.dtype)
+    return jnp.concatenate([arr, tail], axis=0)
 
 
 # Batched-engine dispatch: method -> (stacked kernel data -> Geometry).
@@ -863,6 +892,13 @@ class BatchedSinkhorn:
 _ENGINE_CACHE: Dict[Tuple, BatchedSinkhorn] = {}
 
 
+_SHARDED_TWIN = {
+    "factored": "sharded", "sharded": "sharded",
+    "log_factored": "sharded_log", "sharded_log": "sharded_log",
+    "auto": "auto",
+}
+
+
 def solve_many(
     problems: Sequence[OTProblem],
     *,
@@ -872,6 +908,8 @@ def solve_many(
     max_iter: int = 2000,
     momentum: float = 1.0,
     use_pallas: Optional[bool] = None,
+    mesh=None,
+    mesh_axis: str = "data",
 ) -> List[SinkhornResult]:
     """Convenience wrapper: batched solve of a ragged problem list.
 
@@ -879,6 +917,11 @@ def solve_many(
     are rejected — build one engine per eps instead. Engines (and hence
     their jitted vmapped solvers) are cached per configuration, so calling
     this in a loop does not retrace.
+
+    With ``mesh=`` each problem runs through the shard_map solver (the
+    sharded twin of ``method``: scaling or psum'd-LSE log domain). Sharded
+    problems are dispatched sequentially — each solve already occupies the
+    whole mesh, so there is no idle hardware for a vmapped batch to fill.
     """
     if not problems:
         return []
@@ -887,6 +930,21 @@ def solve_many(
         if len(eps_set) != 1:
             raise ValueError(f"mixed problem eps {sorted(eps_set)}; pass eps=")
         eps = eps_set.pop()
+    if mesh is not None:
+        twin = _SHARDED_TWIN.get(method)
+        if twin is None:
+            raise ValueError(
+                f"solve_many(mesh=...) supports methods "
+                f"{sorted(_SHARDED_TWIN)}, got {method!r}"
+            )
+        # use_pallas is moot here: sharded geometries refuse fused local
+        # plans (they would drop the psum), so the XLA operators always run
+        return [
+            solve(p.__class__(p.geometry.rebuild_at(eps), p.a, p.b),
+                  method=twin, tol=tol, max_iter=max_iter,
+                  momentum=momentum, mesh=mesh, mesh_axis=mesh_axis)
+            for p in problems
+        ]
     key = (method, float(eps), float(tol), int(max_iter), float(momentum),
            use_pallas)
     engine = _ENGINE_CACHE.get(key)

@@ -45,12 +45,26 @@ def sinkhorn_divergence_geometry(
     *,
     tol: float = 1e-6,
     max_iter: int = 2000,
+    mesh=None,
+    mesh_axis: str = "data",
 ) -> jax.Array:
     """Wbar on any log-capable Geometry with per-measure parametrization
     (factored, point-cloud, arccos, grid — families defining ``xx``/``yy``
     self-geometries; a bare DenseCost carries no (mu, mu) cost and cannot
     form the correction terms). Differentiable in the geometry's arrays
-    and weights."""
+    and weights.
+
+    With ``mesh=`` the three solves run inside one ``shard_map``: supports
+    shard over ``mesh_axis``, each envelope solve uses the psum'd-LSE
+    operators (one r-vector collective per half-iteration), and the same
+    ``rot_geometry`` VJP keeps the result differentiable — including
+    w.r.t. replicated leaves like shared anchors."""
+    if mesh is not None:
+        from .sharded import sharded_sinkhorn_divergence
+
+        return sharded_sinkhorn_divergence(
+            mesh, geom, a, b, axis=mesh_axis, tol=tol, max_iter=max_iter,
+        )
     n, m = geom.shape
     a = jnp.full((n,), 1.0 / n) if a is None else a
     b = jnp.full((m,), 1.0 / m) if b is None else b

@@ -25,11 +25,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = [
     "lambert_w0",

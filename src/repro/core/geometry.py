@@ -281,6 +281,20 @@ class Geometry(abc.ABC):
             "Sinkhorn divergence needs a per-measure parametrization"
         )
 
+    # -- distribution hook ---------------------------------------------------
+
+    @property
+    def spmd_axis(self) -> Optional[str]:
+        """Mesh axis this geometry's operators psum over, or ``None``.
+
+        Single-device geometries return ``None``. The row-sharded wrappers
+        in ``core.sharded`` return their mesh axis, which tells the solver
+        core (``sinkhorn.py``) and the envelope VJP (``grad.py``) to psum
+        every scalar reduction (marginal error, dual value, correlation
+        term) so while_loop carries and results replicate across devices.
+        """
+        return None
+
     # -- accelerator dispatch ------------------------------------------------
 
     def pallas_ops(self) -> Optional[dict]:

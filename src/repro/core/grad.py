@@ -75,12 +75,18 @@ def _rot_geom_fwd(geom, a, b, tol, max_iter):
 def _rot_geom_bwd(tol, max_iter, residuals, ct):
     geom, f, g = residuals
     eps = geom.eps
+    from .sinkhorn import geometry_reduce
+
+    reduce = geometry_reduce(geom)
 
     def neg_eps_corr(gm):
         # -eps u^T K_theta v with (f, g) frozen: the only theta-dependent
         # term of the dual at its optimum (zero-weight atoms carry
-        # f = -inf and contribute exactly 0)
-        return -eps * jnp.sum(jnp.exp(f / eps + gm.log_apply_k(g)))
+        # f = -inf and contribute exactly 0). Under shard_map the reduce
+        # hook psums the local partial sums, so the correlation — and via
+        # psum's transpose, every leaf cotangent, including replicated
+        # leaves like shared anchors — accounts for all shards' terms.
+        return -eps * reduce(jnp.exp(f / eps + gm.log_apply_k(g)))
 
     geom_bar = jax.grad(neg_eps_corr)(geom)
     geom_bar = jax.tree_util.tree_map(lambda t: ct * t, geom_bar)

@@ -19,7 +19,6 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 
 from .geometry import NystromLowRank
 from .sinkhorn import SinkhornResult, sinkhorn_geometry

@@ -65,6 +65,7 @@ from .geometry import DenseCost, FactoredPositive, Geometry, _masked_log
 
 __all__ = [
     "SinkhornResult",
+    "geometry_reduce",
     "make_scaling_step",
     "make_log_step",
     "factored_log_matvecs",
@@ -111,15 +112,32 @@ class SinkhornResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def masked_dual_value(a, b, f, g):
+def masked_dual_value(a, b, f, g, reduce: Callable = jnp.sum):
     """W_hat = <a, f> + <b, g> with zero-weight atoms excluded.
 
     Padded atoms have a_i = 0 and f_i = -inf; a plain vdot would produce
     0 * -inf = nan, so both terms mask on strictly positive weight.
+    ``reduce`` lets SPMD callers psum the local partial sums so the value
+    replicates across devices (see :func:`geometry_reduce`).
     """
-    ta = jnp.sum(jnp.where(a > 0, a * f, 0.0))
-    tb = jnp.sum(jnp.where(b > 0, b * g, 0.0))
+    ta = reduce(jnp.where(a > 0, a * f, 0.0))
+    tb = reduce(jnp.where(b > 0, b * g, 0.0))
     return ta + tb
+
+
+def geometry_reduce(geom: "Geometry") -> Callable[[jax.Array], jax.Array]:
+    """The scalar-reduction hook a geometry's execution mode implies.
+
+    Single-device geometries reduce with a plain ``jnp.sum``; row-sharded
+    wrappers (``geom.spmd_axis`` set) additionally psum over the mesh axis
+    so the marginal error driving the while_loop and the dual value are
+    REPLICATED — every device exits the loop together (an SPMD
+    requirement) and the cost needs no post-hoc collective.
+    """
+    ax = geom.spmd_axis
+    if ax is None:
+        return jnp.sum
+    return lambda e: jax.lax.psum(jnp.sum(e), ax)
 
 
 def make_scaling_step(
@@ -209,6 +227,11 @@ def run_marginal_loop(step, carry0, *, tol: float, max_iter: int, dtype):
 
     One mandatory iteration is always taken (so e.g. u.Kv = 1 holds for the
     Eq.-6 dual shortcut). Returns ``(n_iter, carry, err)``.
+
+    Distribution hook: the loop itself is SPMD-agnostic — under
+    ``shard_map`` the step's ``err_reduce`` (see :func:`geometry_reduce`)
+    psums the error, so the while_loop carries a REPLICATED scalar and
+    every device exits at the same iteration (no control-flow divergence).
     """
 
     def body(state):
@@ -241,6 +264,11 @@ def _maybe_pallas_plan(geom: Geometry, use_pallas: Optional[bool],
     back. Selections are reported through the
     ``kernels.ops.observe_plan_selection`` hook.
     """
+    if geom.spmd_axis is not None:
+        # a fused local plan would drop the psum — sharded geometries
+        # always run the XLA operators (their pallas_ops return None too;
+        # this guard keeps a forced use_pallas=True from probing them)
+        return None
     if use_pallas is None:
         use_pallas = not default_interpret()
     if not use_pallas:
@@ -255,9 +283,10 @@ def _maybe_pallas_plan(geom: Geometry, use_pallas: Optional[bool],
     return plan
 
 
-def _finish_scaling(a, b, u, v, it, err, *, eps, tol) -> SinkhornResult:
+def _finish_scaling(a, b, u, v, it, err, *, eps, tol,
+                    reduce: Callable = jnp.sum) -> SinkhornResult:
     f, g = eps * _masked_log(u), eps * _masked_log(v)
-    cost = masked_dual_value(a, b, f, g)
+    cost = masked_dual_value(a, b, f, g, reduce)
     return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
 
 
@@ -293,17 +322,25 @@ def sinkhorn_operator(
     max_iter: int = 2000,
     momentum: float = 1.0,
     u_init: Optional[jax.Array] = None,
+    err_reduce: Callable[[jax.Array], jax.Array] = jnp.sum,
 ) -> SinkhornResult:
-    """Algorithm 1 on an abstract positive kernel operator."""
+    """Algorithm 1 on an abstract positive kernel operator.
+
+    ``err_reduce`` is the SPMD hook: sharded callers pass the psum'd
+    reduction of :func:`geometry_reduce` so the convergence scalar (and
+    the dual value) replicate across devices.
+    """
     n, m = a.shape[0], b.shape[0]
     dtype = a.dtype
     u0 = jnp.ones((n,), dtype) if u_init is None else u_init
     v0 = jnp.ones((m,), dtype)
-    step = make_scaling_step(matvec, rmatvec, a, b, momentum=momentum)
+    step = make_scaling_step(matvec, rmatvec, a, b, momentum=momentum,
+                             err_reduce=err_reduce)
     it, (u, v, _), err = run_marginal_loop(
         step, (u0, v0, rmatvec(u0)), tol=tol, max_iter=max_iter, dtype=dtype
     )
-    return _finish_scaling(a, b, u, v, it, err, eps=eps, tol=tol)
+    return _finish_scaling(a, b, u, v, it, err, eps=eps, tol=tol,
+                           reduce=err_reduce)
 
 
 def sinkhorn_geometry(
@@ -343,6 +380,7 @@ def sinkhorn_geometry(
     return sinkhorn_operator(
         matvec, rmatvec, a, b, eps=geom.eps, tol=tol,
         max_iter=max_iter, momentum=momentum, u_init=u_init,
+        err_reduce=geometry_reduce(geom),
     )
 
 
@@ -421,19 +459,33 @@ def sinkhorn_log_geometry(
     return _log_domain_solve(
         log_matvec, log_rmatvec, a, b, eps=geom.eps, tol=tol,
         max_iter=max_iter, momentum=momentum, f_init=f_init, g_init=g_init,
+        err_reduce=geometry_reduce(geom),
     )
 
 
 def _log_init(a, b, f_init, g_init):
+    """Initial potentials, with zero-weight atoms pinned to -inf.
+
+    The pin makes padding exact from ITERATION 0, not just at the fixed
+    point: a dead atom's exp(-inf + ...) contributes nothing to the very
+    first LSE, so a bucket/shard-padded solve's live iterates equal the
+    unpadded solve's elementwise. (The iteration forces dead atoms to
+    -inf after one step anyway — this just removes the transient.)
+    Warm starts from a previous masked solve already carry -inf there,
+    so the mask is idempotent.
+    """
     n, m = a.shape[0], b.shape[0]
     dtype = a.dtype
     f0 = jnp.zeros((n,), dtype) if f_init is None else f_init
     g0 = jnp.zeros((m,), dtype) if g_init is None else g_init
+    f0 = jnp.where(a > 0, f0, -jnp.inf)
+    g0 = jnp.where(b > 0, g0, -jnp.inf)
     return f0, g0, dtype
 
 
-def _finish_log(a, b, f, g, it, err, *, eps, tol) -> SinkhornResult:
-    cost = masked_dual_value(a, b, f, g)
+def _finish_log(a, b, f, g, it, err, *, eps, tol,
+                reduce: Callable = jnp.sum) -> SinkhornResult:
+    cost = masked_dual_value(a, b, f, g, reduce)
     u, v = jnp.exp(f / eps), jnp.exp(g / eps)
     return SinkhornResult(u, v, f, g, cost, it, err, err <= tol)
 
@@ -441,14 +493,16 @@ def _finish_log(a, b, f, g, it, err, *, eps, tol) -> SinkhornResult:
 def _log_domain_solve(
     log_matvec, log_rmatvec, a, b, *, eps, tol, max_iter, momentum=1.0,
     f_init=None, g_init=None,
+    err_reduce: Callable[[jax.Array], jax.Array] = jnp.sum,
 ) -> SinkhornResult:
     f0, g0, dtype = _log_init(a, b, f_init, g_init)
     step = make_log_step(log_matvec, log_rmatvec, a, b, eps=eps,
-                         momentum=momentum)
+                         momentum=momentum, err_reduce=err_reduce)
     it, (f, g), err = run_marginal_loop(
         step, (f0, g0), tol=tol, max_iter=max_iter, dtype=dtype
     )
-    return _finish_log(a, b, f, g, it, err, eps=eps, tol=tol)
+    return _finish_log(a, b, f, g, it, err, eps=eps, tol=tol,
+                       reduce=err_reduce)
 
 
 def _solve_log_plan(plan, a, b, *, eps, tol, max_iter, momentum,

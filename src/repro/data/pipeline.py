@@ -10,11 +10,9 @@ process it degenerates to the global batch).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from .synthetic import lm_batch
 

@@ -10,7 +10,6 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = [
     "token_batch",

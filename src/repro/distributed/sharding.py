@@ -18,19 +18,45 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "MeshContext",
     "use_mesh_context",
     "current_mesh_context",
+    "psum_logsumexp",
     "shard",
     "shard_map",
     "logical_spec",
 ]
+
+
+def psum_logsumexp(x: jax.Array, axis_name: str, *, axis: int = 0) -> jax.Array:
+    """Distributed logsumexp over a row-sharded array axis.
+
+    Runs INSIDE ``shard_map``: reduces ``x`` over its local ``axis`` AND the
+    mesh ``axis_name`` in one exact pass — ``pmax`` of the local maxima,
+    shifted local sums, ``psum``, log. The result is replicated over
+    ``axis_name`` and the only cross-device traffic is two collectives on
+    the reduced shape (for the factored Sinkhorn kernel, one r-vector —
+    the paper's whole communication cost).
+
+    ``-inf``-safe: all ``-inf`` slices (the log-features of zero-weight
+    padded atoms) shift by 0 instead of ``-inf`` so the result is a clean
+    ``-inf`` rather than ``nan`` from ``(-inf) - (-inf)``.
+    """
+    local_max = jax.lax.stop_gradient(jnp.max(x, axis=axis))
+    # pmax has no differentiation rule — and needs none: the shift cancels
+    # out of the exact LSE identity, so stopping its gradient leaves the
+    # derivative the ordinary (correct) softmax
+    gmax = jax.lax.pmax(local_max, axis_name)
+    shift = jax.lax.stop_gradient(jnp.where(jnp.isfinite(gmax), gmax, 0.0))
+    local_sum = jnp.sum(jnp.exp(x - jnp.expand_dims(shift, axis)), axis=axis)
+    return shift + jnp.log(jax.lax.psum(local_sum, axis_name))
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):

@@ -21,14 +21,11 @@ import json
 import time
 import traceback
 
-import jax
-import jax.numpy as jnp
 
 from ..configs import SHAPES, cell_applicable, get_config, get_shape, list_archs
-from .hlo_analysis import HW, parse_collectives, roofline_terms
+from .hlo_analysis import parse_collectives, roofline_terms
 from .mesh import make_production_mesh
-from .specs import cache_specs, input_specs
-from .steps import abstract_state, make_serve_step, make_train_step
+from .steps import make_serve_step, make_train_step
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "dryrun")

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 __all__ = [
     "HW",

@@ -13,10 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config
-from ..configs.shapes import ShapeSpec
 from ..models import decode_step, init_caches, init_params
 from ..models.model import effective_window
-from .mesh import make_local_mesh
 
 
 def main():

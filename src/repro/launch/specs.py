@@ -17,7 +17,7 @@ Optimizer moments inherit their parameter's sharding (ZeRO-1/2 comes free).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..configs import ArchConfig, ShapeSpec
 from ..distributed.sharding import MeshContext
 from ..models import cache_logical_axes, init_caches
-from ..models.model import effective_window
 
 __all__ = [
     "input_specs",

@@ -1,8 +1,7 @@
 """jit-able train / prefill / decode step factories with full shardings."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +19,6 @@ __all__ = ["make_train_step", "make_serve_step", "abstract_state"]
 
 def abstract_state(cfg: ArchConfig, opt: Optional[AdamWConfig] = None):
     """(params, opt_state) as ShapeDtypeStructs — no allocation."""
-    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     p_shape = jax.eval_shape(
         lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
     )

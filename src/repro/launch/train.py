@@ -15,7 +15,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from ..checkpoint import CheckpointManager
 from ..configs import get_config

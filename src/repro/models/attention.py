@@ -23,13 +23,12 @@ long_500k on h2o-danube holds 4096 cache rows, not 524288.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .layers import apply_rotary, init_linear, linear, rmsnorm, rotary_cos_sin, trunc_normal
+from .layers import apply_rotary, init_linear, linear, rmsnorm, rotary_cos_sin
 
 __all__ = [
     "init_gqa",

@@ -1,7 +1,6 @@
 """Shared neural building blocks (pure JAX, functional params-as-pytrees)."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

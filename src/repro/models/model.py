@@ -13,8 +13,7 @@ for decode, vocab-parallel embedding/head.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,6 @@ from .attention import (
     MLACache,
     cross_attention,
     gqa_attend_step,
-    gqa_decode,
     gqa_train,
     init_cross_attention,
     init_gqa,
@@ -34,7 +32,6 @@ from .attention import (
     init_mla,
     init_mla_cache,
     mla_attend_step,
-    mla_decode,
     mla_train,
 )
 from .layers import (

@@ -22,14 +22,13 @@ solver reused as a router, see DESIGN.md §4.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..core.routing import sinkhorn_route
-from .layers import init_linear, linear, trunc_normal
+from .layers import trunc_normal
 
 __all__ = ["init_moe", "moe_dense", "moe_ep_local", "router_probs"]
 

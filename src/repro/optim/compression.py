@@ -14,7 +14,7 @@ not DP-bound (EXPERIMENTS.md §Roofline); it is wired and tested.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

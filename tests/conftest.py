@@ -16,6 +16,7 @@ _SLOW_MODULES = {
     "test_distributed",
     "test_divergence",
     "test_schedule",
+    "test_sharded",
     "test_sinkhorn",
     "test_system",
 }

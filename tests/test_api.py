@@ -200,14 +200,20 @@ def test_momentum_threaded_or_rejected_for_every_method(fixture):
     x, y, U, fm, xi, zeta = fixture
     feat_p = OTProblem.from_features(xi, zeta, eps=EPS)
     cloud_p = OTProblem.from_point_clouds(x, y, U, eps=EPS)
+    from jax.sharding import Mesh
+
+    mesh1 = Mesh(np.array(jax.devices()[:1]), ("data",))
     for method in METHODS:
         prob = cloud_p if method in ("arccos", "nystrom") else feat_p
-        if method in ("accelerated", "sharded"):
+        if method == "accelerated":
             with pytest.raises(ValueError, match="momentum"):
                 solve(prob, method=method, momentum=1.3, rank=16)
             continue
-        # fixed iteration count, compare raw trajectories
-        kw = dict(method=method, tol=0.0, max_iter=6, rank=16,
+        # fixed iteration count, compare raw trajectories; the sharded
+        # methods now thread momentum through the same make_*_step blocks
+        # (exercised here on a 1-device mesh)
+        mesh = mesh1 if method.startswith("sharded") else None
+        kw = dict(method=method, tol=0.0, max_iter=6, rank=16, mesh=mesh,
                   key=jax.random.PRNGKey(2))
         base = solve(prob, momentum=1.0, **kw)
         mom = solve(prob, momentum=1.3, **kw)

@@ -1,5 +1,4 @@
 """Data pipeline determinism + shapes."""
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data import DataConfig, DataPipeline, lm_batch

@@ -3,12 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    gaussian_log_features,
-    sinkhorn_log_factored,
-    sinkhorn_log_quadratic,
-    squared_euclidean,
-)
+from repro.core import gaussian_log_features, sinkhorn_log_factored
 from repro.core.accelerated import accelerated_sinkhorn_log_factored
 from repro.core.barycenter import barycenter_log_factored
 from repro.core.features import GaussianFeatureMap

@@ -4,7 +4,6 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     arccos_features,

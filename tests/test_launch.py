@@ -1,12 +1,9 @@
 """Launcher-layer unit tests: specs, shardings, loop-aware HLO analysis."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
-from jax.sharding import Mesh
 
 from repro.configs import get_config, get_shape
-from repro.launch.hlo_analysis import HW, parse_collectives, roofline_terms
+from repro.launch.hlo_analysis import parse_collectives, roofline_terms
 from repro.launch.hlo_loops import analyze_hlo
 from repro.launch.mesh import make_local_mesh
 from repro.launch.specs import input_specs, param_shardings

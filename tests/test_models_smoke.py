@@ -1,6 +1,5 @@
 """Per-arch smoke tests (deliverable f): reduced same-family config, one
 forward/train step on CPU, assert output shapes + no NaNs + decode works."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

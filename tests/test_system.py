@@ -1,11 +1,8 @@
 """End-to-end system tests: tiny training runs, loss goes down, resume is
 bit-deterministic, OT loss trains (the paper's technique in the loop)."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
