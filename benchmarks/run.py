@@ -54,6 +54,87 @@ def bench_solver_iteration():
     return print_rows
 
 
+def bench_fused_loop(inner_steps: int = 8, quick: bool = False):
+    """Megakernel (persistent multi-iteration block) vs the per-iteration
+    fused plan, us/iter at the ``solver/iter`` shapes.
+
+    Both sides run the SAME plan-step semantics through Pallas (interpret
+    off-TPU, compiled Mosaic on TPU): the unfused side dispatches 4-5
+    kernels per iteration and round-trips every intermediate; the fused
+    side runs ``inner_steps`` whole iterations in ONE launch with the
+    factors VMEM-resident. The us/iter RATIO is therefore a same-machine
+    launch-and-traffic-overhead measurement that transfers across runner
+    generations (like the batched-speedup gate); off-TPU it bounds
+    dispatch overhead, on TPU it adds the HBM-refetch saving. Returns
+    (rows, best_ratio).
+    """
+    from repro.core.geometry import FactoredPositive
+    from repro.kernels.ops import geometry_ops
+
+    key = jax.random.PRNGKey(0)
+    rows, best = [], 0.0
+    shapes = ((4096, 256), (16384, 256)) if quick \
+        else ((4096, 256), (16384, 256), (16384, 1024))
+    for n, r in shapes:
+        xi = jax.random.uniform(key, (n, r)) + 0.05
+        zt = jax.random.uniform(jax.random.fold_in(key, 1), (n, r)) + 0.05
+        a = jnp.full((n,), 1.0 / n)
+        geom = FactoredPositive(xi=xi, zeta=zt, eps=0.5)
+        shape = f"n{n}_r{r}"
+        flops = 8.0 * n * r          # 4 thin matvecs per full iteration
+
+        def timed(fn):
+            out = fn()
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            return (time.perf_counter() - t0) / inner_steps
+
+        variants = []
+        for prec in ("highest", "bf16"):
+            plan = geometry_ops(geom, interpret=None, mode="scaling",
+                                precision=prec)
+            block = plan.make_block_step(a, a, inner_steps=inner_steps)
+            if block is None:        # over the compiled-VMEM budget
+                continue
+            step, init = block
+            u0, v0 = jnp.ones((n,)), jnp.ones((n,))
+
+            @jax.jit
+            def run_block(u0=u0, v0=v0, init=init, step=step):
+                (u, _, _), err = step(init(u0, v0))
+                return u, err
+
+            suffix = "" if prec == "highest" else "_bf16"
+            variants.append((f"fused_block{suffix}", timed(run_block)))
+
+        plan = geometry_ops(geom, interpret=None, mode="scaling")
+        pstep, pinit = plan.make_step(a, a)
+
+        @jax.jit
+        def run_unfused(u0=jnp.ones((n,)), v0=jnp.ones((n,)),
+                        pinit=pinit, pstep=pstep):
+            carry = pinit(u0, v0)
+            for _ in range(inner_steps):
+                carry, err = pstep(carry)
+            return carry[0], err
+
+        dt_unfused = timed(run_unfused)
+        rows.append(f"solver/iter/{shape}/unfused_plan,"
+                    f"{dt_unfused * 1e6:.1f},gflops_s="
+                    f"{flops / dt_unfused / 1e9:.2f}")
+        for name, dt in variants:
+            rows.append(f"solver/iter/{shape}/{name},{dt * 1e6:.1f},"
+                        f"inner_steps={inner_steps};gflops_s="
+                        f"{flops / dt / 1e9:.2f}")
+            if name == "fused_block":
+                ratio = dt_unfused / dt
+                best = max(best, ratio)
+                rows.append(f"solver/fused_speedup/{shape},0,"
+                            f"ratio={ratio:.2f}")
+    return rows, best
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -89,6 +170,15 @@ def main() -> None:
     section("solver microbench")
     for row in bench_solver_iteration():
         emit(row)
+
+    fused_speedup = None
+    if args.pallas:
+        section("megakernel vs per-iteration fused plan (kernels.fused_loop)")
+        fused_rows, fused_speedup = bench_fused_loop(quick=args.quick)
+        for row in fused_rows:
+            emit(row)
+        print(f"# fused-block speedup {fused_speedup:.2f}x "
+              "(target >= 1.5x)", file=sys.stderr)
 
     section("scaling (linear vs quadratic, Sec 3.1)")
     from . import bench_scaling
@@ -170,6 +260,8 @@ def main() -> None:
             batched_speedup=float(speedup),
             rows=parsed,
         )
+        if fused_speedup is not None:
+            artifact["fused_speedup"] = float(fused_speedup)
         with open(args.json, "w") as fh:
             json.dump(artifact, fh, indent=1)
         print(f"# wrote {len(parsed)} rows to {args.json}", file=sys.stderr)
@@ -178,6 +270,10 @@ def main() -> None:
     failures = []
     if speedup < 3.0:
         failures.append(f"batched speedup {speedup:.2f}x < 3x")
+    if fused_speedup is not None and fused_speedup < 1.5:
+        failures.append(
+            f"megakernel fused-vs-unfused us/iter ratio {fused_speedup:.2f}x"
+            " < 1.5x on every solver/iter shape")
     if args.baseline:
         with open(args.baseline) as fh:
             base = json.load(fh)
@@ -191,9 +287,32 @@ def main() -> None:
                 f"batched speedup {speedup:.2f}x regressed >25% vs "
                 f"committed baseline {base_speedup:.2f}x "
                 f"(floor {floor:.2f}x, {args.baseline})")
+        base_fused = base.get("fused_speedup")
+        if fused_speedup is not None and base_fused is not None:
+            ffloor = 0.75 * float(base_fused)
+            fstatus = "PASS" if fused_speedup >= ffloor else "FAIL"
+            print(f"solver/fused_baseline_gate,0,"
+                  f"speedup={fused_speedup:.2f};"
+                  f"baseline={float(base_fused):.2f};floor={ffloor:.2f};"
+                  f"ok={fstatus}")
+            if fused_speedup < ffloor:
+                failures.append(
+                    f"megakernel speedup {fused_speedup:.2f}x regressed "
+                    f">25% vs committed baseline {float(base_fused):.2f}x "
+                    f"(floor {ffloor:.2f}x, {args.baseline})")
     if args.pallas and any("pallas_ok" in r and "ok=False" in r
                            for r in rows):
         failures.append("fused-plan parity check failed (batch/pallas_ok)")
+    # structured-health gates: a row that reports a diverged solve or a
+    # fused-vs-XLA iteration-count mismatch is a hard failure — this is
+    # what keeps e.g. the Nystrom geometry rows from silently regressing
+    # to diverged=True again
+    bad_div = [r.split(",", 1)[0] for r in rows if "diverged=True" in r]
+    if bad_div:
+        failures.append("diverged=True rows: " + " ".join(bad_div))
+    bad_match = [r.split(",", 1)[0] for r in rows if "match=False" in r]
+    if bad_match:
+        failures.append("match=False rows: " + " ".join(bad_match))
     if failures:
         print("# FAIL: " + "; ".join(failures), file=sys.stderr)
         sys.exit(1)

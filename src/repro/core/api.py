@@ -299,28 +299,36 @@ class AnnealedResult(NamedTuple):
 
 
 def _run_scaling(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
-                 mesh, mesh_axis, use_pallas=None):
+                 mesh, mesh_axis, use_pallas=None, inner_steps=None,
+                 check_every=None, precision="highest"):
     u_init = None if f_init is None else jnp.exp(f_init / geom.eps)
     return sinkhorn_geometry(
         geom, a, b, tol=tol, max_iter=max_iter, momentum=momentum,
-        u_init=u_init, use_pallas=use_pallas,
+        u_init=u_init, use_pallas=use_pallas, inner_steps=inner_steps,
+        check_every=check_every, precision=precision,
     )
 
 
 def _run_log(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
-             mesh, mesh_axis, use_pallas=None):
+             mesh, mesh_axis, use_pallas=None, inner_steps=None,
+             check_every=None, precision="highest"):
     return sinkhorn_log_geometry(
         geom, a, b, tol=tol, max_iter=max_iter, momentum=momentum,
         f_init=f_init, g_init=g_init, use_pallas=use_pallas,
+        inner_steps=inner_steps, check_every=check_every,
+        precision=precision,
     )
 
 
 def _run_accelerated(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
-                     mesh, mesh_axis, use_pallas=None):
+                     mesh, mesh_axis, use_pallas=None, inner_steps=None,
+                     check_every=None, precision="highest"):
     # AGM's Nesterov extrapolation IS its acceleration — an extra
     # over-relaxation has no defined place in the scheme, so reject rather
     # than silently drop it. The dual-gradient structure also keeps this
-    # solver on the XLA log-operators (use_pallas is ignored).
+    # solver on the XLA log-operators (use_pallas is ignored), so the
+    # megakernel block (inner_steps) is rejected too; the check cadence
+    # applies as everywhere else.
     if momentum != 1.0:
         raise ValueError(
             "momentum (over-relaxation) is not supported by "
@@ -328,13 +336,28 @@ def _run_accelerated(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
             f"that role; got momentum={momentum}. Use momentum=1.0 or a "
             "plain method ('factored', 'log_factored', ...)."
         )
+    if inner_steps is not None and int(inner_steps) > 1:
+        raise ValueError(
+            "inner_steps > 1 (the persistent megakernel) is not available "
+            "for method='accelerated': the AGM body interleaves gradient "
+            "extrapolation with exact block steps and has no fused plan. "
+            "Use check_every= for the cadence win, or a plain method."
+        )
+    if precision != "highest":
+        raise ValueError(
+            "method='accelerated' differentiates the smoothed dual through "
+            "its log-operators; the bf16 storage policy is not supported "
+            f"here (got precision={precision!r})"
+        )
     return accelerated_sinkhorn_geometry(
         geom, a, b, tol=tol, max_iter=max_iter, f_init=f_init, g_init=g_init,
+        check_every=1 if check_every is None else check_every,
     )
 
 
 def _run_sharded(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
-                 mesh, mesh_axis, use_pallas=None, mode="scaling"):
+                 mesh, mesh_axis, use_pallas=None, inner_steps=None,
+                 check_every=None, precision="highest", mode="scaling"):
     from .sharded import sharded_sinkhorn_geometry
 
     if mesh is None:
@@ -343,6 +366,8 @@ def _run_sharded(geom, a, b, *, tol, max_iter, momentum, f_init, g_init,
     return sharded_sinkhorn_geometry(
         mesh, geom, a, b, axis=mesh_axis, mode=mode, tol=tol,
         max_iter=max_iter, momentum=momentum, f_init=f_init, g_init=g_init,
+        inner_steps=inner_steps, check_every=check_every,
+        precision=precision,
     )
 
 
@@ -463,8 +488,20 @@ def _solve_stage(
     rank: Optional[int] = None,
     key: Optional[jax.Array] = None,
     use_pallas: Optional[bool] = None,
+    inner_steps: Optional[int] = None,
+    check_every: Optional[int] = None,
+    precision: str = "highest",
+    donate: bool = False,
 ) -> SinkhornResult:
-    """One solve at a fixed eps with optional warm-started potentials."""
+    """One solve at a fixed eps with optional warm-started potentials.
+
+    ``donate=True`` routes the stage through a jitted runner that DONATES
+    the warm-start potentials (``f_init``/``g_init``): an annealed cascade
+    re-solving at each eps then reuses the previous stage's potential
+    buffers instead of holding two copies live per stage. Only taken when
+    the potentials are concrete arrays (donating under an outer trace is
+    meaningless) and the solve is single-device.
+    """
     if method not in _SOLVERS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
     if mesh is not None and not method.startswith("sharded"):
@@ -481,11 +518,54 @@ def _solve_stage(
         method = twin
     coerce, run = _SOLVERS[method]
     geom = coerce(problem.geometry.rebuild_at(eps), eps, rank=rank, key=key)
+    if (donate and mesh is None
+            and isinstance(f_init, jax.Array)
+            and isinstance(g_init, jax.Array)
+            and not isinstance(f_init, jax.core.Tracer)
+            and not isinstance(g_init, jax.core.Tracer)):
+        fn = _donating_stage_runner(
+            method, int(max_iter), float(momentum), use_pallas,
+            inner_steps, check_every, precision,
+        )
+        return fn(geom, problem.a, problem.b, f_init, g_init, tol)
     return run(
         geom, problem.a, problem.b, tol=tol, max_iter=max_iter,
         momentum=momentum, f_init=f_init, g_init=g_init, mesh=mesh,
         mesh_axis=mesh_axis, use_pallas=use_pallas,
+        inner_steps=inner_steps, check_every=check_every,
+        precision=precision,
     )
+
+
+_DONATING_STAGE_CACHE: Dict[Tuple, Callable] = {}
+
+
+def _donating_stage_runner(method, max_iter, momentum, use_pallas,
+                           inner_steps, check_every, precision) -> Callable:
+    """Jitted per-stage runner with the warm-start potentials donated.
+
+    Keyed on every trace-time constant; the geometry rides as a pytree
+    argument (its static metadata — eps, kinds — keys the jit cache), so
+    an annealing cascade compiles one executable per stage eps and the
+    potentials handed from stage k to stage k+1 give their buffers back.
+    """
+    key = (method, max_iter, momentum, use_pallas, inner_steps,
+           check_every, precision)
+    fn = _DONATING_STAGE_CACHE.get(key)
+    if fn is None:
+        run = _SOLVERS[method][1]
+
+        @partial(jax.jit, donate_argnums=(3, 4))
+        def fn(geom, a, b, f_init, g_init, tol):
+            return run(
+                geom, a, b, tol=tol, max_iter=max_iter, momentum=momentum,
+                f_init=f_init, g_init=g_init, mesh=None, mesh_axis="data",
+                use_pallas=use_pallas, inner_steps=inner_steps,
+                check_every=check_every, precision=precision,
+            )
+
+        _DONATING_STAGE_CACHE[key] = fn
+    return fn
 
 
 def solve_annealed(
@@ -501,6 +581,9 @@ def solve_annealed(
     rank: Optional[int] = None,
     key: Optional[jax.Array] = None,
     use_pallas: Optional[bool] = None,
+    inner_steps: Optional[int] = None,
+    check_every: Optional[int] = None,
+    precision: str = "highest",
 ) -> AnnealedResult:
     """Annealed solve with per-stage diagnostics.
 
@@ -539,7 +622,11 @@ def solve_annealed(
             max_iter=max_iter if last else schedule.stage_iters,
             momentum=momentum, f_init=f, g_init=g,
             mesh=mesh, mesh_axis=mesh_axis, rank=rank, key=key,
-            use_pallas=use_pallas,
+            use_pallas=use_pallas, inner_steps=inner_steps,
+            check_every=check_every, precision=precision,
+            # warm-started stages donate the previous stage's potential
+            # buffers (two fewer live (n,)+(m,) copies per stage)
+            donate=k > 0,
         )
         prev_err = res.marginal_err
         f, g = res.f, res.g
@@ -565,6 +652,9 @@ def solve(
     rank: Optional[int] = None,
     key: Optional[jax.Array] = None,
     use_pallas: Optional[bool] = None,
+    inner_steps: Optional[int] = None,
+    check_every: Optional[int] = None,
+    precision: str = "highest",
 ) -> SinkhornResult:
     """Solve one entropic OT problem with any solver variant in the repo.
 
@@ -592,6 +682,26 @@ def solve(
     compiles Pallas, i.e. TPU; ``True`` forces it — interpret mode
     off-TPU; ``False`` forces the XLA operators). Families without a
     fused plan fall back to XLA operators either way.
+    ``inner_steps``: iterations fused into ONE persistent megakernel
+    launch (``kernels.fused_loop``: factors VMEM-resident, potentials
+    on-chip, marginal error only at block boundaries) when the fused
+    plan offers one. ``check_every``: convergence-check cadence in
+    iterations (must be a multiple of ``inner_steps``); the XLA paths
+    get the same fewer-syncs win from it. Auto (both ``None``): 8/8 on
+    compiled TPU fused plans whose factors fit VMEM, 1/1 everywhere
+    else. Converged results always satisfy ``err <= tol``; ``n_iter``
+    becomes a multiple of the cadence and ``max_iter`` rounds up to one.
+    Sharded methods reject ``inner_steps > 1`` (the block would drop the
+    per-iteration psum) but honor ``check_every``.
+    ``precision``: ``"highest"`` (default) or ``"bf16"`` — the
+    mixed-precision execution policy: kernel factors (features,
+    log-features, dense Gibbs kernels, low-rank factors) are STORED and
+    STREAMED in bfloat16, halving the HBM bytes the memory-bound
+    iteration streams, while every contraction and LSE accumulates in
+    f32. Expect cost agreement with fp32 at the bf16 relative rounding
+    (~1e-2 on potentials at moderate eps; tighter on costs); keep
+    ``"highest"`` for small-eps log solves where log-features span
+    hundreds of nats.
     """
     if method == "auto":
         method = _auto_method(problem, mesh)
@@ -600,11 +710,15 @@ def solve(
             problem, method=method, schedule=schedule, tol=tol,
             max_iter=max_iter, momentum=momentum, mesh=mesh,
             mesh_axis=mesh_axis, rank=rank, key=key, use_pallas=use_pallas,
+            inner_steps=inner_steps, check_every=check_every,
+            precision=precision,
         ).result
     return _solve_stage(
         problem, method, problem.eps, tol=tol, max_iter=max_iter,
         momentum=momentum, f_init=None, g_init=None, mesh=mesh,
         mesh_axis=mesh_axis, rank=rank, key=key, use_pallas=use_pallas,
+        inner_steps=inner_steps, check_every=check_every,
+        precision=precision,
     )
 
 
@@ -682,6 +796,9 @@ class BatchedSinkhorn:
         momentum: float = 1.0,
         schedule: Optional[EpsSchedule] = None,
         use_pallas: Optional[bool] = None,
+        inner_steps: Optional[int] = None,
+        check_every: Optional[int] = None,
+        precision: str = "highest",
     ):
         if method not in self._FACTORED + self._QUADRATIC:
             raise ValueError(
@@ -696,8 +813,13 @@ class BatchedSinkhorn:
         self.schedule = schedule
         # threaded into the vmapped solver bodies: vmap over the fused
         # Pallas kernels adds B as a leading grid axis, so the whole bucket
-        # group runs through one fused plan per iteration
+        # group runs through one fused plan — or one megakernel block
+        # (inner_steps) — per iteration; check_every/precision apply the
+        # shared cadence and mixed-precision policies per problem
         self.use_pallas = use_pallas
+        self.inner_steps = inner_steps
+        self.check_every = check_every
+        self.precision = precision
         if schedule is not None and method not in ("log_factored",
                                                    "accelerated"):
             raise ValueError(
@@ -707,6 +829,12 @@ class BatchedSinkhorn:
         self._build_geometry = _ENGINE_GEOMETRIES[method]
         self._runner = _ENGINE_RUNNERS[method]
         self._vsolve_features = jax.jit(jax.vmap(self._solve_one))
+        # warm-started twin: the incoming potentials are DONATED, so a
+        # re-solve loop (GAN steps, annealing drivers) reuses the previous
+        # solve's (B, n)/(B, m) potential buffers instead of holding both
+        self._vsolve_features_warm = jax.jit(
+            jax.vmap(self._solve_one_warm), donate_argnums=(4, 5),
+        )
         self._vsolve_clouds_cache: Dict[Tuple[int, float], Callable] = {}
 
     # -- single-problem bodies (vmapped) ------------------------------------
@@ -718,6 +846,18 @@ class BatchedSinkhorn:
             geom, a, b, tol=self.tol, max_iter=self.max_iter,
             momentum=self.momentum, f_init=None, g_init=None,
             mesh=None, mesh_axis="data", use_pallas=self.use_pallas,
+            inner_steps=self.inner_steps, check_every=self.check_every,
+            precision=self.precision,
+        )
+
+    def _solve_one_warm(self, ka, kb, a, b, f0, g0) -> SinkhornResult:
+        geom = self._build_geometry(ka, kb, self.eps)
+        return self._runner(
+            geom, a, b, tol=self.tol, max_iter=self.max_iter,
+            momentum=self.momentum, f_init=f0, g_init=g0,
+            mesh=None, mesh_axis="data", use_pallas=self.use_pallas,
+            inner_steps=self.inner_steps, check_every=self.check_every,
+            precision=self.precision,
         )
 
     def _make_cloud_solver(self, d: int, R: float):
@@ -750,6 +890,8 @@ class BatchedSinkhorn:
                               else self.schedule.stage_iters),
                     momentum=self.momentum, f_init=f, g_init=g,
                     mesh=None, mesh_axis="data", use_pallas=self.use_pallas,
+                    inner_steps=self.inner_steps,
+                    check_every=self.check_every, precision=self.precision,
                 )
                 prev_err = res.marginal_err
                 f, g = res.f, res.g
@@ -760,20 +902,33 @@ class BatchedSinkhorn:
 
     # -- stacked entry points ------------------------------------------------
 
-    def solve_stacked(self, ka, kb, a, b) -> SinkhornResult:
+    def solve_stacked(self, ka, kb, a, b, f_init=None,
+                      g_init=None) -> SinkhornResult:
         """Solve B problems given stacked kernel data.
 
         factored: ``ka``/``kb`` = features (B, n, r)/(B, m, r);
         log_factored/accelerated: log-features; quadratic/log_quadratic:
         ``ka`` = cost matrices (B, n, m) and ``kb`` is ignored (pass ``ka``).
         Returns a stacked :class:`SinkhornResult` (leading axis B).
+
+        ``f_init``/``g_init`` (both (B, n)/(B, m)) warm-start the
+        potentials and are DONATED to the jitted solver: pass the previous
+        solve's ``res.f``/``res.g`` in a re-solve loop and their buffers
+        are reused in place rather than held alongside the new ones.
         """
         if self.schedule is not None:
             raise ValueError(
                 "stacked features pin the kernel to one eps — annealing "
                 "needs solve_point_clouds (geometry mode)"
             )
-        return self._vsolve_features(ka, kb, a, b)
+        if (f_init is None) != (g_init is None):
+            raise ValueError(
+                "pass both f_init and g_init (or neither) — the warm-start "
+                "entry donates the pair"
+            )
+        if f_init is None:
+            return self._vsolve_features(ka, kb, a, b)
+        return self._vsolve_features_warm(ka, kb, a, b, f_init, g_init)
 
     def solve_point_clouds(self, x, y, anchors, a=None, b=None, *,
                            R: Optional[float] = None) -> SinkhornResult:
@@ -908,6 +1063,9 @@ def solve_many(
     max_iter: int = 2000,
     momentum: float = 1.0,
     use_pallas: Optional[bool] = None,
+    inner_steps: Optional[int] = None,
+    check_every: Optional[int] = None,
+    precision: str = "highest",
     mesh=None,
     mesh_axis: str = "data",
 ) -> List[SinkhornResult]:
@@ -938,20 +1096,28 @@ def solve_many(
                 f"{sorted(_SHARDED_TWIN)}, got {method!r}"
             )
         # use_pallas is moot here: sharded geometries refuse fused local
-        # plans (they would drop the psum), so the XLA operators always run
+        # plans (they would drop the psum), so the XLA operators always
+        # run. inner_steps is NOT moot — it is passed through so the
+        # sharded runner raises its clear megakernel-refusal error
+        # instead of silently dropping the knob; check_every/precision
+        # apply as everywhere.
         return [
             solve(p.__class__(p.geometry.rebuild_at(eps), p.a, p.b),
                   method=twin, tol=tol, max_iter=max_iter,
-                  momentum=momentum, mesh=mesh, mesh_axis=mesh_axis)
+                  momentum=momentum, mesh=mesh, mesh_axis=mesh_axis,
+                  inner_steps=inner_steps, check_every=check_every,
+                  precision=precision)
             for p in problems
         ]
     key = (method, float(eps), float(tol), int(max_iter), float(momentum),
-           use_pallas)
+           use_pallas, inner_steps, check_every, precision)
     engine = _ENGINE_CACHE.get(key)
     if engine is None:
         engine = BatchedSinkhorn(
             eps=eps, method=method, tol=tol, max_iter=max_iter,
             momentum=momentum, use_pallas=use_pallas,
+            inner_steps=inner_steps, check_every=check_every,
+            precision=precision,
         )
         _ENGINE_CACHE[key] = engine
     return engine.solve_many(problems)

@@ -59,6 +59,8 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ops import check_precision
+from ..kernels.tiling import compute_f32
 from .features import (
     arccos_features,
     gaussian_log_features,
@@ -117,6 +119,33 @@ def data_radius(*point_sets: jax.Array) -> jax.Array:
 def _masked_log(w: jax.Array) -> jax.Array:
     """log w with log(0) pinned to -inf without 0*inf NaN hazards."""
     return jnp.where(w > 0, jnp.log(jnp.where(w > 0, w, 1.0)), -jnp.inf)
+
+
+def _stored(arr: jax.Array, precision: str) -> jax.Array:
+    """Apply the storage half of the mixed-precision execution policy.
+
+    ``precision="bf16"`` keeps the loop-invariant kernel representation
+    (features, log-features, dense Gibbs kernel, low-rank factors) in
+    bfloat16 — halving the HBM bytes the roofline says the iteration is
+    bound by — while every contraction/LSE still ACCUMULATES in f32 (the
+    bf16 operand promotes on use; on TPU the widening convert fuses into
+    the matmul, so only the streamed bytes change)."""
+    check_precision(precision)
+    return arr.astype(jnp.bfloat16) if precision == "bf16" else arr
+
+
+def _compute(arr: jax.Array) -> jax.Array:
+    """Upcast a bf16-STORED operand to f32 at application time.
+
+    Placed INSIDE the operator closures so the hoisted array keeps bf16
+    storage (and bf16 HBM streaming — XLA/Mosaic fuse the widening
+    convert into the consuming contraction) while the multiply/accumulate
+    runs in f32. Relying on dtype promotion instead is a trap: JAX's weak
+    types demote ``weak-f32 @ bf16`` to a bf16 contraction, silently
+    dropping the accumulation precision the policy guarantees. Thin alias
+    of :func:`repro.kernels.tiling.compute_f32` — the kernels' register
+    upcast — so the rule has one implementation."""
+    return compute_f32(arr)
 
 
 def _factored_log_apply(log_u: jax.Array, log_w: jax.Array,
@@ -183,7 +212,8 @@ class Geometry(abc.ABC):
     def apply_kt(self, u: jax.Array) -> jax.Array:
         """K^T u, shape (n,) -> (m,)."""
 
-    def operators(self) -> Tuple[Callable, Callable]:
+    def operators(self, *, precision: str = "highest"
+                  ) -> Tuple[Callable, Callable]:
         """(matvec, rmatvec) with loop-invariant work HOISTED.
 
         Solvers call this once before entering their ``lax.while_loop`` so
@@ -191,7 +221,14 @@ class Geometry(abc.ABC):
         log-features, building per-axis grid kernels) happens once per
         solve, not twice per iteration — XLA does not hoist such work out
         of a while_loop body. Defaults to the bound per-call operators.
+
+        ``precision`` is the mixed-precision execution policy (see
+        :func:`_stored`): ``"bf16"`` stores the hoisted kernel
+        representation at half width with f32 accumulation. Families
+        override to apply it; this default validates and ignores it (no
+        hoisted representation to store).
         """
+        check_precision(precision)
         return self.apply_k, self.apply_kt
 
     # -- log-domain operators ------------------------------------------------
@@ -212,9 +249,13 @@ class Geometry(abc.ABC):
             "scaling-space method"
         )
 
-    def log_operators(self) -> Tuple[Callable, Callable]:
+    def log_operators(self, *, precision: str = "highest"
+                      ) -> Tuple[Callable, Callable]:
         """(log_matvec, log_rmatvec) with loop-invariant work hoisted —
-        the log-domain twin of :meth:`operators`."""
+        the log-domain twin of :meth:`operators` (``precision="bf16"``
+        stores log-features/log-kernels at half width; every LSE still
+        accumulates in f32)."""
+        check_precision(precision)
         return self.log_apply_k, self.log_apply_kt
 
     # -- dense views ---------------------------------------------------------
@@ -313,15 +354,18 @@ class _FeatureKernelOps:
     the factors ONCE and close over them, so solver while_loops never
     recompute features per iteration."""
 
-    def operators(self):
-        xi, zeta = self.features()
-        return (lambda v: xi @ (zeta.T @ v)), (lambda u: zeta @ (xi.T @ u))
+    def operators(self, *, precision: str = "highest"):
+        xi, zeta = (_stored(w, precision) for w in self.features())
+        return (lambda v: _compute(xi) @ (_compute(zeta).T @ v),
+                lambda u: _compute(zeta) @ (_compute(xi).T @ u))
 
-    def log_operators(self):
+    def log_operators(self, *, precision: str = "highest"):
         eps = self.eps
-        lxi, lzt = self.log_features()
-        return (lambda g: _factored_log_apply(lxi, lzt, g / eps),
-                lambda f: _factored_log_apply(lzt, lxi, f / eps))
+        lxi, lzt = (_stored(w, precision) for w in self.log_features())
+        return (lambda g: _factored_log_apply(_compute(lxi), _compute(lzt),
+                                              g / eps),
+                lambda f: _factored_log_apply(_compute(lzt), _compute(lxi),
+                                              f / eps))
 
     def apply_k(self, v):
         return self.operators()[0](v)
@@ -363,15 +407,16 @@ class DenseCost(Geometry):
     def shape(self) -> Tuple[int, int]:
         return self.C.shape
 
-    def operators(self):
-        K = jnp.exp(-self.C / self.eps)       # materialized ONCE per solve
-        return (lambda v: K @ v), (lambda u: K.T @ u)
+    def operators(self, *, precision: str = "highest"):
+        # materialized ONCE per solve (bf16 storage under the policy)
+        K = _stored(jnp.exp(-self.C / self.eps), precision)
+        return (lambda v: _compute(K) @ v), (lambda u: _compute(K).T @ u)
 
-    def log_operators(self):
+    def log_operators(self, *, precision: str = "highest"):
         eps = self.eps
-        negC = -self.C / eps
-        return (lambda g: _lse(negC + (g / eps)[None, :], axis=1),
-                lambda f: _lse(negC + (f / eps)[:, None], axis=0))
+        negC = _stored(-self.C / eps, precision)
+        return (lambda g: _lse(_compute(negC) + (g / eps)[None, :], axis=1),
+                lambda f: _lse(_compute(negC) + (f / eps)[:, None], axis=0))
 
     def apply_k(self, v):
         return self.operators()[0](v)
@@ -673,6 +718,11 @@ class NystromLowRank(Geometry):
     def rank(self) -> int:
         return self.L.shape[1]
 
+    def operators(self, *, precision: str = "highest"):
+        L, Rt = _stored(self.L, precision), _stored(self.Rt, precision)
+        return (lambda v: _compute(L) @ (_compute(Rt) @ v),
+                lambda u: _compute(Rt).T @ (_compute(L).T @ u))
+
     def apply_k(self, v):
         return self.L @ (self.Rt @ v)
 
@@ -779,21 +829,27 @@ class GridSeparable(Geometry):
             out = jnp.moveaxis(t, -1, k)                    # (..., out_k)
         return out.reshape(-1)
 
-    def operators(self):
-        Ks = tuple(jnp.exp(-ck / self.eps)                  # built ONCE
+    def operators(self, *, precision: str = "highest"):
+        # per-axis kernels are tiny ((n_k, m_k), streamed once per
+        # contraction) — bf16 storage is applied for policy uniformity,
+        # not for a measurable byte win
+        Ks = tuple(_stored(jnp.exp(-ck / self.eps), precision)  # built ONCE
                    for ck in self._axis_costs())
         KTs = tuple(Kk.T for Kk in Ks)
         gy, gx = self.grid_shape_y, self.grid_shape_x
-        return (lambda v: self._conv(Ks, gy, v),
-                lambda u: self._conv(KTs, gx, u))
+        return (lambda v: self._conv([_compute(k) for k in Ks], gy, v),
+                lambda u: self._conv([_compute(k) for k in KTs], gx, u))
 
-    def log_operators(self):
+    def log_operators(self, *, precision: str = "highest"):
         eps = self.eps
-        logKs = tuple(-ck / eps for ck in self._axis_costs())
+        logKs = tuple(_stored(-ck / eps, precision)
+                      for ck in self._axis_costs())
         logKTs = tuple(lk.T for lk in logKs)
         gy, gx = self.grid_shape_y, self.grid_shape_x
-        return (lambda g: self._log_conv(logKs, gy, g / eps),
-                lambda f: self._log_conv(logKTs, gx, f / eps))
+        return (lambda g: self._log_conv([_compute(k) for k in logKs],
+                                         gy, g / eps),
+                lambda f: self._log_conv([_compute(k) for k in logKTs],
+                                         gx, f / eps))
 
     def apply_k(self, v):
         return self.operators()[0](v)

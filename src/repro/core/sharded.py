@@ -62,7 +62,9 @@ from .geometry import (
     FactoredPositive,
     GaussianPointCloud,
     Geometry,
+    _compute,
     _register,
+    _stored,
 )
 from .grad import rot_geometry
 from .sinkhorn import (
@@ -90,13 +92,15 @@ _lse = jax.scipy.special.logsumexp
 
 def _psum_factored_ops(xi, zeta, axis: str) -> Tuple[Callable, Callable]:
     """Scaling-space K v / K^T u on local feature rows: one r-vector psum
-    per application — the paper's entire per-iteration traffic."""
+    per application — the paper's entire per-iteration traffic.
+    ``_compute`` upcasts bf16-stored factor rows at application time so
+    the local contraction and the psum'd r-vector stay f32."""
 
     def apply_k(v):                              # (m/p,) -> (n/p,)
-        return xi @ jax.lax.psum(zeta.T @ v, axis)
+        return _compute(xi) @ jax.lax.psum(_compute(zeta).T @ v, axis)
 
     def apply_kt(u):                             # (n/p,) -> (m/p,)
-        return zeta @ jax.lax.psum(xi.T @ u, axis)
+        return _compute(zeta) @ jax.lax.psum(_compute(xi).T @ u, axis)
 
     return apply_k, apply_kt
 
@@ -114,12 +118,13 @@ def _psum_factored_log_ops(lxi, lzt, eps: float,
     """
 
     def log_apply_k(g):                          # log(K e^{g/eps}), (n/p,)
-        t = psum_logsumexp(lzt + (g / eps)[:, None], axis, axis=0)   # (r,)
-        return _lse(lxi + t[None, :], axis=1)
+        t = psum_logsumexp(_compute(lzt) + (g / eps)[:, None],
+                           axis, axis=0)                             # (r,)
+        return _lse(_compute(lxi) + t[None, :], axis=1)
 
     def log_apply_kt(f):                         # log(K^T e^{f/eps}), (m/p,)
-        t = psum_logsumexp(lxi + (f / eps)[:, None], axis, axis=0)
-        return _lse(lzt + t[None, :], axis=1)
+        t = psum_logsumexp(_compute(lxi) + (f / eps)[:, None], axis, axis=0)
+        return _lse(_compute(lzt) + t[None, :], axis=1)
 
     return log_apply_k, log_apply_kt
 
@@ -139,12 +144,14 @@ class _PsumOpsMixin:
     def spmd_axis(self) -> Optional[str]:
         return self.axis
 
-    def operators(self):
-        xi, zeta = self.features()
+    def operators(self, *, precision: str = "highest"):
+        # the mixed-precision policy composes with sharding for free: the
+        # LOCAL factor rows store bf16, the psum'd r-vector stays f32
+        xi, zeta = (_stored(w, precision) for w in self.features())
         return _psum_factored_ops(xi, zeta, self.axis)
 
-    def log_operators(self):
-        lxi, lzt = self.log_features()
+    def log_operators(self, *, precision: str = "highest"):
+        lxi, lzt = (_stored(w, precision) for w in self.log_features())
         return _psum_factored_log_ops(lxi, lzt, self.eps, self.axis)
 
     def apply_k(self, v):
@@ -368,7 +375,8 @@ def _result_specs(axis: str) -> SinkhornResult:
 
 
 def _sharded_body(geom_local: Geometry, a, b, w1, w2, *, axis, mode,
-                  tol, max_iter, momentum) -> SinkhornResult:
+                  tol, max_iter, momentum, check_every=1,
+                  precision="highest") -> SinkhornResult:
     """Runs INSIDE shard_map. All arrays are per-device shards.
 
     Composes the SAME solver entry points as the single-device path —
@@ -385,10 +393,12 @@ def _sharded_body(geom_local: Geometry, a, b, w1, w2, *, axis, mode,
         return sinkhorn_log_geometry(
             geom_local, a, b, tol=tol, max_iter=max_iter, momentum=momentum,
             f_init=w1, g_init=w2, use_pallas=False,
+            check_every=check_every, precision=precision,
         )
     return sinkhorn_geometry(
         geom_local, a, b, tol=tol, max_iter=max_iter, momentum=momentum,
-        u_init=w1, use_pallas=False,
+        u_init=w1, use_pallas=False, check_every=check_every,
+        precision=precision,
     )
 
 
@@ -415,6 +425,8 @@ def sharded_sinkhorn_geometry(
     mesh, geom: Geometry, a, b, *, axis: str = "data", mode: str = "auto",
     tol: float = 1e-6, max_iter: int = 2000, momentum: float = 1.0,
     f_init: Optional[jax.Array] = None, g_init: Optional[jax.Array] = None,
+    inner_steps: Optional[int] = None, check_every: Optional[int] = None,
+    precision: str = "highest",
 ) -> SinkhornResult:
     """Shard-map solve of any feature-capable Geometry on ``mesh``.
 
@@ -434,6 +446,15 @@ def sharded_sinkhorn_geometry(
         raise ValueError(
             f"mode must be 'auto' | 'scaling' | 'log', got {mode!r}"
         )
+    if inner_steps is not None and int(inner_steps) > 1:
+        raise ValueError(
+            "inner_steps > 1 (the persistent megakernel) is not available "
+            "on sharded solves: the fused block iterates on LOCAL feature "
+            "rows only and would silently drop the per-iteration psum. "
+            "Use check_every= for the fewer-syncs cadence win, or solve on "
+            "one device for the megakernel."
+        )
+    check_every = 1 if check_every is None else int(check_every)
     geom = _prepare(mesh, geom, axis)
     if mode == "auto":
         mode = _auto_mode(geom)
@@ -474,7 +495,8 @@ def sharded_sinkhorn_geometry(
         la, lb, lw1, lw2 = args[len(arrays):]
         return _sharded_body(
             geom_local, la, lb, lw1, lw2, axis=axis, mode=mode, tol=tol,
-            max_iter=max_iter, momentum=momentum,
+            max_iter=max_iter, momentum=momentum, check_every=check_every,
+            precision=precision,
         )
 
     fn = shard_map(

@@ -49,12 +49,14 @@ Implementation notes
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels.ops import (
+    check_precision,
     default_interpret,
     geometry_ops,
     notify_plan_selected,
@@ -222,22 +224,40 @@ def make_log_step(
     return step
 
 
-def run_marginal_loop(step, carry0, *, tol: float, max_iter: int, dtype):
+def run_marginal_loop(step, carry0, *, tol: float, max_iter: int, dtype,
+                      steps_per_check: int = 1, iters_per_step: int = 1):
     """Run ``step`` until the marginal error drops below ``tol``.
 
-    One mandatory iteration is always taken (so e.g. u.Kv = 1 holds for the
-    Eq.-6 dual shortcut). Returns ``(n_iter, carry, err)``.
+    One mandatory check block is always taken (so e.g. u.Kv = 1 holds for
+    the Eq.-6 dual shortcut). Returns ``(n_iter, carry, err)``.
+
+    Cadence semantics (``check_every`` at the solver surface):
+    ``steps_per_check`` step calls run back to back (Python-unrolled, so
+    the intermediate error computations are dead code XLA eliminates)
+    before each convergence check, and each step call itself advances
+    ``iters_per_step`` iterations (1 for the per-iteration steps,
+    ``inner_steps`` for the fused megakernel block step). The loop
+    therefore checks the error — and a distributed run synchronizes on the
+    replicated scalar — once every ``steps_per_check * iters_per_step``
+    iterations; the result still satisfies ``err <= tol`` on convergence,
+    but ``n_iter`` is a multiple of the cadence and ``max_iter`` is
+    effectively rounded UP to the next multiple (a block that starts
+    before the cap runs to completion). A divergence (non-finite error)
+    inside a block is likewise detected at its boundary — NaN/inf iterates
+    propagate, they never un-poison.
 
     Distribution hook: the loop itself is SPMD-agnostic — under
     ``shard_map`` the step's ``err_reduce`` (see :func:`geometry_reduce`)
     psums the error, so the while_loop carries a REPLICATED scalar and
     every device exits at the same iteration (no control-flow divergence).
     """
+    cadence = steps_per_check * iters_per_step
 
     def body(state):
-        it, carry, _ = state
-        carry, err = step(carry)
-        return it + 1, carry, err
+        it, carry, err = state
+        for _ in range(steps_per_check):
+            carry, err = step(carry)
+        return it + cadence, carry, err
 
     def cond(state):
         it, _, err = state
@@ -253,7 +273,7 @@ def run_marginal_loop(step, carry0, *, tol: float, max_iter: int, dtype):
 
 
 def _maybe_pallas_plan(geom: Geometry, use_pallas: Optional[bool],
-                       mode: str):
+                       mode: str, precision: str = "highest"):
     """Resolve the ``use_pallas`` policy into a fused plan (or ``None``).
 
     ``None`` (auto) turns the fused path on exactly when the kernels would
@@ -273,14 +293,79 @@ def _maybe_pallas_plan(geom: Geometry, use_pallas: Optional[bool],
         use_pallas = not default_interpret()
     if not use_pallas:
         return None
-    plan = geometry_ops(geom, mode=mode)
+    plan = geometry_ops(geom, mode=mode, precision=precision)
     if plan is not None:
         notify_plan_selected({
             "geometry": type(geom).__name__,
             "mode": plan.mode,
             "kind": plan.kind,
+            "precision": plan.precision,
         })
     return plan
+
+
+def _resolve_cadence(plan, inner_steps: Optional[int],
+                     check_every: Optional[int]):
+    """Resolve the ``inner_steps`` / ``check_every`` knobs into concrete
+    (inner, check) iteration counts.
+
+    Auto policy (both ``None``): when the fused plan COMPILES (TPU) and
+    offers a megakernel block step, run 8 iterations per launch and check
+    convergence once per block; everywhere else keep today's
+    check-every-iteration semantics (interpret-mode megakernels are a
+    test/bench configuration, never an auto win). Explicit values are
+    honored on every path — on the XLA operators ``inner_steps`` degrades
+    to the same check cadence (unrolled steps, fewer error reductions and
+    loop syncs), which is the documented fallback semantics.
+    """
+    auto = inner_steps is None and check_every is None
+    if auto:
+        if plan is not None and not plan.interpret \
+                and plan.make_block_step is not None:
+            return 8, 8, True
+        return 1, 1, True
+    inner = 1 if inner_steps is None else int(inner_steps)
+    if inner < 1:
+        raise ValueError(f"inner_steps must be >= 1, got {inner_steps}")
+    check = inner if check_every is None else int(check_every)
+    if check < 1:
+        raise ValueError(f"check_every must be >= 1, got {check_every}")
+    if check % inner != 0:
+        raise ValueError(
+            f"check_every ({check}) must be a multiple of inner_steps "
+            f"({inner}): the marginal error only exists at megakernel "
+            "block boundaries"
+        )
+    return inner, check, False
+
+
+def _plan_loop(plan, step_args, *, tol, max_iter, dtype,
+               inner_steps, check_every, momentum):
+    """Shared hot-loop driver for both fused-plan modes: resolve the
+    cadence, prefer the persistent megakernel block step (``inner_steps``
+    iterations per launch, carries on-chip), fall back to the streaming
+    per-iteration step at the same check cadence."""
+    a, b = step_args
+    inner, check, auto = _resolve_cadence(plan, inner_steps, check_every)
+    block = None
+    if inner > 1 and plan.make_block_step is not None:
+        block = plan.make_block_step(a, b, inner_steps=inner,
+                                     momentum=momentum)
+    if block is not None:
+        step, init = block
+        return init, functools.partial(
+            run_marginal_loop, step, tol=tol, max_iter=max_iter,
+            dtype=dtype, steps_per_check=check // inner,
+            iters_per_step=inner,
+        )
+    # no megakernel at this shape/budget: auto keeps the exact
+    # per-iteration semantics; explicit knobs keep the check cadence
+    # (unrolled steps) so iteration-count semantics stay identical
+    step, init = plan.make_step(a, b, momentum=momentum)
+    return init, functools.partial(
+        run_marginal_loop, step, tol=tol, max_iter=max_iter, dtype=dtype,
+        steps_per_check=1 if auto else check,
+    )
 
 
 def _finish_scaling(a, b, u, v, it, err, *, eps, tol,
@@ -291,18 +376,22 @@ def _finish_scaling(a, b, u, v, it, err, *, eps, tol,
 
 
 def _solve_scaling_plan(plan, a, b, *, eps, tol, max_iter, momentum,
-                        u_init) -> SinkhornResult:
+                        u_init, inner_steps=None,
+                        check_every=None) -> SinkhornResult:
     """Alg. 1 with the ``lax.while_loop`` body routed through the fused
     Pallas plan — semantics (masking, warm start, marginal check, momentum)
-    identical to :func:`sinkhorn_operator`."""
+    identical to :func:`sinkhorn_operator` up to the check cadence
+    (``inner_steps`` iterations per megakernel launch, error at block
+    boundaries)."""
     n, m = a.shape[0], b.shape[0]
     dtype = a.dtype
     u0 = jnp.ones((n,), dtype) if u_init is None else u_init
     v0 = jnp.ones((m,), dtype)
-    step, init = plan.make_step(a, b, momentum=momentum)
-    it, (u, v, _), err = run_marginal_loop(
-        step, init(u0, v0), tol=tol, max_iter=max_iter, dtype=dtype,
+    init, loop = _plan_loop(
+        plan, (a, b), tol=tol, max_iter=max_iter, dtype=dtype,
+        inner_steps=inner_steps, check_every=check_every, momentum=momentum,
     )
+    it, (u, v, _), err = loop(init(u0, v0))
     return _finish_scaling(a, b, u, v, it, err, eps=eps, tol=tol)
 
 
@@ -323,12 +412,16 @@ def sinkhorn_operator(
     momentum: float = 1.0,
     u_init: Optional[jax.Array] = None,
     err_reduce: Callable[[jax.Array], jax.Array] = jnp.sum,
+    check_every: int = 1,
 ) -> SinkhornResult:
     """Algorithm 1 on an abstract positive kernel operator.
 
     ``err_reduce`` is the SPMD hook: sharded callers pass the psum'd
     reduction of :func:`geometry_reduce` so the convergence scalar (and
-    the dual value) replicate across devices.
+    the dual value) replicate across devices. ``check_every`` sets the
+    convergence-check cadence (see :func:`run_marginal_loop`): iteration
+    counts become multiples of it, the converged result still satisfies
+    ``err <= tol``.
     """
     n, m = a.shape[0], b.shape[0]
     dtype = a.dtype
@@ -337,7 +430,8 @@ def sinkhorn_operator(
     step = make_scaling_step(matvec, rmatvec, a, b, momentum=momentum,
                              err_reduce=err_reduce)
     it, (u, v, _), err = run_marginal_loop(
-        step, (u0, v0, rmatvec(u0)), tol=tol, max_iter=max_iter, dtype=dtype
+        step, (u0, v0, rmatvec(u0)), tol=tol, max_iter=max_iter,
+        dtype=dtype, steps_per_check=int(check_every),
     )
     return _finish_scaling(a, b, u, v, it, err, eps=eps, tol=tol,
                            reduce=err_reduce)
@@ -353,6 +447,9 @@ def sinkhorn_geometry(
     momentum: float = 1.0,
     u_init: Optional[jax.Array] = None,
     use_pallas: Optional[bool] = None,
+    inner_steps: Optional[int] = None,
+    check_every: Optional[int] = None,
+    precision: str = "highest",
 ) -> SinkhornResult:
     """Algorithm 1 in scaling space on any Geometry's native operators.
 
@@ -369,18 +466,34 @@ def sinkhorn_geometry(
     forces the XLA operators. Either way per-family precomputation (dense
     Gibbs kernel, feature materialization, per-axis grid kernels) happens
     once per solve, not inside the while_loop.
+
+    ``inner_steps`` fuses that many full iterations into ONE persistent
+    megakernel launch (``kernels.fused_loop``) when the plan offers one
+    (factors VMEM-resident, scalings on-chip, marginal error only at
+    block boundaries); ``check_every`` sets the convergence-check cadence
+    in iterations (a multiple of ``inner_steps``). Both default to an
+    auto policy — 8/8 on compiled (TPU) fused plans whose working set
+    fits VMEM, today's 1/1 semantics everywhere else; on the XLA
+    operators an explicit ``inner_steps`` degrades to the same check
+    cadence. Iteration counts become multiples of the cadence; converged
+    results still satisfy ``err <= tol``. ``precision="bf16"`` stores and
+    streams the kernel factors at half width with f32 accumulation (the
+    mixed-precision execution policy).
     """
-    plan = _maybe_pallas_plan(geom, use_pallas, "scaling")
+    check_precision(precision)
+    plan = _maybe_pallas_plan(geom, use_pallas, "scaling", precision)
     if plan is not None:
         return _solve_scaling_plan(
             plan, a, b, eps=geom.eps, tol=tol, max_iter=max_iter,
-            momentum=momentum, u_init=u_init,
+            momentum=momentum, u_init=u_init, inner_steps=inner_steps,
+            check_every=check_every,
         )
-    matvec, rmatvec = geom.operators()
+    _, check, _ = _resolve_cadence(None, inner_steps, check_every)
+    matvec, rmatvec = geom.operators(precision=precision)
     return sinkhorn_operator(
         matvec, rmatvec, a, b, eps=geom.eps, tol=tol,
         max_iter=max_iter, momentum=momentum, u_init=u_init,
-        err_reduce=geometry_reduce(geom),
+        err_reduce=geometry_reduce(geom), check_every=check,
     )
 
 
@@ -437,6 +550,9 @@ def sinkhorn_log_geometry(
     f_init: Optional[jax.Array] = None,
     g_init: Optional[jax.Array] = None,
     use_pallas: Optional[bool] = None,
+    inner_steps: Optional[int] = None,
+    check_every: Optional[int] = None,
+    precision: str = "highest",
 ) -> SinkhornResult:
     """Log-domain (small-eps safe) Sinkhorn on any log-capable Geometry.
 
@@ -448,18 +564,27 @@ def sinkhorn_log_geometry(
     routes the while_loop body through the fused log-feature Pallas plan
     (``kernels.ops.geometry_ops(mode="log")``) — auto-on when the backend
     compiles Pallas (TPU), opt-in interpret mode otherwise.
+
+    ``inner_steps`` / ``check_every`` / ``precision`` are the log-domain
+    twins of the :func:`sinkhorn_geometry` knobs: a persistent log
+    megakernel block (potentials + stage-1 LSE carry on-chip), the
+    convergence-check cadence (iteration counts become multiples of it),
+    and bf16 log-feature storage with f32 LSE accumulation.
     """
-    plan = _maybe_pallas_plan(geom, use_pallas, "log")
+    check_precision(precision)
+    plan = _maybe_pallas_plan(geom, use_pallas, "log", precision)
     if plan is not None:
         return _solve_log_plan(
             plan, a, b, eps=geom.eps, tol=tol, max_iter=max_iter,
             momentum=momentum, f_init=f_init, g_init=g_init,
+            inner_steps=inner_steps, check_every=check_every,
         )
-    log_matvec, log_rmatvec = geom.log_operators()
+    _, check, _ = _resolve_cadence(None, inner_steps, check_every)
+    log_matvec, log_rmatvec = geom.log_operators(precision=precision)
     return _log_domain_solve(
         log_matvec, log_rmatvec, a, b, eps=geom.eps, tol=tol,
         max_iter=max_iter, momentum=momentum, f_init=f_init, g_init=g_init,
-        err_reduce=geometry_reduce(geom),
+        err_reduce=geometry_reduce(geom), check_every=check,
     )
 
 
@@ -494,27 +619,32 @@ def _log_domain_solve(
     log_matvec, log_rmatvec, a, b, *, eps, tol, max_iter, momentum=1.0,
     f_init=None, g_init=None,
     err_reduce: Callable[[jax.Array], jax.Array] = jnp.sum,
+    check_every: int = 1,
 ) -> SinkhornResult:
     f0, g0, dtype = _log_init(a, b, f_init, g_init)
     step = make_log_step(log_matvec, log_rmatvec, a, b, eps=eps,
                          momentum=momentum, err_reduce=err_reduce)
     it, (f, g), err = run_marginal_loop(
-        step, (f0, g0), tol=tol, max_iter=max_iter, dtype=dtype
+        step, (f0, g0), tol=tol, max_iter=max_iter, dtype=dtype,
+        steps_per_check=int(check_every),
     )
     return _finish_log(a, b, f, g, it, err, eps=eps, tol=tol,
                        reduce=err_reduce)
 
 
 def _solve_log_plan(plan, a, b, *, eps, tol, max_iter, momentum,
-                    f_init, g_init) -> SinkhornResult:
+                    f_init, g_init, inner_steps=None,
+                    check_every=None) -> SinkhornResult:
     """Log-domain solve with the while_loop body routed through the fused
     log-feature Pallas plan — semantics identical to
-    :func:`_log_domain_solve` (same iterates, masking, warm starts)."""
+    :func:`_log_domain_solve` (same iterates, masking, warm starts) up to
+    the check cadence."""
     f0, g0, dtype = _log_init(a, b, f_init, g_init)
-    step, init = plan.make_step(a, b, momentum=momentum)
-    it, (f, g, _), err = run_marginal_loop(
-        step, init(f0, g0), tol=tol, max_iter=max_iter, dtype=dtype
+    init, loop = _plan_loop(
+        plan, (a, b), tol=tol, max_iter=max_iter, dtype=dtype,
+        inner_steps=inner_steps, check_every=check_every, momentum=momentum,
     )
+    it, (f, g, _), err = loop(init(f0, g0))
     return _finish_log(a, b, f, g, it, err, eps=eps, tol=tol)
 
 

@@ -5,6 +5,9 @@
   kermatvec    — factored-kernel contraction + fused Sinkhorn half-step
   logmatvec    — stabilized log-space LSE contraction + fused log half-step
                  (small-eps path)
+  fused_loop   — persistent multi-iteration megakernel (scaling + log):
+                 ``inner_steps`` full iterations per launch, factors
+                 VMEM-resident, carries on-chip, error at block boundaries
   tiling       — shared lane-padding + block-size selection policy
 
 Each kernel ships with a pure-jnp oracle in ``ref.py``; tests sweep shapes
@@ -12,9 +15,17 @@ and dtypes in interpret mode. ``ops.py`` holds the jitted public wrappers
 plus ``geometry_ops`` — the fused execution plan the solvers route their
 hot loop through (``use_pallas``).
 """
+from .fused_loop import (
+    block_plan_fits,
+    block_vmem_bytes,
+    log_sinkhorn_block_pallas,
+    sinkhorn_block_pallas,
+)
 from .ops import (
+    PRECISIONS,
     GeometryOps,
     batched_sinkhorn_halfstep,
+    check_precision,
     default_interpret,
     feature_contract,
     feature_matvec,
@@ -32,8 +43,14 @@ from .ops import (
 
 __all__ = [
     "GeometryOps",
+    "PRECISIONS",
     "batched_sinkhorn_halfstep",
+    "block_plan_fits",
+    "block_vmem_bytes",
+    "check_precision",
     "default_interpret",
+    "log_sinkhorn_block_pallas",
+    "sinkhorn_block_pallas",
     "feature_contract",
     "feature_matvec",
     "fused_batched_sinkhorn_iteration",

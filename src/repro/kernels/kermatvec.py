@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .tiling import LANE, pad_axis, pick_block
+from .tiling import LANE, compute_f32 as _f32, pad_axis, pick_block
 
 __all__ = [
     "feature_contract_pallas",
@@ -47,7 +47,7 @@ def _feature_contract_kernel(xi_ref, u_ref, t_ref):
         t_ref[...] = jnp.zeros_like(t_ref)
 
     t_ref[...] += jax.lax.dot_general(
-        xi_ref[...],
+        _f32(xi_ref[...]),
         u_ref[...],
         (((0,), (0,)), ((), ())),          # contract the n axis
         preferred_element_type=jnp.float32,
@@ -91,7 +91,7 @@ def feature_contract_pallas(
 def _halfstep_kernel(xi_ref, t_ref, marg_ref, o_ref):
     """o = marg / (Xi_blk @ t) — matvec + divide in one VMEM pass."""
     kv = jax.lax.dot_general(
-        xi_ref[...],
+        _f32(xi_ref[...]),
         t_ref[...],
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -102,7 +102,7 @@ def _halfstep_kernel(xi_ref, t_ref, marg_ref, o_ref):
 def _matvec_kernel(xi_ref, t_ref, o_ref):
     """o = Xi_blk @ t — the divide-free twin (convergence-check marginal)."""
     o_ref[...] = jax.lax.dot_general(
-        xi_ref[...],
+        _f32(xi_ref[...]),
         t_ref[...],
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .tiling import LANE, pad_axis, pick_block
+from .tiling import LANE, compute_f32 as _f32, pad_axis, pick_block
 
 __all__ = [
     "log_matvec_pallas",
@@ -54,7 +54,7 @@ def _finite_or_zero(m: jax.Array) -> jax.Array:
 
 
 def _log_matvec_kernel(logm_ref, t_ref, o_ref):
-    s = logm_ref[...] + t_ref[...]                    # (bm, r)
+    s = _f32(logm_ref[...]) + t_ref[...]              # (bm, r)
     m = jnp.max(s, axis=1, keepdims=True)             # exact joint row max
     m = _finite_or_zero(m)
     o_ref[...] = m + jnp.log(
@@ -102,7 +102,7 @@ def _log_contract_kernel(lw_ref, s_ref, t_ref, *, n_cols: int):
     def _init():
         t_ref[...] = jnp.full_like(t_ref, -jnp.inf)
 
-    lw = lw_ref[...]                                   # (bn, br)
+    lw = _f32(lw_ref[...])                             # (bn, br)
     cols = []
     for c in range(n_cols):
         z = lw + s_ref[:, c][:, None]                  # (bn, br)
@@ -159,7 +159,7 @@ def _log_halfstep_kernel(lw_ref, t_ref, lmarg_ref, o_ref, *, scale: float,
     (subtract instead of divide) in one VMEM pass. Per column c the
     (bm, r) broadcast ``lw + t[:, c]`` takes its exact joint row max — B
     is unrolled at trace time."""
-    lw = lw_ref[...]                                   # (bm, r)
+    lw = _f32(lw_ref[...])                             # (bm, r)
     cols = []
     for c in range(n_cols):
         z = lw + t_ref[:, c][None, :]                  # (bm, r)

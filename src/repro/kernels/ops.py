@@ -34,6 +34,13 @@ import jax
 import jax.numpy as jnp
 
 from .feature_map import gaussian_feature_map_pallas
+from .fused_loop import (
+    block_plan_fits,
+    log_sinkhorn_block_pallas,
+    relax_log,
+    relax_scaling,
+    sinkhorn_block_pallas,
+)
 from .kermatvec import (
     feature_contract_pallas,
     feature_matvec_pallas,
@@ -60,6 +67,8 @@ __all__ = [
     "fused_batched_sinkhorn_iteration",
     "relax_scaling",
     "relax_log",
+    "PRECISIONS",
+    "check_precision",
     "GeometryOps",
     "geometry_ops",
     "observe_plan_selection",
@@ -252,37 +261,10 @@ def fused_batched_sinkhorn_iteration(
 
 
 # ---------------------------------------------------------------------------
-# Over-relaxation (shared with the XLA solvers in core.sinkhorn)
-# ---------------------------------------------------------------------------
-
-
-def relax_scaling(new: jax.Array, old: jax.Array,
-                  momentum: float) -> jax.Array:
-    """Geometric over-relaxation  u <- old^{1-w} * new^w  (Thibault et al.),
-    the scaling-space form. ``momentum`` is a trace-time constant.
-
-    Zero scalings (zero-weight / bucket-padded atoms pin u = 0 from the
-    first iteration) bypass the blend: for w > 1 the geometric mean hits
-    0^{1-w} = inf and 0 * inf = NaN, which would poison the marginal error
-    and silently stop the while_loop. Masked entries take ``new`` verbatim
-    — the exact twin of the -inf guard in :func:`relax_log`."""
-    if momentum == 1.0:
-        return new
-    mixed = old ** (1.0 - momentum) * new ** momentum
-    return jnp.where((old > 0) & (new > 0), mixed, new)
-
-
-def relax_log(new: jax.Array, old: jax.Array, momentum: float) -> jax.Array:
-    """Log-space over-relaxation  f <- (1-w) old + w new  — the exact log of
-    the geometric scaling relaxation. Atoms whose potential is pinned at
-    -inf (zero weight) bypass the blend: (1-w)*(-inf) + w*(-inf) is NaN for
-    w > 1, so the masked entries take ``new`` verbatim."""
-    if momentum == 1.0:
-        return new
-    mixed = (1.0 - momentum) * old + momentum * new
-    return jnp.where(jnp.isfinite(old) & jnp.isfinite(new), mixed, new)
-
-
+# Over-relaxation: relax_scaling / relax_log are canonical in
+# kernels.fused_loop (imported above, re-exported here) so the megakernel
+# module stays import-cycle-free while the XLA solvers in core.sinkhorn
+# keep importing them from this namespace.
 # ---------------------------------------------------------------------------
 # Geometry-chosen dispatch (the pallas_ops() hook consumer)
 # ---------------------------------------------------------------------------
@@ -292,6 +274,30 @@ def _masked_log(w: jax.Array) -> jax.Array:
     """log w with log(0) pinned to -inf without 0*inf NaN hazards (local
     twin of ``core.geometry._masked_log`` — kernels must not import core)."""
     return jnp.where(w > 0, jnp.log(jnp.where(w > 0, w, 1.0)), -jnp.inf)
+
+
+PRECISIONS = ("highest", "bf16")
+
+
+def check_precision(precision: str) -> str:
+    """Validate a ``precision=`` execution-policy value (shared with
+    ``core.geometry``; kernels must not import core)."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISIONS}"
+        )
+    return precision
+
+
+def _store_features(xi, zeta, precision: str):
+    """Apply the storage half of the mixed-precision policy: bf16 halves
+    the HBM stream of the (n, r)/(m, r) factors — the roofline-dominant
+    bytes — while every kernel upcasts tiles to f32 in registers, so the
+    contraction/LSE ACCUMULATION precision is unchanged."""
+    check_precision(precision)
+    if precision == "bf16":
+        return xi.astype(jnp.bfloat16), zeta.astype(jnp.bfloat16)
+    return xi, zeta
 
 
 class GeometryOps(NamedTuple):
@@ -325,6 +331,25 @@ class GeometryOps(NamedTuple):
                     loop-carry initialization.
     ``eps``       — log mode only: the regularization the potentials live
                     at.
+    ``make_block_step`` — ``(a, b, *, inner_steps, momentum) ->
+                    Optional[(step, init)]``: the PERSISTENT megakernel
+                    plan. ``step`` advances ``inner_steps`` full
+                    iterations in ONE ``pallas_call`` (``fused_loop``) —
+                    factors VMEM-resident, carries on-chip, marginal error
+                    emitted at the block boundary only — over the SAME
+                    carry as ``make_step`` (so the two are
+                    interchangeable in ``run_marginal_loop`` and match
+                    elementwise at block boundaries). Returns ``None``
+                    when the working set exceeds the VMEM budget
+                    (``fused_loop.block_plan_fits``) — callers then fall
+                    back to the streaming per-iteration ``make_step``.
+    ``interpret`` — whether the plan's kernels run in interpret mode
+                    (off-TPU). The solver auto policy keys on this: the
+                    megakernel auto-enables only where it compiles.
+    ``precision`` — the execution policy the plan was built at
+                    ("highest" | "bf16"): bf16 stores/streams the factors
+                    at half width; all contractions and LSE accumulations
+                    stay f32.
     """
 
     mode: str
@@ -334,9 +359,15 @@ class GeometryOps(NamedTuple):
     make_step: Callable
     apply_kt: Optional[Callable] = None
     eps: Optional[float] = None
+    make_block_step: Optional[Callable] = None
+    interpret: bool = False
+    precision: str = "highest"
 
 
-def _scaling_plan(kind: str, xi, zeta, interpret) -> GeometryOps:
+def _scaling_plan(kind: str, xi, zeta, interpret,
+                  precision: str = "highest") -> GeometryOps:
+    xi, zeta = _store_features(xi, zeta, precision)
+
     def iteration(a, b, u):
         return fused_sinkhorn_iteration(xi, zeta, a, b, u,
                                         interpret=interpret)
@@ -369,13 +400,36 @@ def _scaling_plan(kind: str, xi, zeta, interpret) -> GeometryOps:
 
         return step, init
 
+    def make_block_step(a, b, *, inner_steps: int, momentum: float = 1.0):
+        n, m = a.shape[0], b.shape[0]
+        if not block_plan_fits(n, m, xi.shape[1], 1, xi.dtype, interpret):
+            return None
+        ac, bc = a[:, None], b[:, None]
+
+        def step(carry):
+            u, v, s = carry
+            u2, v2, s2, err = sinkhorn_block_pallas(
+                xi, zeta, ac, bc, u[:, None], v[:, None], s[:, None],
+                inner_steps=inner_steps, momentum=momentum,
+                interpret=interpret,
+            )
+            return (u2[:, 0], v2[:, 0], s2[:, 0]), err
+
+        def init(u0, v0):
+            return (u0, v0, apply_kt(u0))
+
+        return step, init
+
     return GeometryOps(mode="scaling", kind=kind, features=(xi, zeta),
                        iteration=iteration, make_step=make_step,
-                       apply_kt=apply_kt)
+                       apply_kt=apply_kt, make_block_step=make_block_step,
+                       interpret=interpret, precision=precision)
 
 
-def _log_plan(kind: str, log_xi, log_zeta, eps: float,
-              interpret) -> GeometryOps:
+def _log_plan(kind: str, log_xi, log_zeta, eps: float, interpret,
+              precision: str = "highest") -> GeometryOps:
+    log_xi, log_zeta = _store_features(log_xi, log_zeta, precision)
+
     def iteration(loga, logb, f):
         return fused_log_sinkhorn_iteration(
             log_xi, log_zeta, loga, logb, f, eps=eps, interpret=interpret
@@ -416,12 +470,39 @@ def _log_plan(kind: str, log_xi, log_zeta, eps: float,
 
         return step, init
 
+    def make_block_step(a, b, *, inner_steps: int, momentum: float = 1.0):
+        n, m = a.shape[0], b.shape[0]
+        if not block_plan_fits(n, m, log_xi.shape[1], 1, log_xi.dtype,
+                               interpret):
+            return None
+        loga = _masked_log(a)[:, None]
+        logb = _masked_log(b)[:, None]
+        bc = b[:, None]
+
+        def step(carry):
+            f, g, t1 = carry
+            f2, g2, t2, err = log_sinkhorn_block_pallas(
+                log_xi, log_zeta, loga, logb, bc,
+                f[:, None], g[:, None], t1,
+                inner_steps=inner_steps, eps=eps, momentum=momentum,
+                interpret=interpret,
+            )
+            return (f2[:, 0], g2[:, 0], t2), err
+
+        def init(f0, g0):
+            return (f0, g0, contract_f(f0))
+
+        return step, init
+
     return GeometryOps(mode="log", kind=kind, features=(log_xi, log_zeta),
-                       iteration=iteration, make_step=make_step, eps=eps)
+                       iteration=iteration, make_step=make_step, eps=eps,
+                       make_block_step=make_block_step, interpret=interpret,
+                       precision=precision)
 
 
 def geometry_ops(geom, *, interpret: Optional[bool] = None,
-                 mode: str = "scaling") -> Optional[GeometryOps]:
+                 mode: str = "scaling",
+                 precision: str = "highest") -> Optional[GeometryOps]:
     """Fused-kernel plan for ``geom``, chosen by the geometry itself.
 
     ``mode="scaling"`` builds the linear-feature plan (Alg. 1 on scalings);
@@ -431,9 +512,15 @@ def geometry_ops(geom, *, interpret: Optional[bool] = None,
     grids) — callers then fall back to the geometry's XLA operators. The
     spec format is owned by ``Geometry.pallas_ops``; this function only
     maps specs to kernels.
+
+    ``precision="bf16"`` stores/streams the (log-)factors — including the
+    feature blocks produced by the fused Gaussian map for point-cloud
+    geometries — at half width; contractions and LSE accumulations stay
+    f32 (see ``_store_features``).
     """
     if mode not in ("scaling", "log"):
         raise ValueError(f"unknown plan mode {mode!r}")
+    check_precision(precision)
     spec = geom.pallas_ops()
     if spec is None:
         return None
@@ -442,14 +529,16 @@ def geometry_ops(geom, *, interpret: Optional[bool] = None,
     if kind == "factored":
         xi, zeta = spec["xi"], spec["zeta"]
         if mode == "scaling":
-            return _scaling_plan(kind, xi, zeta, interpret)
+            return _scaling_plan(kind, xi, zeta, interpret, precision)
         return _log_plan(kind, _masked_log(xi), _masked_log(zeta),
-                         float(geom.eps), interpret)
+                         float(geom.eps), interpret, precision)
     if kind == "log_factored":
         lxi, lzt = spec["log_xi"], spec["log_zeta"]
         if mode == "log":
-            return _log_plan(kind, lxi, lzt, float(spec["eps"]), interpret)
-        return _scaling_plan(kind, jnp.exp(lxi), jnp.exp(lzt), interpret)
+            return _log_plan(kind, lxi, lzt, float(spec["eps"]), interpret,
+                             precision)
+        return _scaling_plan(kind, jnp.exp(lxi), jnp.exp(lzt), interpret,
+                             precision)
     if kind == "gaussian":
         fmap = functools.partial(
             gaussian_feature_map,
@@ -459,8 +548,9 @@ def geometry_ops(geom, *, interpret: Optional[bool] = None,
         )
         xi, zeta = fmap(spec["x"]), fmap(spec["y"])
         if mode == "scaling":
-            return _scaling_plan(kind, xi, zeta, interpret)
-        return _log_plan(kind, xi, zeta, float(geom.eps), interpret)
+            return _scaling_plan(kind, xi, zeta, interpret, precision)
+        return _log_plan(kind, xi, zeta, float(geom.eps), interpret,
+                         precision)
     raise ValueError(f"unknown pallas_ops spec kind {kind!r}")
 
 

@@ -23,10 +23,20 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["LANE", "SUBLANE", "round_up", "pad_axis", "pick_block"]
+__all__ = ["LANE", "SUBLANE", "round_up", "pad_axis", "pick_block",
+           "compute_f32"]
 
 LANE = 128      # trailing-dim quantum (f32)
 SUBLANE = 8     # second-to-last-dim quantum (f32)
+
+
+def compute_f32(x: jax.Array) -> jax.Array:
+    """Upcast a reduced-precision (bf16-stored) feature tile to f32 in
+    registers — the compute half of the mixed-precision policy: storage
+    and HBM streaming may be bf16, every contraction/LSE ACCUMULATES in
+    f32 (Mosaic fuses the widening convert into the consuming op). Shared
+    by every kernel in this package so the rule lives in one place."""
+    return x.astype(jnp.float32) if x.dtype != jnp.float32 else x
 
 
 def round_up(size: int, mult: int = LANE) -> int:
