@@ -1,0 +1,164 @@
+"""Serving-path benchmark: open-loop latency + batched/warm capacity.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --quick \
+        [--baseline BENCH_seed.json]
+
+Three measurements over one synthetic heavy-tailed trace
+(:mod:`repro.serving.traffic`), all through the SAME engine and the same
+pre-planned runner set:
+
+* ``serve/open_loop``   — Poisson arrivals at the spec rate; p50/p99
+  latency from each request's scheduled arrival (queueing included),
+  warm-start hit rates, achieved mean batch occupancy.
+* ``serve/closed_loop`` — submit-all-then-drain capacity of the batched +
+  warm-started service (full megabatches).
+* ``serve/sequential_cold`` — the same requests, one at a time, batch 1,
+  warm starts off: what a caller pays looping the engine per request.
+
+``serve/serve_speedup`` is closed-loop rps over sequential-cold rps — a
+same-machine ratio (like the batched/fused speedup gates), so it
+transfers across runner generations where raw rps does not.
+
+Gates (standalone or via ``run.py --serve``): post-warmup runner
+compiles and retraces must be ZERO, and with ``--baseline`` the speedup
+ratio must stay within 25% of the committed artifact's.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(quick: bool = False):
+    """Returns ``(serve_speedup, recompiles)``; prints CSV rows."""
+    from repro.serving import (
+        OTService,
+        TrafficSpec,
+        make_traffic,
+        run_open_loop,
+        traffic_cells,
+    )
+
+    spec = TrafficSpec(
+        n_requests=60 if quick else 200,
+        rate_hz=150.0,
+        pool_size=12 if quick else 32,
+        size_classes=((40, 56), (90, 70)) if quick
+        else ((40, 56), (90, 70), (150, 120)),
+        seed=0,
+    )
+    max_batch = 4 if quick else 8
+    traffic = make_traffic(spec)
+    problems = [req.problem for req in traffic]
+
+    svc = OTService(eps=spec.eps, method="log_factored", tol=1e-6,
+                    max_batch=max_batch, max_wait=0.004)
+    cells = traffic_cells(traffic, svc.engine)
+    built = svc.warmup(cells)
+    print(f"# serve warmup: {built} runners over {len(cells)} cells",
+          file=sys.stderr)
+
+    print("name,us_per_call,derived")
+
+    # -- open loop: latency under the spec arrival rate ----------------------
+    report = run_open_loop(svc, traffic)
+    stats = svc.stats()
+    warm = stats["warm"]
+    us_req = (report.duration_s / report.completed * 1e6
+              if report.completed else float("nan"))
+    print(f"serve/open_loop,{us_req:.1f},"
+          f"rps={report.rps:.1f};p50_ms={report.p50_ms:.2f};"
+          f"p99_ms={report.p99_ms:.2f};"
+          f"completed={report.completed}/{len(traffic)};"
+          f"mean_batch={stats['mean_batch']:.2f}")
+    print(f"serve/warm_cache,0,hit_rate={warm['hit_rate']:.3f};"
+          f"exact={warm['exact_hits']};near={warm['near_hits']};"
+          f"miss={warm['misses']}")
+    print(f"serve/warm_iters,0,warm={stats['mean_iters_warm']:.2f};"
+          f"cold={stats['mean_iters_cold']:.2f}")
+
+    # -- closed loop: batched + warm-started capacity ------------------------
+    # fresh service (cold warm cache, fresh accounting) SHARING the
+    # pre-planned runner cache, so capacity is measured without compiles
+    svc_cap = OTService(eps=spec.eps, method="log_factored", tol=1e-6,
+                        max_batch=max_batch, max_wait=0.004)
+    svc_cap.runners = svc.runners
+    t0 = time.perf_counter()
+    res_cap = svc_cap.solve_many(problems)
+    dt_cap = time.perf_counter() - t0
+    rps_cap = len(problems) / dt_cap
+    print(f"serve/closed_loop,{dt_cap / len(problems) * 1e6:.1f},"
+          f"rps={rps_cap:.1f};mean_batch={svc_cap.stats()['mean_batch']:.2f}")
+
+    # -- sequential cold baseline: loop the engine per request ---------------
+    # what a caller pays TODAY without the service: one cold B=1
+    # engine.solve_many call per problem (the engine's own jit cache, its
+    # jnp pad/stack/unpad glue). One untimed pass first so every cell's
+    # B=1 executable is compiled — steady state vs steady state.
+    engine = svc.engine
+    for p in problems[: len(cells) * 4]:
+        engine.solve_many([p])
+    t0 = time.perf_counter()
+    res_seq = []
+    for p in problems:
+        res_seq.append(engine.solve_many([p])[0])
+    dt_seq = time.perf_counter() - t0
+    rps_seq = len(problems) / dt_seq
+    print(f"serve/sequential_cold,{dt_seq / len(problems) * 1e6:.1f},"
+          f"rps={rps_seq:.1f}")
+
+    # served results must agree with the sequential cold solves (warm
+    # starts and megabatch padding are exactness-preserving)
+    worst = max(
+        abs(float(rc.cost) - float(rs.cost))
+        / max(abs(float(rs.cost)), 1e-12)
+        for rc, rs in zip(res_cap, res_seq)
+    )
+    print(f"serve/exactness,0,worst_rel_cost={worst:.2e};"
+          f"match={worst < 1e-5}")
+
+    serve_speedup = rps_cap / rps_seq
+    print(f"serve/serve_speedup,0,ratio={serve_speedup:.2f}")
+
+    # any runner build or retrace after the explicit warmup is a serving
+    # bug (an unplanned bucket cell, dtype drift, a weak-type leak)
+    runner = svc.runners.snapshot()
+    recompiles = (runner["misses"] - built) + runner["extra_traces"]
+    print(f"serve/recompiles,0,post_warmup={runner['misses'] - built};"
+          f"extra_traces={runner['extra_traces']};ok={recompiles == 0}")
+    return serve_speedup, recompiles
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="committed BENCH_*.json; fail on >25%% "
+                         "serve-speedup regression")
+    args = ap.parse_args()
+    speedup, recompiles = main(quick=args.quick)
+    failures = []
+    if recompiles:
+        failures.append(
+            f"{recompiles} post-warmup serving-path compiles/retraces "
+            "(must be zero)")
+    if args.baseline:
+        with open(args.baseline) as fh:
+            base = json.load(fh)
+        base_speedup = base.get("serve_speedup")
+        if base_speedup is not None:
+            floor = 0.75 * float(base_speedup)
+            status = "PASS" if speedup >= floor else "FAIL"
+            print(f"serve/baseline_gate,0,speedup={speedup:.2f};"
+                  f"baseline={float(base_speedup):.2f};floor={floor:.2f};"
+                  f"ok={status}")
+            if speedup < floor:
+                failures.append(
+                    f"serve speedup {speedup:.2f}x regressed >25% vs "
+                    f"committed baseline {float(base_speedup):.2f}x "
+                    f"(floor {floor:.2f}x, {args.baseline})")
+    if failures:
+        print("# FAIL: " + "; ".join(failures), file=sys.stderr)
+        sys.exit(1)

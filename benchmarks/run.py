@@ -12,6 +12,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   */pallas*    — kernels.ops fused-plan vs XLA parity + iteration counts
                  (``--pallas``; interpret mode off-TPU, compiled on TPU)
   roofline/*   — §Roofline   dry-run derived terms per (arch x shape x mesh)
+  serve/*      — serving     OTService open-loop latency, warm-start hit
+                 rates, batched/warm capacity vs per-request engine loop,
+                 zero-recompile gate (``--serve``)
 
 ``--quick`` is the tier-1 smoke entry: CPU-sized problems, minutes total.
 ``--json PATH`` additionally writes the rows as a ``BENCH_*.json`` artifact
@@ -142,6 +145,10 @@ def main() -> None:
     ap.add_argument("--pallas", action="store_true",
                     help="add the fused-plan parity axes (bench_batch "
                          "--pallas, bench_tradeoff --pallas)")
+    ap.add_argument("--serve", action="store_true",
+                    help="add the serving axis (bench_serve open-loop "
+                         "latency, batched/warm capacity, zero-recompile "
+                         "gate)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as a BENCH_*.json artifact")
     ap.add_argument("--baseline", metavar="PATH", default=None,
@@ -221,6 +228,19 @@ def main() -> None:
     emit(buf.getvalue())
     print(f"# batched speedup {speedup:.2f}x (target >= 3x)", file=sys.stderr)
 
+    serve_speedup = serve_recompiles = None
+    if args.serve:
+        section("serving (OTService open loop + capacity, bench_serve)")
+        from . import bench_serve
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            serve_speedup, serve_recompiles = bench_serve.main(
+                quick=args.quick)
+        emit(buf.getvalue())
+        print(f"# serve speedup {serve_speedup:.2f}x vs per-request "
+              f"engine loop; {serve_recompiles} post-warmup compiles "
+              "(target 0)", file=sys.stderr)
+
     section("gan gradient cost (Sec 4)")
     from . import bench_gan
     buf = io.StringIO()
@@ -262,6 +282,8 @@ def main() -> None:
         )
         if fused_speedup is not None:
             artifact["fused_speedup"] = float(fused_speedup)
+        if serve_speedup is not None:
+            artifact["serve_speedup"] = float(serve_speedup)
         with open(args.json, "w") as fh:
             json.dump(artifact, fh, indent=1)
         print(f"# wrote {len(parsed)} rows to {args.json}", file=sys.stderr)
@@ -274,6 +296,10 @@ def main() -> None:
         failures.append(
             f"megakernel fused-vs-unfused us/iter ratio {fused_speedup:.2f}x"
             " < 1.5x on every solver/iter shape")
+    if serve_recompiles:
+        failures.append(
+            f"{serve_recompiles} post-warmup serving-path compiles/"
+            "retraces (must be zero)")
     if args.baseline:
         with open(args.baseline) as fh:
             base = json.load(fh)
@@ -300,6 +326,18 @@ def main() -> None:
                     f"megakernel speedup {fused_speedup:.2f}x regressed "
                     f">25% vs committed baseline {float(base_fused):.2f}x "
                     f"(floor {ffloor:.2f}x, {args.baseline})")
+        base_serve = base.get("serve_speedup")
+        if serve_speedup is not None and base_serve is not None:
+            sfloor = 0.75 * float(base_serve)
+            sstatus = "PASS" if serve_speedup >= sfloor else "FAIL"
+            print(f"serve/baseline_gate,0,speedup={serve_speedup:.2f};"
+                  f"baseline={float(base_serve):.2f};floor={sfloor:.2f};"
+                  f"ok={sstatus}")
+            if serve_speedup < sfloor:
+                failures.append(
+                    f"serve speedup {serve_speedup:.2f}x regressed >25% "
+                    f"vs committed baseline {float(base_serve):.2f}x "
+                    f"(floor {sfloor:.2f}x, {args.baseline})")
     if args.pallas and any("pallas_ok" in r and "ok=False" in r
                            for r in rows):
         failures.append("fused-plan parity check failed (batch/pallas_ok)")

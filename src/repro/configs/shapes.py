@@ -16,6 +16,7 @@ __all__ = [
     "all_cells",
     "OT_SUPPORT_BUCKETS",
     "ot_bucket",
+    "ot_batch_bucket",
     "OTBatchShape",
 ]
 
@@ -82,10 +83,30 @@ def ot_bucket(n: int) -> int:
     return ((n + top - 1) // top) * top
 
 
+def ot_batch_bucket(b: int, max_batch: int) -> int:
+    """Batch-count bucket for the serving layer's compiled-runner cache:
+    the smallest power of two >= b, capped at ``max_batch``. The jitted
+    vmapped solver retraces per distinct leading B, so the service pads
+    megabatches up to these buckets (replicating a real problem lane —
+    exact, the duplicate lanes are discarded) and keeps the number of
+    compiled executables per support-shape at O(log max_batch)."""
+    if b <= 0:
+        raise ValueError(f"batch size must be positive, got {b}")
+    if b >= max_batch:
+        return max_batch
+    p = 1
+    while p < b:
+        p *= 2
+    return min(p, max_batch)
+
+
 @dataclasses.dataclass(frozen=True)
 class OTBatchShape:
     """A bucketed batch cell: B problems padded to (n_pad, m_pad) with a
-    shared feature rank r. The key the batched engine groups problems by."""
+    shared feature rank r. The key the batched engine groups problems by
+    (and the serving layer's compiled-runner cache is keyed on, together
+    with the ``ot_batch_bucket`` of the megabatch size). Quadratic-method
+    cells carry ``r = 0`` — the dense cost has no feature rank."""
 
     n_pad: int
     m_pad: int
@@ -94,3 +115,7 @@ class OTBatchShape:
     @classmethod
     def for_problem(cls, n: int, m: int, r: int) -> "OTBatchShape":
         return cls(n_pad=ot_bucket(n), m_pad=ot_bucket(m), r=r)
+
+    @classmethod
+    def for_quadratic(cls, n: int, m: int) -> "OTBatchShape":
+        return cls(n_pad=ot_bucket(n), m_pad=ot_bucket(m), r=0)

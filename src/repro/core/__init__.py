@@ -22,9 +22,14 @@ from .api import (
     BatchedSinkhorn,
     EpsSchedule,
     OTProblem,
+    clear_engine_cache,
+    engine_cache_info,
+    get_engine,
+    set_engine_cache_capacity,
     solve,
     solve_annealed,
     solve_many,
+    unpad_result,
 )
 from .barycenter import (
     BarycenterResult,
@@ -145,4 +150,9 @@ __all__ = [
     "solve_annealed",
     "solve_many",
     "squared_euclidean",
+    "unpad_result",
+    "clear_engine_cache",
+    "engine_cache_info",
+    "get_engine",
+    "set_engine_cache_capacity",
 ]

@@ -54,13 +54,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import OrderedDict
 from functools import partial
 from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.shapes import OTBatchShape, ot_bucket
+from ..configs.shapes import OTBatchShape
 from .accelerated import accelerated_sinkhorn_geometry
 from .geometry import (
     ArcCosinePointCloud,
@@ -87,6 +88,11 @@ __all__ = [
     "solve",
     "solve_annealed",
     "solve_many",
+    "unpad_result",
+    "get_engine",
+    "engine_cache_info",
+    "set_engine_cache_capacity",
+    "clear_engine_cache",
 ]
 
 METHODS = (
@@ -979,10 +985,43 @@ class BatchedSinkhorn:
 
     # -- ragged entry point --------------------------------------------------
 
-    def solve_many(self, problems: Sequence[OTProblem]) -> List[SinkhornResult]:
+    def solve_many(
+        self,
+        problems: Sequence[OTProblem],
+        *,
+        f_inits: Optional[Sequence[Optional[jax.Array]]] = None,
+        g_inits: Optional[Sequence[Optional[jax.Array]]] = None,
+    ) -> List[SinkhornResult]:
         """Solve a ragged list of problems: bucket by padded shape, pad with
         zero-weight atoms, vmap each bucket, unpad. Exact w.r.t. per-problem
-        solves (masked zero weights), order-preserving."""
+        solves (masked zero weights), order-preserving.
+
+        ``f_inits``/``g_inits`` optionally warm-start individual problems
+        (per-problem ``(n_i,)``/``(m_i,)`` arrays, ``None`` entries cold-
+        start). Any bucket containing at least one warm entry routes through
+        the donated warm twin; cold entries inside such a bucket are padded
+        with ZEROS, which is exactly the cold default (``f = 0`` is ``u = 1``
+        in scaling space, and the log solver's ``_log_init`` starts from
+        zeros before pinning dead atoms), so mixing warm and cold problems
+        in one bucket stays elementwise-exact.
+        """
+        if (f_inits is None) != (g_inits is None):
+            raise ValueError(
+                "pass both f_inits and g_inits (or neither) — warm starts "
+                "come as potential pairs"
+            )
+        if f_inits is not None:
+            if len(f_inits) != len(problems) or len(g_inits) != len(problems):
+                raise ValueError(
+                    f"f_inits/g_inits must match problems "
+                    f"({len(problems)}), got {len(f_inits)}/{len(g_inits)}"
+                )
+            for i, (fi, gi) in enumerate(zip(f_inits, g_inits)):
+                if (fi is None) != (gi is None):
+                    raise ValueError(
+                        f"problem {i}: pass both f_init and g_init (or "
+                        "neither)"
+                    )
         groups: Dict[OTBatchShape, List[int]] = {}
         datas: Dict[int, Tuple[jax.Array, jax.Array]] = {}
         for i, p in enumerate(problems):
@@ -991,50 +1030,53 @@ class BatchedSinkhorn:
                     f"problem {i} declares eps={p.eps} but this engine "
                     f"solves at eps={self.eps}; build one engine per eps"
                 )
-            ka, kb = self._kernel_data(p)
+            ka, kb = self.kernel_data(p)
             datas[i] = (ka, kb)
-            if self.method in self._QUADRATIC:
-                shape = OTBatchShape(ot_bucket(ka.shape[0]),
-                                     ot_bucket(ka.shape[1]), 0)
-            else:
-                shape = OTBatchShape.for_problem(
-                    ka.shape[0], kb.shape[0], ka.shape[1]
-                )
-            groups.setdefault(shape, []).append(i)
+            groups.setdefault(self.batch_shape(ka, kb), []).append(i)
 
         out: List[Optional[SinkhornResult]] = [None] * len(problems)
         for shape, idxs in groups.items():
-            kas, kbs, aws, bws = [], [], [], []
+            kas, kbs, aws, bws, f0s, g0s = [], [], [], [], [], []
+            warm = f_inits is not None and any(
+                f_inits[i] is not None for i in idxs
+            )
             for i in idxs:
                 p = problems[i]
-                ka, kb = datas[i]
-                if self.method in self._QUADRATIC:
-                    ka = _pad_rows(ka, shape.n_pad, replicate=True)
-                    ka = _pad_rows(ka.T, shape.m_pad, replicate=True).T
-                    kb = ka
-                else:
-                    ka = _pad_rows(ka, shape.n_pad, replicate=True)
-                    kb = _pad_rows(kb, shape.m_pad, replicate=True)
+                ka, kb = self.pad_kernel_data(*datas[i], shape)
                 kas.append(ka)
                 kbs.append(kb)
                 aws.append(_pad_rows(p.a, shape.n_pad, replicate=False))
                 bws.append(_pad_rows(p.b, shape.m_pad, replicate=False))
-            res = self._vsolve_features(
-                jnp.stack(kas), jnp.stack(kbs), jnp.stack(aws), jnp.stack(bws)
-            )
-            for j, i in enumerate(idxs):
-                p = problems[i]
-                n, m = p.a.shape[0], p.b.shape[0]
-                out[i] = SinkhornResult(
-                    u=res.u[j, :n], v=res.v[j, :m],
-                    f=res.f[j, :n], g=res.g[j, :m],
-                    cost=res.cost[j], n_iter=res.n_iter[j],
-                    marginal_err=res.marginal_err[j],
-                    converged=res.converged[j],
+                if warm:
+                    fi = f_inits[i]
+                    gi = g_inits[i]
+                    if fi is None:                 # cold lane: zeros == cold
+                        f0s.append(jnp.zeros((shape.n_pad,), p.a.dtype))
+                        g0s.append(jnp.zeros((shape.m_pad,), p.b.dtype))
+                    else:
+                        f0s.append(_pad_rows(fi, shape.n_pad,
+                                             replicate=False))
+                        g0s.append(_pad_rows(gi, shape.m_pad,
+                                             replicate=False))
+            stacked = (jnp.stack(kas), jnp.stack(kbs),
+                       jnp.stack(aws), jnp.stack(bws))
+            if warm:
+                res = self._vsolve_features_warm(
+                    *stacked, jnp.stack(f0s), jnp.stack(g0s)
                 )
+            else:
+                res = self._vsolve_features(*stacked)
+            for j, i in enumerate(idxs):
+                out[i] = unpad_result(res, j, problems[i].a.shape[0],
+                                      problems[i].b.shape[0])
         return out
 
-    def _kernel_data(self, p: OTProblem) -> Tuple[jax.Array, jax.Array]:
+    # -- bucketing / padding helpers (shared with repro.serving) -------------
+
+    def kernel_data(self, p: OTProblem) -> Tuple[jax.Array, jax.Array]:
+        """The stacked-array representation of one problem's kernel under
+        this engine's method: (log-)features for the factored methods, the
+        dense cost (twice) for the quadratic ones."""
         geom = p.geometry.rebuild_at(self.eps)
         if self.method == "factored":
             return geom.features()
@@ -1043,8 +1085,120 @@ class BatchedSinkhorn:
         C = geom.cost_matrix()
         return C, C
 
+    def batch_shape(self, ka: jax.Array, kb: jax.Array) -> OTBatchShape:
+        """The bucket cell one problem's kernel data lands in — the key the
+        ragged path groups by and the serving runner cache is keyed on."""
+        if self.method in self._QUADRATIC:
+            return OTBatchShape.for_quadratic(ka.shape[0], ka.shape[1])
+        return OTBatchShape.for_problem(ka.shape[0], kb.shape[0], ka.shape[1])
 
-_ENGINE_CACHE: Dict[Tuple, BatchedSinkhorn] = {}
+    def pad_kernel_data(self, ka: jax.Array, kb: jax.Array,
+                        shape: OTBatchShape) -> Tuple[jax.Array, jax.Array]:
+        """Pad one problem's kernel data up to its bucket cell (replicated
+        rows — exact, the added atoms carry zero weight)."""
+        if self.method in self._QUADRATIC:
+            ka = _pad_rows(ka, shape.n_pad, replicate=True)
+            ka = _pad_rows(ka.T, shape.m_pad, replicate=True).T
+            return ka, ka
+        return (_pad_rows(ka, shape.n_pad, replicate=True),
+                _pad_rows(kb, shape.m_pad, replicate=True))
+
+    # deprecated private alias (pre-serving name)
+    _kernel_data = kernel_data
+
+
+def unpad_result(res: SinkhornResult, j: int, n: int, m: int) -> SinkhornResult:
+    """Slice problem ``j`` out of a stacked bucket result, dropping the
+    padded atoms: the inverse of the engine's bucket padding, shared by
+    ``solve_many`` and the serving dispatch path."""
+    return SinkhornResult(
+        u=res.u[j, :n], v=res.v[j, :m],
+        f=res.f[j, :n], g=res.g[j, :m],
+        cost=res.cost[j], n_iter=res.n_iter[j],
+        marginal_err=res.marginal_err[j],
+        converged=res.converged[j],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine cache: LRU over solver configurations
+# ---------------------------------------------------------------------------
+#
+# Every distinct (method, eps, tol, max_iter, ...) tuple owns a
+# BatchedSinkhorn and thereby every jitted executable that engine ever
+# compiled. Under service traffic with per-request tolerances that is a
+# real leak, so the cache is a bounded LRU: least-recently-USED engines
+# (and their executables) are dropped once the cap is hit. The stats feed
+# the serving layer's cache accounting (``OTService.stats``).
+
+_ENGINE_CACHE: "OrderedDict[Tuple, BatchedSinkhorn]" = OrderedDict()
+_ENGINE_CACHE_CAPACITY = 8
+_ENGINE_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def engine_cache_info() -> Dict[str, int]:
+    """Size/capacity/hit/miss/eviction counters of the ``solve_many``
+    engine cache (copies — safe to diff across calls)."""
+    return dict(size=len(_ENGINE_CACHE), capacity=_ENGINE_CACHE_CAPACITY,
+                **_ENGINE_CACHE_STATS)
+
+
+def set_engine_cache_capacity(capacity: int) -> None:
+    """Re-cap the engine LRU; evicts oldest entries immediately if the new
+    cap is below the current size."""
+    global _ENGINE_CACHE_CAPACITY
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    _ENGINE_CACHE_CAPACITY = capacity
+    while len(_ENGINE_CACHE) > _ENGINE_CACHE_CAPACITY:
+        _ENGINE_CACHE.popitem(last=False)
+        _ENGINE_CACHE_STATS["evictions"] += 1
+
+
+def clear_engine_cache() -> None:
+    _ENGINE_CACHE.clear()
+    for k in _ENGINE_CACHE_STATS:
+        _ENGINE_CACHE_STATS[k] = 0
+
+
+def get_engine(
+    *,
+    eps: float,
+    method: str = "log_factored",
+    tol: float = 1e-6,
+    max_iter: int = 2000,
+    momentum: float = 1.0,
+    use_pallas: Optional[bool] = None,
+    inner_steps: Optional[int] = None,
+    check_every: Optional[int] = None,
+    precision: str = "highest",
+) -> BatchedSinkhorn:
+    """The cached :class:`BatchedSinkhorn` for a solver configuration.
+
+    LRU semantics: a hit refreshes recency; a miss builds the engine and
+    may evict the least-recently-used one (its jitted executables go with
+    it). ``solve_many`` and the serving layer both come through here, so
+    repeated calls never retrace — and distinct per-request configurations
+    can no longer pin unbounded compile caches.
+    """
+    key = (method, float(eps), float(tol), int(max_iter), float(momentum),
+           use_pallas, inner_steps, check_every, precision)
+    engine = _ENGINE_CACHE.get(key)
+    if engine is not None:
+        _ENGINE_CACHE.move_to_end(key)
+        _ENGINE_CACHE_STATS["hits"] += 1
+        return engine
+    _ENGINE_CACHE_STATS["misses"] += 1
+    engine = BatchedSinkhorn(
+        eps=eps, method=method, tol=tol, max_iter=max_iter,
+        momentum=momentum, use_pallas=use_pallas, inner_steps=inner_steps,
+        check_every=check_every, precision=precision,
+    )
+    _ENGINE_CACHE[key] = engine
+    while len(_ENGINE_CACHE) > _ENGINE_CACHE_CAPACITY:
+        _ENGINE_CACHE.popitem(last=False)
+        _ENGINE_CACHE_STATS["evictions"] += 1
+    return engine
 
 
 _SHARDED_TWIN = {
@@ -1068,13 +1222,21 @@ def solve_many(
     precision: str = "highest",
     mesh=None,
     mesh_axis: str = "data",
+    f_inits: Optional[Sequence[Optional[jax.Array]]] = None,
+    g_inits: Optional[Sequence[Optional[jax.Array]]] = None,
 ) -> List[SinkhornResult]:
     """Convenience wrapper: batched solve of a ragged problem list.
 
     ``eps`` defaults to the (shared) eps of the problems; mixed-eps lists
     are rejected — build one engine per eps instead. Engines (and hence
-    their jitted vmapped solvers) are cached per configuration, so calling
-    this in a loop does not retrace.
+    their jitted vmapped solvers) are cached per configuration in a
+    bounded LRU (:func:`get_engine`), so calling this in a loop does not
+    retrace and distinct per-request configurations cannot leak compile
+    caches without bound.
+
+    ``f_inits``/``g_inits`` warm-start individual problems (per-problem
+    potentials from an earlier solve; ``None`` entries cold-start) — see
+    :meth:`BatchedSinkhorn.solve_many`.
 
     With ``mesh=`` each problem runs through the shard_map solver (the
     sharded twin of ``method``: scaling or psum'd-LSE log domain). Sharded
@@ -1089,6 +1251,12 @@ def solve_many(
             raise ValueError(f"mixed problem eps {sorted(eps_set)}; pass eps=")
         eps = eps_set.pop()
     if mesh is not None:
+        if f_inits is not None or g_inits is not None:
+            raise ValueError(
+                "solve_many(mesh=...) dispatches problems sequentially "
+                "through solve(); per-problem warm starts are a batched-"
+                "engine feature — drop mesh= or the inits"
+            )
         twin = _SHARDED_TWIN.get(method)
         if twin is None:
             raise ValueError(
@@ -1109,15 +1277,9 @@ def solve_many(
                   precision=precision)
             for p in problems
         ]
-    key = (method, float(eps), float(tol), int(max_iter), float(momentum),
-           use_pallas, inner_steps, check_every, precision)
-    engine = _ENGINE_CACHE.get(key)
-    if engine is None:
-        engine = BatchedSinkhorn(
-            eps=eps, method=method, tol=tol, max_iter=max_iter,
-            momentum=momentum, use_pallas=use_pallas,
-            inner_steps=inner_steps, check_every=check_every,
-            precision=precision,
-        )
-        _ENGINE_CACHE[key] = engine
-    return engine.solve_many(problems)
+    engine = get_engine(
+        eps=eps, method=method, tol=tol, max_iter=max_iter,
+        momentum=momentum, use_pallas=use_pallas, inner_steps=inner_steps,
+        check_every=check_every, precision=precision,
+    )
+    return engine.solve_many(problems, f_inits=f_inits, g_inits=g_inits)

@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --tiny \
         --batch 4 --prompt-len 32 --gen 16
+
+Reports prefill latency and decode throughput separately: the first
+jitted call traces + compiles, so the decode step is warmed up on a
+throwaway cache before any timer starts, and prefill (prompt ingestion)
+is timed apart from decode (token generation) — a single combined tok/s
+number would smear the latency-bound prefill phase into the
+throughput-bound decode phase.
 """
 from __future__ import annotations
 
@@ -31,14 +38,17 @@ def main():
         cfg = cfg.tiny()
     cfg = dataclasses.replace(cfg, param_dtype="float32",
                               compute_dtype="float32")
-    key = jax.random.PRNGKey(0)
-    params = init_params(key, cfg)
+    # independent streams: reusing one key would correlate params with
+    # prompts and draw the SAME "embedding" every decode step
+    root = jax.random.PRNGKey(0)
+    params_key, tok_key, enc_key, embed_key = jax.random.split(root, 4)
+    params = init_params(params_key, cfg)
     B = args.batch
     s_max = args.prompt_len + args.gen
     caches = init_caches(cfg, B, s_max)
     win = effective_window(cfg, s_max)
 
-    tok = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
+    tok = jax.random.randint(tok_key, (B, args.prompt_len), 0, cfg.vocab)
     step = jax.jit(
         lambda p, t, c: decode_step(p, cfg, t, c, window=win)
     )
@@ -46,34 +56,56 @@ def main():
     extra = {}
     if cfg.input_kind == "encdec":
         enc = jax.random.normal(
-            key, (cfg.n_layers, B, args.prompt_len, cfg.n_heads,
-                  cfg.head_dim))
+            enc_key, (cfg.n_layers, B, args.prompt_len, cfg.n_heads,
+                      cfg.head_dim))
         extra["enc_kv"] = {"k": enc, "v": enc}
+
+    def step_batch(i, cur):
+        """Inputs for one single-token step (fresh embed key per step)."""
+        if cfg.input_kind == "embeds":
+            return {"embeds": jax.random.normal(
+                jax.random.fold_in(embed_key, i), (B, 1, cfg.d_model)),
+                **extra}
+        return {"tokens": cur, **extra}
+
+    # warm up the jitted step on a throwaway cache so the trace + compile
+    # happens OUTSIDE every timed region (every step call below shares
+    # this one (B, 1) executable)
+    warm_caches = init_caches(cfg, B, s_max)
+    warm_logits, _ = step(params, step_batch(0, tok[:, :1]), warm_caches)
+    # the greedy-sampling glue (slice + argmax) compiles eagerly on first
+    # use — warm it here too, or the first decode step pays it
+    jax.block_until_ready(jnp.argmax(warm_logits[:, -1], axis=-1)[:, None])
+    del warm_caches, warm_logits
 
     # prefill by feeding prompt tokens one at a time (production would use
     # the fused prefill program; see launch/steps.make_serve_step)
     t0 = time.time()
     logits = None
     for i in range(args.prompt_len):
-        batch = {"tokens": tok[:, i: i + 1], **extra}
-        if cfg.input_kind == "embeds":
-            batch = {"embeds": jax.random.normal(
-                key, (B, 1, cfg.d_model)), **extra}
-        logits, caches = step(params, batch, caches)
+        logits, caches = step(params, step_batch(i, tok[:, i: i + 1]),
+                              caches)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    t1 = time.time()
     out_toks = []
     cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
     for i in range(args.gen):
         out_toks.append(cur)
-        batch = {"tokens": cur, **extra}
-        if cfg.input_kind == "embeds":
-            batch = {"embeds": jax.random.normal(
-                key, (B, 1, cfg.d_model)), **extra}
-        logits, caches = step(params, batch, caches)
+        logits, caches = step(
+            params, step_batch(args.prompt_len + i, cur), caches)
         cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    dt = time.time() - t0
     gen = jnp.concatenate(out_toks, axis=1)
-    toks_s = B * (args.prompt_len + args.gen) / dt
-    print(f"[serve] generated {gen.shape} in {dt:.2f}s ({toks_s:.1f} tok/s)")
+    jax.block_until_ready(gen)
+    t_decode = time.time() - t1
+
+    decode_toks_s = B * args.gen / t_decode if t_decode else float("inf")
+    print(f"[serve] prefill: {B}x{args.prompt_len} tokens in "
+          f"{t_prefill * 1e3:.1f}ms "
+          f"({t_prefill * 1e3 / args.prompt_len:.2f}ms/step)")
+    print(f"[serve] decode:  generated {gen.shape} in {t_decode:.2f}s "
+          f"({decode_toks_s:.1f} tok/s)")
     print(gen[0])
 
 

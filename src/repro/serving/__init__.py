@@ -1,0 +1,39 @@
+"""OT-as-a-service: the persistent serving layer over the batched engine.
+
+  service      — OTService: submit/pump/drain request loop + stats
+  runner_cache — bucket-keyed pre-planned jitted runners (zero steady-state
+                 traces/compiles)
+  admission    — max-batch/max-wait continuous batching of ragged requests
+  warmstart    — fingerprinted potential cache for repeat/near-repeat pairs
+  traffic      — synthetic heavy-tailed open-loop traffic + report
+"""
+from .admission import AdmissionQueue
+from .runner_cache import BucketRunner, RunnerCache
+from .service import OTService, Ticket
+from .traffic import (
+    Request,
+    TrafficReport,
+    TrafficSpec,
+    make_traffic,
+    run_open_loop,
+    traffic_cells,
+)
+from .warmstart import WarmHit, WarmStartCache, fingerprint, request_keys
+
+__all__ = [
+    "AdmissionQueue",
+    "BucketRunner",
+    "OTService",
+    "Request",
+    "RunnerCache",
+    "Ticket",
+    "TrafficReport",
+    "TrafficSpec",
+    "WarmHit",
+    "WarmStartCache",
+    "fingerprint",
+    "make_traffic",
+    "request_keys",
+    "run_open_loop",
+    "traffic_cells",
+]

@@ -1,0 +1,95 @@
+"""Admission queue: continuous batching of heterogeneous OT requests.
+
+Incoming requests are ragged — every caller brings its own ``(n, m, r)``
+— but the engine's throughput comes from solving bucket-padded
+megabatches. The admission queue groups requests by their bucket cell
+(:class:`~repro.configs.shapes.OTBatchShape`) and flushes a group when
+either
+
+* it holds ``max_batch`` requests (a full megabatch — dispatch now;
+  waiting longer only adds latency), or
+* its OLDEST request has waited ``max_wait`` seconds (the
+  latency-vs-occupancy knob: higher traffic fills batches before the
+  deadline, trickle traffic pays at most ``max_wait`` extra).
+
+FIFO order is preserved within each bucket, so two requests of the same
+shape complete in submission order. The queue is time-driven but owns no
+clock: callers pass ``now`` (the service injects either a wall clock or a
+test-controlled fake).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Generic, Hashable, List, Optional, Tuple, TypeVar
+
+__all__ = ["AdmissionQueue"]
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass
+class _Group(Generic[T]):
+    items: List[T]
+    arrivals: List[float]       # parallel to items (submission times)
+
+
+class AdmissionQueue(Generic[T]):
+    """Bucket-keyed pending-request store with a max-batch/max-wait
+    flush policy. Generic over the item payload; keys must be hashable
+    (the service keys by ``OTBatchShape``)."""
+
+    def __init__(self, *, max_batch: int = 8, max_wait: float = 0.005):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait < 0:
+            raise ValueError(f"max_wait must be >= 0, got {max_wait}")
+        self.max_batch = max_batch
+        self.max_wait = max_wait
+        self._groups: Dict[Hashable, _Group[T]] = {}
+        self.admitted = 0
+        self.flushed_full = 0       # groups flushed because they filled
+        self.flushed_aged = 0       # groups flushed on the max_wait deadline
+
+    def __len__(self) -> int:
+        return sum(len(g.items) for g in self._groups.values())
+
+    def add(self, key: Hashable, item: T, now: float) -> None:
+        group = self._groups.get(key)
+        if group is None:
+            group = self._groups[key] = _Group([], [])
+        group.items.append(item)
+        group.arrivals.append(now)
+        self.admitted += 1
+
+    def pop_due(self, now: float,
+                force: bool = False) -> List[Tuple[Hashable, List[T]]]:
+        """Flush and return every due megabatch as ``(key, items)``.
+
+        Full groups flush in ``max_batch`` chunks regardless of age;
+        a group whose oldest request has aged past ``max_wait`` flushes
+        whatever it holds. ``force`` flushes everything (drain).
+        """
+        out: List[Tuple[Hashable, List[T]]] = []
+        for key in list(self._groups):
+            group = self._groups[key]
+            while len(group.items) >= self.max_batch:
+                out.append((key, group.items[: self.max_batch]))
+                del group.items[: self.max_batch]
+                del group.arrivals[: self.max_batch]
+                self.flushed_full += 1
+            if group.items and (
+                force or now - group.arrivals[0] >= self.max_wait
+            ):
+                out.append((key, group.items))
+                group.items, group.arrivals = [], []
+                self.flushed_aged += 1
+            if not group.items:
+                del self._groups[key]
+        return out
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest time a currently-pending group becomes due (its oldest
+        arrival + ``max_wait``), or ``None`` when empty. Lets the serving
+        loop sleep exactly until work exists instead of polling."""
+        oldest = [g.arrivals[0] for g in self._groups.values() if g.arrivals]
+        return min(oldest) + self.max_wait if oldest else None

@@ -1,0 +1,204 @@
+"""Bucket-keyed compiled-runner cache: pre-planned, warmed-up executables.
+
+The batched engine's jitted vmapped solver retraces per distinct input
+shape — for serving that means every new ``(B, n_pad, m_pad, r)``
+combination pays a trace + compile inside a request's latency budget. The
+runner cache removes that: each :class:`BucketRunner` owns ONE jitted
+executable pinned to a single bucket cell (the per-batch-size pre-planned
+decode-runner idiom), and is WARM-UP EXECUTED on synthetic data at build
+time, so steady-state dispatches never trace or compile.
+
+Runners always go through the engine's donated warm-start body
+(``_solve_one_warm``): zero initial potentials are exactly the cold
+default (``f = 0`` is ``u = 1``; the log solver starts from zeros before
+pinning dead atoms), so one executable serves both cold and warm-started
+megabatches — one code path, one compile, per cell.
+
+Accounting: ``misses`` counts runner builds (each is exactly one
+compile), ``hits`` steady-state reuse, and ``extra_traces`` any retrace a
+runner's own jit suffered after warmup (dtype drift, weak-type leaks —
+always a bug). The serving CI gate asserts ``misses`` and
+``extra_traces`` stay at zero after warmup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.shapes import OTBatchShape, ot_batch_bucket
+from ..core.api import BatchedSinkhorn
+from ..core.sinkhorn import SinkhornResult
+
+__all__ = ["BucketRunner", "RunnerCache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Cell:
+    """One runner's fixed shapes."""
+
+    shape: OTBatchShape
+    batch: int
+
+    def data_shapes(self, quadratic: bool):
+        n, m, r = self.shape.n_pad, self.shape.m_pad, self.shape.r
+        if quadratic:
+            ka = kb = (self.batch, n, m)
+        else:
+            ka, kb = (self.batch, n, r), (self.batch, m, r)
+        return ka, kb, (self.batch, n), (self.batch, m)
+
+
+class BucketRunner:
+    """One pre-planned executable for one ``(OTBatchShape, B)`` cell.
+
+    Owns its own ``jax.jit`` wrapper (instead of sharing the engine's), so
+    evicting a runner actually releases its compiled executable, and its
+    trace count is observable per cell via ``traces``.
+    """
+
+    def __init__(self, engine: BatchedSinkhorn, shape: OTBatchShape,
+                 batch: int, *, dtype=jnp.float32):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.engine = engine
+        self.cell = _Cell(shape, batch)
+        self.dtype = jnp.dtype(dtype)
+        self.quadratic = engine.method in engine._QUADRATIC
+        self._fn = jax.jit(jax.vmap(engine._solve_one_warm),
+                           donate_argnums=(4, 5))
+        self.calls = 0
+        self._warm = False
+
+    @property
+    def traces(self) -> int:
+        """Number of tracings this runner's jit performed (1 after a clean
+        warmup; anything above 1 is a steady-state recompile = a bug)."""
+        return int(self._fn._cache_size())
+
+    def expected_shapes(self):
+        return self.cell.data_shapes(self.quadratic)
+
+    def warmup(self) -> "BucketRunner":
+        """Trace + compile + execute once on synthetic data that converges
+        immediately (constant kernel, uniform weights), so the first real
+        request pays neither compile nor first-dispatch overheads.
+
+        Warmup inputs are HOST numpy arrays on purpose: the dispatch path
+        feeds numpy (see ``service._pad_np``), and jax's jit cache keys
+        numpy-backed and jax-array-backed calls separately — warming up
+        with ``jnp`` arrays would leave the first real request to retrace.
+        """
+        if self._warm:
+            return self
+        dt = np.dtype(self.dtype)
+        ka_s, kb_s, a_s, b_s = self.expected_shapes()
+        if self.quadratic:
+            ka = kb = np.zeros(ka_s, dt)                   # C = 0 -> K = 1
+        elif self.engine.method == "factored":
+            ka, kb = np.ones(ka_s, dt), np.ones(kb_s, dt)
+        else:                                              # log features
+            ka, kb = np.zeros(ka_s, dt), np.zeros(kb_s, dt)
+        a = np.full(a_s, 1.0 / a_s[1], dt)
+        b = np.full(b_s, 1.0 / b_s[1], dt)
+        out = self._fn(ka, kb, a, b, np.zeros(a_s, dt), np.zeros(b_s, dt))
+        jax.block_until_ready(out)
+        self._warm = True
+        return self
+
+    def run(self, ka, kb, a, b, f0, g0) -> SinkhornResult:
+        """Solve one bucket-padded megabatch; blocks until the result is
+        ready (serving semantics — completion means the answer exists)."""
+        expect = self.expected_shapes()
+        got = tuple(tuple(x.shape) for x in (ka, kb, a, b))
+        if got != expect:
+            raise ValueError(
+                f"runner cell {self.cell} expects shapes {expect}, got {got}"
+            )
+        self.calls += 1
+        res = self._fn(ka, kb, a, b, f0, g0)
+        jax.block_until_ready(res)
+        return res
+
+
+class RunnerCache:
+    """LRU of :class:`BucketRunner`\\ s keyed by ``(OTBatchShape, B)``.
+
+    ``get`` builds + warms up on miss (the ONLY place serving-path
+    compiles happen); ``warm`` pre-plans a set of cells ahead of traffic.
+    Evicted runners release their executables with them.
+    """
+
+    def __init__(self, engine: BatchedSinkhorn, *, capacity: int = 32,
+                 max_batch: int = 8, dtype=jnp.float32):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.engine = engine
+        self.capacity = capacity
+        self.max_batch = max_batch
+        self.dtype = dtype
+        self._runners: "OrderedDict[Tuple[OTBatchShape, int], BucketRunner]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._runners)
+
+    def batch_buckets(self) -> Tuple[int, ...]:
+        """All batch-count cells traffic can land in: powers of two up to
+        (and including) ``max_batch``."""
+        out = []
+        boundary = 1
+        while boundary < self.max_batch:
+            out.append(boundary)
+            boundary *= 2
+        out.append(self.max_batch)
+        return tuple(out)
+
+    def get(self, shape: OTBatchShape, batch: int) -> BucketRunner:
+        key = (shape, ot_batch_bucket(batch, self.max_batch))
+        runner = self._runners.get(key)
+        if runner is not None:
+            self.hits += 1
+            self._runners.move_to_end(key)
+            return runner
+        self.misses += 1
+        runner = BucketRunner(self.engine, key[0], key[1],
+                              dtype=self.dtype).warmup()
+        self._runners[key] = runner
+        while len(self._runners) > self.capacity:
+            self._runners.popitem(last=False)
+            self.evictions += 1
+        return runner
+
+    def warm(self, shapes: Iterable[OTBatchShape],
+             batches: Optional[Iterable[int]] = None) -> int:
+        """Pre-plan every (shape x batch-bucket) cell; returns the number
+        of runners built (compiles paid now rather than under traffic)."""
+        built = 0
+        for shape in shapes:
+            for b in (self.batch_buckets() if batches is None else batches):
+                before = self.misses
+                self.get(shape, b)
+                built += self.misses > before
+        return built
+
+    @property
+    def extra_traces(self) -> int:
+        """Tracings beyond the one each live runner's warmup performs —
+        any steady-state recompile shows up here."""
+        return sum(r.traces - 1 for r in self._runners.values())
+
+    def snapshot(self) -> Dict[str, float]:
+        return dict(size=len(self), capacity=self.capacity,
+                    hits=self.hits, misses=self.misses,
+                    evictions=self.evictions,
+                    extra_traces=self.extra_traces,
+                    dispatches=sum(r.calls for r in self._runners.values()))

@@ -1,0 +1,374 @@
+"""OT-as-a-service: a persistent request-driven front end for the batched
+solver engine.
+
+The pieces (each its own module, composable and unit-testable):
+
+* :class:`~repro.serving.runner_cache.RunnerCache` — pre-planned,
+  warm-up-executed jitted runners per ``(OTBatchShape, B)`` bucket cell:
+  steady-state requests never trace or compile.
+* :class:`~repro.serving.admission.AdmissionQueue` — continuous batching
+  of ragged requests into bucket-padded megabatches under a
+  max-batch/max-wait policy.
+* :class:`~repro.serving.warmstart.WarmStartCache` — fingerprinted
+  potentials re-served through the engine's ``f_init``/``g_init`` path
+  for repeat (exact) and near-repeat (good-init) pairs.
+
+Usage::
+
+    svc = OTService(eps=0.05, method="log_factored", max_batch=8,
+                    max_wait=0.002)
+    svc.warmup([(200, 150, 64)])          # pre-plan the expected buckets
+    t = svc.submit(problem)               # -> Ticket
+    svc.pump()                           # dispatch due megabatches
+    svc.drain()                          # flush everything pending
+    t.result                             # per-request unpadded SinkhornResult
+
+``submit``/``pump``/``drain`` are synchronous and single-threaded by
+design: the event loop (a driver script, an RPC handler, the open-loop
+benchmark) owns scheduling, the service owns batching and caching. All
+time is injected (``clock=``), so tests drive the max-wait policy with a
+fake clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..configs.shapes import OTBatchShape, ot_batch_bucket
+from ..core.api import (
+    OTProblem,
+    engine_cache_info,
+    get_engine,
+)
+from ..core.sinkhorn import SinkhornResult
+from .admission import AdmissionQueue
+from .runner_cache import RunnerCache
+from .warmstart import WarmStartCache
+
+__all__ = ["Ticket", "OTService"]
+
+
+# -- host-side padding/unpadding ---------------------------------------------
+#
+# The dispatch path deliberately stays in NUMPY until the single jitted
+# runner call: every jnp slice/concat on a new shape eagerly compiles a
+# tiny XLA executable (~tens of ms on CPU the first time) and pays a
+# dispatch round trip every time after — measured to dominate per-request
+# latency when the glue ran through jnp. Host-side padding is exact (same
+# replicate/zero-fill semantics as core.api._pad_rows) and costs
+# microseconds.
+
+
+def _pad_np(arr, n_pad: int, *, replicate: bool,
+            fill: float = 0.0) -> np.ndarray:
+    x = np.asarray(arr)
+    pad = n_pad - x.shape[0]
+    if pad <= 0:
+        return x
+    if replicate:
+        tail = np.broadcast_to(x[-1:], (pad,) + x.shape[1:])
+    else:
+        tail = np.full((pad,) + x.shape[1:], fill, x.dtype)
+    return np.concatenate([x, tail], axis=0)
+
+
+def _pad_kernel_np(ka: np.ndarray, kb: np.ndarray, shape: OTBatchShape,
+                   quadratic: bool) -> Tuple[np.ndarray, np.ndarray]:
+    if quadratic:
+        ka = _pad_np(ka, shape.n_pad, replicate=True)
+        ka = _pad_np(ka.T, shape.m_pad, replicate=True).T
+        return ka, ka
+    return (_pad_np(ka, shape.n_pad, replicate=True),
+            _pad_np(kb, shape.m_pad, replicate=True))
+
+
+def _unpad_np(host: Dict[str, np.ndarray], j: int, n: int,
+              m: int) -> SinkhornResult:
+    """Slice request ``j`` out of a batch result already pulled to host."""
+    return SinkhornResult(
+        u=host["u"][j, :n], v=host["v"][j, :m],
+        f=host["f"][j, :n], g=host["g"][j, :m],
+        cost=host["cost"][j], n_iter=host["n_iter"][j],
+        marginal_err=host["marginal_err"][j],
+        converged=host["converged"][j],
+    )
+
+
+class Ticket:
+    """Handle for one submitted request; filled in by the dispatch path."""
+
+    __slots__ = ("seq", "t_submit", "t_done", "result", "warm_hit",
+                 "warm_exact")
+
+    def __init__(self, seq: int, t_submit: float):
+        self.seq = seq
+        self.t_submit = t_submit
+        self.t_done: Optional[float] = None
+        self.result: Optional[SinkhornResult] = None
+        self.warm_hit = False
+        self.warm_exact = False
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    @property
+    def latency(self) -> float:
+        if self.t_done is None:
+            raise RuntimeError("request not served yet")
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class _Admitted:
+    """One admitted request: host-side kernel data + warm-start state +
+    its ticket."""
+
+    ticket: Ticket
+    ka: np.ndarray
+    kb: np.ndarray
+    a: np.ndarray
+    b: np.ndarray
+    n: int
+    m: int
+    support_key: bytes
+    full_key: bytes
+    f0: Optional[np.ndarray]      # warm potentials (unpadded) or None
+    g0: Optional[np.ndarray]
+
+
+class OTService:
+    """Persistent OT solver service over the batched vmapped engine.
+
+    Solver knobs mirror :class:`~repro.core.api.BatchedSinkhorn` (one
+    service per solver configuration; the engine itself comes from the
+    bounded :func:`~repro.core.api.get_engine` LRU so service and
+    ``solve_many`` callers share executables and accounting). Serving
+    knobs:
+
+    ``max_batch``/``max_wait``
+        admission policy (see :class:`AdmissionQueue`). Megabatches are
+        additionally padded UP to power-of-two batch buckets
+        (``ot_batch_bucket``) by replicating a real request lane — exact,
+        the duplicate lanes are discarded — so the number of compiled
+        runners stays at O(buckets x log max_batch).
+    ``runner_capacity``
+        LRU cap on live compiled runners.
+    ``warm_capacity``/``warm_quant``/``warm_starts``
+        warm-start cache size, fingerprint quantization, and a master
+        switch (off = every request cold-starts; the A/B knob the
+        benchmark uses).
+    ``clock``
+        time source (injectable for tests; defaults to
+        ``time.monotonic``).
+    """
+
+    def __init__(
+        self,
+        *,
+        eps: float,
+        method: str = "log_factored",
+        tol: float = 1e-6,
+        max_iter: int = 2000,
+        momentum: float = 1.0,
+        use_pallas: Optional[bool] = None,
+        inner_steps: Optional[int] = None,
+        check_every: Optional[int] = None,
+        precision: str = "highest",
+        max_batch: int = 8,
+        max_wait: float = 0.005,
+        runner_capacity: int = 32,
+        warm_capacity: int = 1024,
+        warm_quant: float = 1e-6,
+        warm_starts: bool = True,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.engine = get_engine(
+            eps=eps, method=method, tol=tol, max_iter=max_iter,
+            momentum=momentum, use_pallas=use_pallas,
+            inner_steps=inner_steps, check_every=check_every,
+            precision=precision,
+        )
+        self.clock = clock
+        self.max_batch = max_batch
+        self.runners = RunnerCache(self.engine, capacity=runner_capacity,
+                                   max_batch=max_batch)
+        self.queue: AdmissionQueue[_Admitted] = AdmissionQueue(
+            max_batch=max_batch, max_wait=max_wait)
+        self.warm = WarmStartCache(capacity=warm_capacity, quant=warm_quant)
+        self.warm_starts = warm_starts
+        # served-request accounting (feeds stats() and the benchmark)
+        self.served = 0
+        self.batches = 0
+        self.iters_warm = 0          # total solver iterations, warm-hit reqs
+        self.iters_cold = 0
+        self.served_warm = 0
+        self.served_cold = 0
+
+    # -- request path --------------------------------------------------------
+
+    def submit(self, problem: OTProblem,
+               now: Optional[float] = None) -> Ticket:
+        """Admit one request: derive its kernel data and bucket cell, look
+        up a warm start, enqueue. Returns the request's :class:`Ticket`
+        (filled when a ``pump``/``drain`` dispatches its megabatch)."""
+        if float(problem.eps) != float(self.engine.eps):
+            raise ValueError(
+                f"request declares eps={problem.eps} but this service "
+                f"solves at eps={self.engine.eps}; run one service per eps"
+            )
+        now = self.clock() if now is None else now
+        ticket = Ticket(self.queue.admitted, now)
+        ka, kb = self.engine.kernel_data(problem)
+        shape = self.engine.batch_shape(ka, kb)
+        # everything downstream of here is host-side numpy (see the
+        # module note above _pad_np); float32 is the serving dtype — the
+        # runners are compiled for it, so admitting a float64 request
+        # must not retrace them
+        ka = np.asarray(ka, np.float32)
+        kb = np.asarray(kb, np.float32)
+        a = np.asarray(problem.a, np.float32)
+        b = np.asarray(problem.b, np.float32)
+        f0 = g0 = None
+        support_key = full_key = b""
+        if self.warm_starts:
+            support_key, full_key = self.warm.keys_for(ka, kb, a, b)
+            hit = self.warm.lookup(support_key, full_key)
+            if hit is not None:
+                f0, g0 = hit.f, hit.g
+                ticket.warm_hit = True
+                ticket.warm_exact = hit.exact
+        adm = _Admitted(
+            ticket=ticket, ka=ka, kb=kb, a=a, b=b,
+            n=a.shape[0], m=b.shape[0],
+            support_key=support_key, full_key=full_key, f0=f0, g0=g0,
+        )
+        self.queue.add(shape, adm, now)
+        return ticket
+
+    def pump(self, now: Optional[float] = None, force: bool = False) -> int:
+        """Dispatch every due megabatch; returns requests completed."""
+        now = self.clock() if now is None else now
+        done = 0
+        for shape, items in self.queue.pop_due(now, force=force):
+            done += self._dispatch(shape, items)
+        return done
+
+    def drain(self) -> int:
+        """Flush everything pending regardless of age; returns requests
+        completed."""
+        return self.pump(force=True)
+
+    def solve_many(self, problems: Sequence[OTProblem]) -> List[SinkhornResult]:
+        """Convenience batch entry: submit all, drain, return results in
+        submission order (the serving twin of ``BatchedSinkhorn.solve_many``)."""
+        tickets = [self.submit(p) for p in problems]
+        self.drain()
+        return [t.result for t in tickets]
+
+    def next_deadline(self) -> Optional[float]:
+        return self.queue.next_deadline()
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # -- planning ------------------------------------------------------------
+
+    def warmup(
+        self,
+        cells: Iterable[Union[OTBatchShape, Tuple[int, int, int]]],
+        batches: Optional[Iterable[int]] = None,
+    ) -> int:
+        """Pre-plan runners for the expected traffic shapes.
+
+        ``cells`` are :class:`OTBatchShape`\\ s or raw ``(n, m, r)``
+        support triples (bucketed here); every batch bucket up to
+        ``max_batch`` is compiled per cell unless ``batches`` narrows it.
+        Returns the number of runners built.
+        """
+        shapes = []
+        for c in cells:
+            if isinstance(c, OTBatchShape):
+                shapes.append(c)
+            else:
+                n, m, r = c
+                shapes.append(
+                    OTBatchShape.for_quadratic(n, m)
+                    if self.engine.method in self.engine._QUADRATIC
+                    else OTBatchShape.for_problem(n, m, r)
+                )
+        return self.runners.warm(shapes, batches)
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _dispatch(self, shape: OTBatchShape, items: List[_Admitted]) -> int:
+        b_real = len(items)
+        b_pad = ot_batch_bucket(b_real, self.max_batch)
+        # pad dead lanes by REPLICATING a real request: the duplicates
+        # converge exactly like their source (no all-zero-weight lane to
+        # NaN-poison or stall the batched while_loop) and are discarded
+        lanes = items + [items[-1]] * (b_pad - b_real)
+        quadratic = self.engine.method in self.engine._QUADRATIC
+        kas, kbs, aws, bws, f0s, g0s = [], [], [], [], [], []
+        for it in lanes:
+            ka, kb = _pad_kernel_np(it.ka, it.kb, shape, quadratic)
+            kas.append(ka)
+            kbs.append(kb)
+            aws.append(_pad_np(it.a, shape.n_pad, replicate=False))
+            bws.append(_pad_np(it.b, shape.m_pad, replicate=False))
+            if it.f0 is None:        # zeros == the cold default init
+                f0s.append(np.zeros((shape.n_pad,), np.float32))
+                g0s.append(np.zeros((shape.m_pad,), np.float32))
+            else:
+                f0s.append(_pad_np(it.f0, shape.n_pad, replicate=False))
+                g0s.append(_pad_np(it.g0, shape.m_pad, replicate=False))
+        runner = self.runners.get(shape, b_pad)
+        res = runner.run(np.stack(kas), np.stack(kbs), np.stack(aws),
+                         np.stack(bws), np.stack(f0s), np.stack(g0s))
+        t_done = self.clock()
+        # one device->host pull for the whole megabatch; per-request
+        # unpadding is then pure numpy slicing
+        host = {k: np.asarray(getattr(res, k))
+                for k in ("u", "v", "f", "g", "cost", "n_iter",
+                          "marginal_err", "converged")}
+        for j, it in enumerate(items):
+            r = _unpad_np(host, j, it.n, it.m)
+            it.ticket.result = r
+            it.ticket.t_done = t_done
+            if self.warm_starts:
+                self.warm.store(it.support_key, it.full_key, r.f, r.g)
+            iters = int(r.n_iter)
+            if it.ticket.warm_hit:
+                self.served_warm += 1
+                self.iters_warm += iters
+            else:
+                self.served_cold += 1
+                self.iters_cold += iters
+        self.served += b_real
+        self.batches += 1
+        return b_real
+
+    # -- accounting ----------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        """All serving-path cache/throughput counters in one snapshot:
+        runner cache (compiles = misses, steady-state hits, retraces),
+        warm-start cache (exact/near hit rates), the GLOBAL engine LRU
+        (this service's engine is one entry in it), and per-class mean
+        iteration counts (the measured warm-start win)."""
+        return dict(
+            runner=self.runners.snapshot(),
+            warm=self.warm.snapshot(),
+            engine=engine_cache_info(),
+            served=self.served,
+            batches=self.batches,
+            pending=self.pending(),
+            mean_batch=self.served / self.batches if self.batches else 0.0,
+            mean_iters_warm=(self.iters_warm / self.served_warm
+                             if self.served_warm else 0.0),
+            mean_iters_cold=(self.iters_cold / self.served_cold
+                             if self.served_cold else 0.0),
+        )

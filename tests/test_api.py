@@ -286,3 +286,75 @@ def test_ot_batch_shape_groups():
     s2 = OTBatchShape.for_problem(33, 64, 128)
     assert s1 == OTBatchShape(64, 64, 128) == s2
     assert OTBatchShape.for_problem(100, 50, 128) != s1
+
+
+# ---------------------------------------------------------------------------
+# Warm starts through solve_many (the serving re-serving path)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_problems(fixture, sizes, seed=9):
+    _, _, U, fm, _, _ = fixture
+    probs = []
+    for i, (n, m) in enumerate(sizes):
+        kk = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        x = jnp.clip(jax.random.normal(kk, (n, 2)), -2, 2)
+        y = jnp.clip(jax.random.normal(jax.random.fold_in(kk, 1), (m, 2)),
+                     -2, 2)
+        probs.append(OTProblem.from_log_features(
+            gaussian_log_features(x, U, eps=EPS, q=fm.q),
+            gaussian_log_features(y, U, eps=EPS, q=fm.q), eps=EPS))
+    return probs
+
+
+def test_solve_many_warm_start_exact_and_fewer_iters(fixture):
+    """Re-serving converged potentials must reproduce the cold solution
+    (<= 1e-6 relative cost) while measurably cutting iterations."""
+    probs = _ragged_problems(fixture, [(60, 50), (40, 70)])
+    cold = solve_many(probs, method="log_factored", tol=1e-6, max_iter=2000)
+    warm = solve_many(probs, method="log_factored", tol=1e-6, max_iter=2000,
+                      f_inits=[o.f for o in cold],
+                      g_inits=[o.g for o in cold])
+    for c, w in zip(cold, warm):
+        rel = abs(float(w.cost - c.cost)) / abs(float(c.cost))
+        assert rel <= 1e-6, rel
+        # potentials are defined up to an additive constant (f+c, g-c):
+        # compare gauge-fixed
+        wf, cf = np.asarray(w.f), np.asarray(c.f)
+        np.testing.assert_allclose(wf - wf.mean(), cf - cf.mean(),
+                                   rtol=1e-4, atol=1e-5)
+        assert int(w.n_iter) < int(c.n_iter)
+
+
+def test_solve_many_mixed_warm_cold_bucket_exact(fixture):
+    """A bucket mixing warm and cold lanes (zero-padded inits for the cold
+    ones) must stay elementwise-exact for BOTH classes."""
+    probs = _ragged_problems(fixture, [(60, 50), (60, 50), (40, 70)],
+                             seed=11)
+    cold = solve_many(probs, method="log_factored", tol=1e-6, max_iter=2000)
+    # warm only the first problem; second shares its bucket but cold-starts
+    warm = solve_many(probs, method="log_factored", tol=1e-6, max_iter=2000,
+                      f_inits=[cold[0].f, None, None],
+                      g_inits=[cold[0].g, None, None])
+    for i, (c, w) in enumerate(zip(cold, warm)):
+        rel = abs(float(w.cost - c.cost)) / abs(float(c.cost))
+        assert rel <= 1e-6, (i, rel)
+    assert int(warm[0].n_iter) < int(cold[0].n_iter)
+    assert int(warm[1].n_iter) == int(cold[1].n_iter)   # cold lane unchanged
+
+
+def test_solve_many_warm_start_validation(fixture):
+    probs = _ragged_problems(fixture, [(60, 50)], seed=12)
+    cold = solve_many(probs, method="log_factored", tol=1e-7)
+    with pytest.raises(ValueError, match="both f_inits and g_inits"):
+        solve_many(probs, method="log_factored", f_inits=[cold[0].f])
+    with pytest.raises(ValueError, match="must match problems"):
+        solve_many(probs, method="log_factored",
+                   f_inits=[cold[0].f, cold[0].f],
+                   g_inits=[cold[0].g, cold[0].g])
+    with pytest.raises(ValueError, match="both f_init and g_init"):
+        solve_many(probs, method="log_factored",
+                   f_inits=[cold[0].f], g_inits=[None])
+    with pytest.raises(ValueError, match="warm starts"):
+        solve_many(probs, method="log_factored", mesh=object(),
+                   f_inits=[cold[0].f], g_inits=[cold[0].g])

@@ -1,0 +1,293 @@
+"""Serving layer: bucket/batch-shape edge cases, fingerprinting, the
+admission policy under a fake clock, runner-cache zero-recompile + LRU,
+the engine LRU, and OTService end-to-end vs the one-shot solver."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.shapes import (
+    OT_SUPPORT_BUCKETS,
+    OTBatchShape,
+    ot_batch_bucket,
+    ot_bucket,
+)
+from repro.core import (
+    OTProblem,
+    clear_engine_cache,
+    engine_cache_info,
+    get_engine,
+    set_engine_cache_capacity,
+    solve,
+)
+from repro.serving import (
+    AdmissionQueue,
+    OTService,
+    WarmStartCache,
+    fingerprint,
+    request_keys,
+)
+
+EPS = 0.6
+
+
+def _problem(n, m, r=8, seed=0, eps=EPS):
+    rng = np.random.default_rng(seed)
+    xi = np.asarray(rng.uniform(0.05, 1.05, (n, r)), np.float32)
+    zeta = np.asarray(rng.uniform(0.05, 1.05, (m, r)), np.float32)
+    a = np.asarray(rng.dirichlet(np.full(n, 2.0)), np.float32)
+    b = np.asarray(rng.dirichlet(np.full(m, 2.0)), np.float32)
+    a, b = a / a.sum(), b / b.sum()
+    return OTProblem.from_features(xi, zeta, a, b, eps=eps)
+
+
+# -- bucket edge cases --------------------------------------------------------
+
+
+def test_ot_bucket_edges():
+    top = OT_SUPPORT_BUCKETS[-1]
+    assert ot_bucket(1) == OT_SUPPORT_BUCKETS[0]
+    assert ot_bucket(top) == top
+    # above the top bucket: round UP to a multiple of the top bucket,
+    # never truncate
+    assert ot_bucket(top + 1) == 2 * top
+    assert ot_bucket(3 * top - 5) == 3 * top
+    with pytest.raises(ValueError):
+        ot_bucket(0)
+
+
+def test_ot_batch_bucket():
+    assert [ot_batch_bucket(b, 8) for b in (1, 2, 3, 4, 5, 8)] == \
+        [1, 2, 4, 4, 8, 8]
+    assert ot_batch_bucket(7, 4) == 4          # capped at max_batch
+    assert ot_batch_bucket(1, 1) == 1
+    with pytest.raises(ValueError):
+        ot_batch_bucket(0, 8)
+
+
+def test_batch_shape_grouping():
+    # ragged sizes inside one bucket share a cell; r and quadratic differ
+    s1 = OTBatchShape.for_problem(40, 56, 8)
+    s2 = OTBatchShape.for_problem(61, 33, 8)
+    assert s1 == s2
+    assert OTBatchShape.for_problem(40, 56, 16) != s1
+    assert OTBatchShape.for_problem(65, 56, 8) != s1   # crosses a bucket
+    q = OTBatchShape.for_quadratic(40, 56)
+    assert q.r == 0 and q != s1
+
+
+# -- fingerprinting -----------------------------------------------------------
+
+
+def test_fingerprint_quantization():
+    rng = np.random.default_rng(0)
+    x = np.asarray(rng.uniform(0.0, 1.0, (32, 4)), np.float32)
+    base = fingerprint([x], quant=1e-4)
+    # sub-quant jitter hashes identically (float fuzz is absorbed) ...
+    assert fingerprint([x + 1e-6], quant=1e-4) == base
+    # ... while a change of many quanta does not
+    assert fingerprint([x + 1e-2], quant=1e-4) != base
+    # shape is part of the identity, even with identical bytes
+    assert fingerprint([x.reshape(4, 32)], quant=1e-4) != base
+
+
+def test_fingerprint_nonfinite_stable():
+    x = np.array([np.inf, -np.inf, np.nan, 1.0], np.float32)
+    assert fingerprint([x]) == fingerprint([x.copy()])
+    assert fingerprint([x]) != fingerprint([np.ones(4, np.float32)])
+
+
+def test_request_keys_two_level():
+    rng = np.random.default_rng(1)
+    ka = np.asarray(rng.uniform(size=(16, 4)), np.float32)
+    kb = np.asarray(rng.uniform(size=(12, 4)), np.float32)
+    a = np.full(16, 1 / 16, np.float32)
+    b = np.full(12, 1 / 12, np.float32)
+    sk, fk = request_keys(ka, kb, a, b)
+    # same supports, re-jittered weights: support key holds, full differs
+    a2 = a * np.asarray(rng.uniform(0.9, 1.1, 16), np.float32)
+    a2 /= a2.sum()
+    sk2, fk2 = request_keys(ka, kb, a2, b)
+    assert sk2 == sk and fk2 != fk
+    # different supports: both differ
+    sk3, fk3 = request_keys(ka + 0.5, kb, a, b)
+    assert sk3 != sk and fk3 != fk
+
+
+def test_warmstart_cache_exact_near_lru():
+    cache = WarmStartCache(capacity=2)
+    f, g = np.ones(4, np.float32), np.ones(3, np.float32)
+    cache.store(b"s1", b"f1", f, g)
+    hit = cache.lookup(b"s1", b"f1")
+    assert hit is not None and hit.exact
+    np.testing.assert_array_equal(hit.f, f)
+    near = cache.lookup(b"s1", b"f-other")      # same supports, new weights
+    assert near is not None and not near.exact
+    assert cache.lookup(b"s2", b"f1") is None
+    cache.store(b"s2", b"f2", f, g)
+    cache.store(b"s3", b"f3", f, g)             # evicts s1 (capacity 2)
+    assert cache.lookup(b"s1", b"f1") is None
+    assert cache.lookup(b"s3", b"f3").exact
+    snap = cache.snapshot()
+    assert snap["evictions"] == 1 and snap["size"] == 2
+
+
+# -- admission policy (fake clock) -------------------------------------------
+
+
+def test_admission_max_batch_flush_chunks():
+    q = AdmissionQueue(max_batch=2, max_wait=10.0)
+    for i in range(5):
+        q.add("cell", i, now=0.0)
+    due = q.pop_due(now=0.0)
+    # two full chunks flush immediately; the remainder is younger than
+    # max_wait and stays queued
+    assert [items for _, items in due] == [[0, 1], [2, 3]]
+    assert len(q) == 1
+    assert q.pop_due(now=5.0) == []
+    # ... until its oldest arrival ages past the deadline
+    assert q.pop_due(now=10.0) == [("cell", [4])]
+    assert len(q) == 0
+    assert q.flushed_full == 2 and q.flushed_aged == 1
+
+
+def test_admission_order_and_force():
+    q = AdmissionQueue(max_batch=4, max_wait=1.0)
+    q.add("a", "a0", now=0.0)
+    q.add("b", "b0", now=0.1)
+    q.add("a", "a1", now=0.2)
+    assert q.next_deadline() == pytest.approx(1.0)
+    due = q.pop_due(now=0.5, force=True)
+    assert dict(due) == {"a": ["a0", "a1"], "b": ["b0"]}
+    assert q.next_deadline() is None
+
+
+def test_admission_validation():
+    with pytest.raises(ValueError):
+        AdmissionQueue(max_batch=0)
+    with pytest.raises(ValueError):
+        AdmissionQueue(max_wait=-1.0)
+
+
+# -- engine LRU ---------------------------------------------------------------
+
+
+def test_engine_cache_lru_eviction():
+    clear_engine_cache()
+    old_cap = engine_cache_info()["capacity"]
+    try:
+        set_engine_cache_capacity(2)
+        e1 = get_engine(eps=0.5, tol=1e-4)
+        assert get_engine(eps=0.5, tol=1e-4) is e1       # hit
+        get_engine(eps=0.6, tol=1e-4)
+        get_engine(eps=0.5, tol=1e-4)                    # refresh e1
+        get_engine(eps=0.7, tol=1e-4)                    # evicts eps=0.6
+        info = engine_cache_info()
+        assert info["size"] == 2 and info["evictions"] == 1
+        assert get_engine(eps=0.5, tol=1e-4) is e1       # survived (MRU)
+        assert get_engine(eps=0.6, tol=1e-4) is not e1   # rebuilt (miss)
+    finally:
+        clear_engine_cache()
+        set_engine_cache_capacity(old_cap)
+
+
+# -- service end-to-end (one compiled cell, module-scoped) --------------------
+
+
+@pytest.fixture(scope="module")
+def service():
+    svc = OTService(eps=EPS, method="log_factored", tol=1e-6,
+                    max_batch=2, max_wait=0.001)
+    svc.warmup([(40, 56, 8)])        # one cell: (64, 64, 8) x B in {1, 2}
+    return svc
+
+
+@pytest.mark.slow
+def test_service_matches_oracle_and_preserves_order(service):
+    probs = [_problem(40, 56, seed=s) for s in (0, 1, 2)] + \
+        [_problem(33, 61, seed=3)]               # ragged, same bucket cell
+    results = service.solve_many(probs)
+    for p, res in zip(probs, results):
+        assert res.f.shape == (p.a.shape[0],)    # unpadded to request size
+        assert res.g.shape == (p.b.shape[0],)
+        ref = solve(p, method="log_factored", tol=1e-6)
+        rel = abs(float(res.cost) - float(ref.cost)) / abs(float(ref.cost))
+        assert rel < 1e-5
+    # all four solved within the pre-planned runners: no new compiles
+    snap = service.runners.snapshot()
+    assert snap["misses"] == 2 and snap["extra_traces"] == 0
+
+
+@pytest.mark.slow
+def test_service_warm_start_exact_and_faster(service):
+    p = _problem(40, 56, seed=10)
+    cold = service.solve_many([p])[0]
+    t = service.submit(p)
+    service.drain()
+    warm = t.result
+    assert t.warm_hit and t.warm_exact
+    # repeat request re-served from cached potentials: equal to the cold
+    # solve (well under solver tol) in fewer iterations
+    np.testing.assert_allclose(np.asarray(warm.f), np.asarray(cold.f),
+                               rtol=1e-6, atol=1e-6)
+    assert abs(float(warm.cost) - float(cold.cost)) <= \
+        1e-6 * abs(float(cold.cost))
+    assert int(warm.n_iter) < int(cold.n_iter)
+    # near-repeat: same supports, new weights -> non-exact hit, still
+    # correct vs the oracle
+    a2 = np.asarray(p.a) * np.asarray(
+        np.random.default_rng(5).uniform(0.9, 1.1, p.a.shape[0]), np.float32)
+    a2 /= a2.sum()
+    p2 = OTProblem(geometry=p.geometry, a=a2, b=p.b)
+    t2 = service.submit(p2)
+    service.drain()
+    assert t2.warm_hit and not t2.warm_exact
+    ref2 = solve(p2, method="log_factored", tol=1e-6)
+    assert abs(float(t2.result.cost) - float(ref2.cost)) < \
+        1e-5 * abs(float(ref2.cost))
+
+
+@pytest.mark.slow
+def test_service_zero_recompiles_after_warmup(service):
+    snap0 = service.runners.snapshot()
+    for s in (20, 21, 22):
+        service.solve_many([_problem(40, 56, seed=s)])
+    snap1 = service.runners.snapshot()
+    assert snap1["misses"] == snap0["misses"]
+    assert snap1["extra_traces"] == 0
+
+
+@pytest.mark.slow
+def test_service_rejects_wrong_eps(service):
+    with pytest.raises(ValueError, match="eps"):
+        service.submit(_problem(40, 56, eps=EPS / 2))
+
+
+@pytest.mark.slow
+def test_service_max_wait_holds_then_flushes(service):
+    fake = [100.0]
+    real_clock = service.clock
+    service.clock = lambda: fake[0]
+    try:
+        t = service.submit(_problem(40, 56, seed=30))
+        # younger than max_wait: nothing dispatches
+        assert service.pump() == 0 and not t.done
+        fake[0] += 0.002                         # past max_wait (0.001)
+        assert service.pump() == 1 and t.done
+        assert t.latency == pytest.approx(0.002)
+    finally:
+        service.clock = real_clock
+
+
+@pytest.mark.slow
+def test_serve_driver_smoke():
+    # the LM serving driver: prefill/decode timings split, no crash
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "smollm-135m", "--tiny", "--batch", "2", "--prompt-len", "4",
+         "--gen", "2"],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "prefill:" in out.stdout and "decode:" in out.stdout
