@@ -15,6 +15,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   serve/*      — serving     OTService open-loop latency, warm-start hit
                  rates, batched/warm capacity vs per-request engine loop,
                  zero-recompile gate (``--serve``)
+  */tuned*     — autotuner   measured block shapes vs the static pick_block
+                 prior (``--tune``); ratio >= 1.0 gated, warm-cache runs
+                 gated to zero timing trials (``--tune-expect-cached``)
 
 ``--quick`` is the tier-1 smoke entry: CPU-sized problems, minutes total.
 ``--json PATH`` additionally writes the rows as a ``BENCH_*.json`` artifact
@@ -138,6 +141,110 @@ def bench_fused_loop(inner_steps: int = 8, quick: bool = False):
     return rows, best
 
 
+def bench_autotune(quick: bool = False, inner_steps: int = 8,
+                   expect_cached: bool = False):
+    """Autotuned vs static block shapes on the streaming per-iteration
+    plan, us/iter at the ``solver/iter`` shapes.
+
+    The tuned side resolves its blocks through ``kernels.autotune`` with
+    measured tuning enabled (cache honored — a warm ``REPRO_TUNING_CACHE``
+    means zero timing trials); the static side is the deterministic
+    ``pick_block`` prior. When the tuner lands exactly on the static plan
+    the ratio is emitted as exactly 1.0 without re-timing (the static
+    plan is always among the candidates, so the tuner cannot lose — the
+    ratio gate enforces that invariant end to end).
+
+    ``expect_cached=True`` additionally asserts resolution stability: a
+    second plan built against the warm cache must not add entries to the
+    inner kernel jit caches (zero retraces). Returns
+    ``(rows, worst_ratio, trials, failures)``.
+    """
+    from repro.core.geometry import FactoredPositive
+    from repro.kernels import autotune, feature_map, kermatvec
+    from repro.kernels.backend import resolve_backend
+    from repro.kernels.ops import geometry_ops
+
+    def impl_cache_sizes():
+        return tuple(fn._cache_size() for fn in (
+            kermatvec._feature_contract_impl,
+            kermatvec._halfstep_impl,
+            kermatvec._matvec_impl,
+            feature_map._feature_map_impl,
+        ))
+
+    key = jax.random.PRNGKey(0)
+    be = resolve_backend()
+    rows, failures = [], []
+    worst = None
+    autotune.reset_stats()
+    shapes = ((4096, 256), (16384, 256)) if quick \
+        else ((4096, 256), (16384, 256), (16384, 1024))
+    for n, r in shapes:
+        xi = jax.random.uniform(key, (n, r)) + 0.05
+        zt = jax.random.uniform(jax.random.fold_in(key, 1), (n, r)) + 0.05
+        a = jnp.full((n,), 1.0 / n)
+        geom = FactoredPositive(xi=xi, zeta=zt, eps=0.5)
+        shape = f"n{n}_r{r}"
+        flops = 8.0 * n * r
+
+        def make_runner(plan, n=n):
+            step, init = plan.make_step(a, a)
+
+            @jax.jit
+            def run(u0=jnp.ones((n,)), v0=jnp.ones((n,)),
+                    init=init, step=step):
+                carry = init(u0, v0)
+                for _ in range(inner_steps):
+                    carry, err = step(carry)
+                return carry[0], err
+
+            return run
+
+        def timed(fn, reps=3):
+            jax.block_until_ready(fn())          # compile (uncounted)
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                ts.append((time.perf_counter() - t0) / inner_steps)
+            return min(ts)
+
+        extents = {"n": n, "r": r, "B": 1}
+        static_blocks = (autotune.static_plan("feature_contract", extents,
+                                              be),
+                         autotune.static_plan("feature_rows", extents, be))
+        with autotune.tuning():
+            tuned_blocks = (
+                autotune.resolve("feature_contract", extents, xi.dtype, be),
+                autotune.resolve("feature_rows", extents, xi.dtype, be))
+            dt_tuned = timed(make_runner(geometry_ops(geom)))
+            if expect_cached:
+                sizes = impl_cache_sizes()
+                jax.block_until_ready(make_runner(geometry_ops(geom))())
+                if impl_cache_sizes() != sizes:
+                    failures.append(
+                        f"tuned plan at {shape} retraced inner kernels on "
+                        "a warm cache (resolution unstable)")
+        blocks_repr = ";".join(
+            f"{k}={v}" for plan in tuned_blocks
+            for k, v in sorted(plan.items()))
+        rows.append(f"solver/iter/{shape}/tuned,{dt_tuned * 1e6:.1f},"
+                    f"{blocks_repr};gflops_s={flops / dt_tuned / 1e9:.2f}")
+        if tuned_blocks == static_blocks:
+            ratio = 1.0              # same plan — no noisy re-timing
+        else:
+            dt_static = timed(make_runner(geometry_ops(geom)))
+            ratio = round(dt_static / dt_tuned, 2)
+        rows.append(f"solver/tuned_ratio/{shape},0,ratio={ratio:.2f};"
+                    f"same_plan={tuned_blocks == static_blocks}")
+        worst = ratio if worst is None else min(worst, ratio)
+    stats = autotune.stats()
+    rows.append(f"tune/trials,0,trials={stats['trials']};"
+                f"keys_tuned={stats['keys_tuned']};"
+                f"disk_hits={stats['disk_hits']};backend={be.name}")
+    return rows, worst, stats["trials"], failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -149,6 +256,14 @@ def main() -> None:
                     help="add the serving axis (bench_serve open-loop "
                          "latency, batched/warm capacity, zero-recompile "
                          "gate)")
+    ap.add_argument("--tune", action="store_true",
+                    help="add the autotuner axis (bench_autotune: tuned "
+                         "vs static block shapes, ratio >= 1.0 gate; "
+                         "cache honors REPRO_TUNING_CACHE)")
+    ap.add_argument("--tune-expect-cached", action="store_true",
+                    help="with --tune: assert the tuning cache is warm — "
+                         "zero timing trials and zero inner-kernel "
+                         "retraces, else fail")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as a BENCH_*.json artifact")
     ap.add_argument("--baseline", metavar="PATH", default=None,
@@ -186,6 +301,18 @@ def main() -> None:
             emit(row)
         print(f"# fused-block speedup {fused_speedup:.2f}x "
               "(target >= 1.5x)", file=sys.stderr)
+
+    tuned_ratio = tune_trials = None
+    tune_failures: list = []
+    if args.tune:
+        section("autotuned vs static tiling (kernels.autotune)")
+        tune_rows, tuned_ratio, tune_trials, tune_failures = bench_autotune(
+            quick=args.quick, expect_cached=args.tune_expect_cached)
+        for row in tune_rows:
+            emit(row)
+        print(f"# tuned-vs-static worst ratio {tuned_ratio:.2f}x "
+              f"(target >= 1.0); {tune_trials} timing trials",
+              file=sys.stderr)
 
     section("scaling (linear vs quadratic, Sec 3.1)")
     from . import bench_scaling
@@ -284,6 +411,8 @@ def main() -> None:
             artifact["fused_speedup"] = float(fused_speedup)
         if serve_speedup is not None:
             artifact["serve_speedup"] = float(serve_speedup)
+        if tuned_ratio is not None:
+            artifact["tuned_ratio"] = float(tuned_ratio)
         with open(args.json, "w") as fh:
             json.dump(artifact, fh, indent=1)
         print(f"# wrote {len(parsed)} rows to {args.json}", file=sys.stderr)
@@ -300,6 +429,15 @@ def main() -> None:
         failures.append(
             f"{serve_recompiles} post-warmup serving-path compiles/"
             "retraces (must be zero)")
+    if tuned_ratio is not None and tuned_ratio < 1.0:
+        failures.append(
+            f"tuned-vs-static us/iter ratio {tuned_ratio:.2f} < 1.0 — "
+            "the tuner lost to the static pick_block heuristic")
+    if args.tune_expect_cached and tune_trials:
+        failures.append(
+            f"{tune_trials} timing trials against a supposedly warm "
+            "tuning cache (must be zero)")
+    failures.extend(tune_failures)
     if args.baseline:
         with open(args.baseline) as fh:
             base = json.load(fh)

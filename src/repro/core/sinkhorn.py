@@ -55,9 +55,9 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.backend import resolve_backend
 from ..kernels.ops import (
     check_precision,
-    default_interpret,
     geometry_ops,
     notify_plan_selected,
     relax_log,
@@ -276,10 +276,11 @@ def _maybe_pallas_plan(geom: Geometry, use_pallas: Optional[bool],
                        mode: str, precision: str = "highest"):
     """Resolve the ``use_pallas`` policy into a fused plan (or ``None``).
 
-    ``None`` (auto) turns the fused path on exactly when the kernels would
-    COMPILE rather than interpret — i.e. on a real TPU backend; CPU runs
-    keep the XLA operators. ``True`` forces the plan (interpret mode off
-    TPU — the test configuration), ``False`` forces the XLA operators.
+    ``None`` (auto) turns the fused path on exactly when the resolved
+    execution backend COMPILES its Pallas lowering (tpu-mosaic AND
+    gpu-triton — see ``kernels.backend``); interpret-only platforms keep
+    the XLA operators. ``True`` forces the plan (interpret mode on CPU —
+    the test configuration), ``False`` forces the XLA operators.
     Geometries without a fused plan (dense, Nystrom, grids) always fall
     back. Selections are reported through the
     ``kernels.ops.observe_plan_selection`` hook.
@@ -290,7 +291,7 @@ def _maybe_pallas_plan(geom: Geometry, use_pallas: Optional[bool],
         # this guard keeps a forced use_pallas=True from probing them)
         return None
     if use_pallas is None:
-        use_pallas = not default_interpret()
+        use_pallas = not resolve_backend().interpret
     if not use_pallas:
         return None
     plan = geometry_ops(geom, mode=mode, precision=precision)

@@ -13,8 +13,19 @@
 Each kernel ships with a pure-jnp oracle in ``ref.py``; tests sweep shapes
 and dtypes in interpret mode. ``ops.py`` holds the jitted public wrappers
 plus ``geometry_ops`` — the fused execution plan the solvers route their
-hot loop through (``use_pallas``).
+hot loop through (``use_pallas``). ``backend.py`` owns the three-way
+execution policy (tpu-mosaic / gpu-triton / interpret) and ``autotune.py``
+the measured block-shape tuner that fills every ``block_*=None``.
 """
+from . import autotune
+from .backend import (
+    BACKEND_NAMES,
+    Backend,
+    backend_scope,
+    fused_map_admissible,
+    resolve_backend,
+    set_backend,
+)
 from .fused_loop import (
     block_plan_fits,
     block_vmem_bytes,
@@ -42,9 +53,16 @@ from .ops import (
 )
 
 __all__ = [
+    "BACKEND_NAMES",
+    "Backend",
     "GeometryOps",
     "PRECISIONS",
+    "autotune",
+    "backend_scope",
     "batched_sinkhorn_halfstep",
+    "fused_map_admissible",
+    "resolve_backend",
+    "set_backend",
     "block_plan_fits",
     "block_vmem_bytes",
     "check_precision",

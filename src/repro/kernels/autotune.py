@@ -1,0 +1,427 @@
+"""Measured block-shape autotuner for the Pallas kernels.
+
+``tiling.pick_block`` is a static heuristic: smallest lane multiple
+covering the axis, capped at a hand-picked constant. That single constant
+cannot be right across (n, r, dtype, backend) — interpret mode wants few
+large blocks (per-block Python overhead dominates), a TPU wants
+MXU-saturating tiles inside VMEM, Triton wants power-of-two tiles sized to
+shared memory. This module makes the static pick the tuner's PRIOR rather
+than the policy:
+
+  * at first use of a ``(kernel, extents, dtype, backend)`` key the tuner
+    times a small candidate grid of block shapes (lane-multiple powers of
+    two around the static pick, the static pick always included) on real
+    device buffers — median of 3 timed calls after a warmup — and caches
+    the winner,
+  * winners persist to a version-stamped JSON cache
+    (``~/.cache/repro/tuning.json``, override via ``REPRO_TUNING_CACHE``)
+    so a fresh process re-times nothing; corrupt or stale-version cache
+    files are ignored and rewritten,
+  * ``deterministic`` mode (the default — tuning is opt-in via
+    ``REPRO_TUNE=1`` or :func:`configure`) skips all timing and returns
+    exactly the static ``pick_block`` plan, so CI and tests stay
+    reproducible.
+
+The per-kernel PRIOR table below is also the single home of per-kernel cap
+overrides (the fused feature map's n-cap of 256 used to be hardcoded in
+``feature_map.py``) — no kernel carries private tiling constants anymore.
+
+Kernel modules register a *runner factory* per kernel name: the tuner asks
+it for a closure that executes the kernel once at given block sizes on
+synthetic device buffers of the keyed extents. Registration happens at
+kernel-module import, so there is no import cycle (this module never
+imports the kernels).
+
+``stats()`` exposes the trial/hit counters the CI ``tune-smoke`` job
+asserts on: a second run against a warm cache must perform ZERO timing
+trials.
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import json
+import os
+import statistics
+import time
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from .backend import Backend, resolve_backend
+from .tiling import LANE, pick_block, round_up
+
+__all__ = [
+    "CACHE_VERSION",
+    "CACHE_ENV",
+    "TUNE_ENV",
+    "candidates",
+    "cache_path",
+    "clear_cache",
+    "configure",
+    "register_runner",
+    "resolve",
+    "reset_stats",
+    "static_plan",
+    "stats",
+    "tuning",
+    "tuning_enabled",
+]
+
+CACHE_VERSION = 1
+CACHE_ENV = "REPRO_TUNING_CACHE"
+TUNE_ENV = "REPRO_TUNE"
+_DEFAULT_CACHE = os.path.join("~", ".cache", "repro", "tuning.json")
+
+# ---------------------------------------------------------------------------
+# Prior table: per-kernel, per-block-axis (extent key, cap). This is the
+# static pick_block policy, owned in ONE place — kernels resolve through
+# static_plan()/resolve() and carry no private tiling constants.
+# ---------------------------------------------------------------------------
+
+# axis spec: (extent name, cap, sequential-reduction axis?) — a seq axis is
+# accumulated across grid steps inside the kernel, which parallel-grid
+# (Triton) backends cannot do: there the axis is forced to a single block.
+PRIORS: Dict[str, Dict[str, Tuple[str, int, bool]]] = {
+    # t = Xi^T u — n is the reduction axis, but the gpu lowering uses the
+    # split-k variant (per-cell partials), so n blocking stays free.
+    "feature_contract": {
+        "block_n": ("n", 512, False),
+        "block_r": ("r", 512, False),
+    },
+    # Xi @ t (+ fused divide): one grid axis over rows, r rides whole.
+    "feature_rows": {
+        "block_n": ("n", 512, False),
+    },
+    # LSE twins of the two above.
+    "log_contract": {
+        "block_n": ("n", 512, False),
+        "block_r": ("r", 512, False),
+    },
+    "log_rows": {
+        "block_m": ("m", 512, False),
+    },
+    # fused Gaussian feature map: n-cap 256 keeps the working set
+    # (bn*bd + br*bd + bn*br floats) under ~2 MiB — the cap that used to
+    # live as a hardcoded pick_block(n, cap=256) inside feature_map.py.
+    # d is a sequential accumulation axis (single block on Triton).
+    "feature_map": {
+        "block_n": ("n", 256, False),
+        "block_r": ("r", 512, False),
+        "block_d": ("d", 512, True),
+    },
+}
+
+_RUNNERS: Dict[str, Callable] = {}
+
+_STATS = {
+    "trials": 0,        # timed candidate executions (warmups excluded)
+    "keys_tuned": 0,    # keys resolved by fresh timing
+    "memory_hits": 0,   # keys served from the in-process cache
+    "disk_hits": 0,     # keys served from the persisted JSON cache
+    "static": 0,        # keys served deterministically (tuning off)
+}
+
+_CONFIG: Dict[str, Optional[object]] = {
+    "deterministic": None,   # None -> env REPRO_TUNE decides
+    "cache_path": None,      # None -> env REPRO_TUNING_CACHE or default
+}
+
+_MEMORY: Dict[str, Dict[str, int]] = {}
+_DISK: Optional[Dict[str, Dict[str, int]]] = None   # lazy-loaded file copy
+
+
+# ---------------------------------------------------------------------------
+# Configuration / stats
+# ---------------------------------------------------------------------------
+
+
+def configure(*, deterministic: Optional[bool] = None,
+              cache_path: Optional[str] = None,
+              _reset: bool = False) -> dict:
+    """Set tuner policy; returns the previous config for restoration.
+    ``deterministic=False`` enables measured tuning; ``None`` defers to
+    the ``REPRO_TUNE`` env var (tuning on iff ``"1"``)."""
+    previous = dict(_CONFIG)
+    if _reset:
+        _CONFIG.update(deterministic=None, cache_path=None)
+    if deterministic is not None or _reset:
+        _CONFIG["deterministic"] = deterministic
+    if cache_path is not None or _reset:
+        _CONFIG["cache_path"] = cache_path
+        _invalidate_disk()
+    return previous
+
+
+def tuning_enabled() -> bool:
+    det = _CONFIG["deterministic"]
+    if det is not None:
+        return not det
+    return os.environ.get(TUNE_ENV, "0") == "1"
+
+
+@contextlib.contextmanager
+def tuning(*, deterministic: bool = False,
+           cache_path: Optional[str] = None):
+    """Scoped tuner policy: ``with autotune.tuning(cache_path=p): ...``."""
+    previous = configure(deterministic=deterministic, cache_path=cache_path)
+    try:
+        yield
+    finally:
+        _CONFIG.update(previous)
+        _invalidate_disk()
+
+
+def stats() -> dict:
+    return dict(_STATS)
+
+
+def reset_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+def clear_cache(*, memory: bool = True, disk_copy: bool = True) -> None:
+    """Drop the in-process caches. ``disk_copy=True`` also forgets the
+    loaded file contents, so the next resolve re-reads the cache file —
+    tests use this to simulate a fresh process."""
+    if memory:
+        _MEMORY.clear()
+    if disk_copy:
+        _invalidate_disk()
+
+
+def cache_path() -> str:
+    path = _CONFIG["cache_path"] or os.environ.get(CACHE_ENV) \
+        or _DEFAULT_CACHE
+    return os.path.expanduser(str(path))
+
+
+def register_runner(kernel: str, factory: Callable) -> None:
+    """Register ``factory(extents, dtype, backend) -> run(blocks)`` for a
+    kernel name; ``run`` executes the kernel once, blocking on the result.
+    Called by the kernel modules at import time."""
+    _RUNNERS[kernel] = factory
+
+
+# ---------------------------------------------------------------------------
+# Static prior + candidate generation
+# ---------------------------------------------------------------------------
+
+
+def static_plan(kernel: str, extents: Dict[str, int],
+                backend: Optional[Backend] = None) -> Dict[str, int]:
+    """Today's ``pick_block`` answer for every block axis of ``kernel`` —
+    the deterministic plan and the tuner's prior. Sequential-reduction
+    axes collapse to a single whole-axis block on split-reduce backends
+    (the Triton constraint)."""
+    axes = PRIORS[kernel]
+    plan = {}
+    for block_name, (extent_name, cap, seq) in axes.items():
+        size = int(extents[extent_name])
+        if seq and backend is not None and backend.split_reduce:
+            plan[block_name] = round_up(max(size, 1), LANE)
+        else:
+            plan[block_name] = pick_block(size, cap=cap)
+    return plan
+
+
+def candidates(kernel: str, extents: Dict[str, int],
+               backend: Optional[Backend] = None,
+               limit: int = 8) -> Tuple[Dict[str, int], ...]:
+    """The candidate block plans timed for one key: a power-of-two grid
+    around the static pick per axis (halved / doubled, clamped to
+    [lane, padded extent]), cross-producted and truncated to ``limit``
+    with the static plan always first — so the measured winner can never
+    lose to the prior."""
+    axes = PRIORS[kernel]
+    prior = static_plan(kernel, extents, backend)
+    options = []
+    names = list(axes)
+    for block_name in names:
+        extent_name, _cap, seq = axes[block_name]
+        size = int(extents[extent_name])
+        p = prior[block_name]
+        if seq and backend is not None and backend.split_reduce:
+            options.append([p])        # single-block constraint
+            continue
+        padded = round_up(max(size, 1), LANE)
+        vals = [p]
+        if p // 2 >= LANE:
+            vals.append(p // 2)
+        if p * 2 <= padded:
+            vals.append(p * 2)
+        options.append(vals)
+    plans = []
+    for combo in itertools.product(*options):
+        plan = dict(zip(names, combo))
+        if plan not in plans:
+            plans.append(plan)
+    # static plan first (it is options[*][0]), then nearest variations
+    return tuple(plans[:limit])
+
+
+# ---------------------------------------------------------------------------
+# Persistent cache
+# ---------------------------------------------------------------------------
+
+
+def _invalidate_disk() -> None:
+    global _DISK
+    _DISK = None
+
+
+def _load_disk() -> Dict[str, Dict[str, int]]:
+    global _DISK
+    if _DISK is not None:
+        return _DISK
+    entries: Dict[str, Dict[str, int]] = {}
+    try:
+        with open(cache_path()) as fh:
+            payload = json.load(fh)
+        if (isinstance(payload, dict)
+                and payload.get("version") == CACHE_VERSION
+                and isinstance(payload.get("entries"), dict)):
+            for key, entry in payload["entries"].items():
+                blocks = entry.get("blocks") if isinstance(entry, dict) \
+                    else None
+                if isinstance(blocks, dict) and all(
+                        isinstance(v, int) for v in blocks.values()):
+                    entries[key] = {k: int(v) for k, v in blocks.items()}
+        # corrupt payloads / stale versions fall through with entries={}
+    except (OSError, ValueError):
+        pass
+    _DISK = entries
+    return entries
+
+
+def _persist(key: str, blocks: Dict[str, int], us: float) -> None:
+    path = cache_path()
+    payload = {"version": CACHE_VERSION, "entries": {}}
+    try:
+        with open(path) as fh:
+            existing = json.load(fh)
+        if (isinstance(existing, dict)
+                and existing.get("version") == CACHE_VERSION
+                and isinstance(existing.get("entries"), dict)):
+            payload["entries"].update(existing["entries"])
+    except (OSError, ValueError):
+        pass
+    payload["entries"][key] = {"blocks": blocks, "us": round(us, 2)}
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        return      # read-only cache dir: keep the in-process winner only
+    disk = _load_disk()
+    disk[key] = dict(blocks)
+
+
+def _key(kernel: str, extents: Dict[str, int], dtype,
+         backend: Backend) -> str:
+    parts = [f"{k}={int(v)}" for k, v in sorted(extents.items())]
+    return "|".join(
+        [kernel, *parts, f"dtype={jnp.dtype(dtype).name}",
+         f"backend={backend.name}", f"v{CACHE_VERSION}"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Timing
+# ---------------------------------------------------------------------------
+
+
+def _time_plan(run: Callable, blocks: Dict[str, int],
+               reps: int = 3) -> float:
+    run(blocks)                      # warmup / compile (uncounted)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run(blocks)
+        ts.append(time.perf_counter() - t0)
+    _STATS["trials"] += 1
+    return statistics.median(ts)
+
+
+def _tune(kernel: str, extents: Dict[str, int], dtype,
+          backend: Backend) -> Dict[str, int]:
+    factory = _RUNNERS.get(kernel)
+    plans = candidates(kernel, extents, backend)
+    if factory is None or len(plans) == 1:
+        _STATS["static"] += 1
+        return static_plan(kernel, extents, backend)
+    run = factory(extents, dtype, backend)
+    best_plan, best_t = None, None
+    for plan in plans:
+        t = _time_plan(run, plan)
+        if best_t is None or t < best_t:
+            best_plan, best_t = plan, t
+    _STATS["keys_tuned"] += 1
+    _persist(_key(kernel, extents, dtype, backend), best_plan,
+             best_t * 1e6)
+    return best_plan
+
+
+# ---------------------------------------------------------------------------
+# Public resolution entry point
+# ---------------------------------------------------------------------------
+
+
+def resolve(kernel: str, extents: Dict[str, int], dtype=jnp.float32,
+            backend: Optional[Union[Backend, str]] = None,
+            *, interpret: Optional[bool] = None,
+            deterministic: Optional[bool] = None) -> Dict[str, int]:
+    """Block plan for one kernel call: the measured winner when tuning is
+    enabled (in-process cache, then the persisted JSON cache, then a fresh
+    timing pass), else exactly the static ``pick_block`` prior.
+
+    Called at trace time by the kernel wrappers (block sizes are static),
+    so a jitted solver tunes on its first trace per shape and replays the
+    cached plan afterwards. Timing runs on synthetic device buffers built
+    from the keyed extents — never on the (possibly traced) runtime
+    arrays.
+    """
+    be = resolve_backend(backend, interpret=interpret)
+    det = (not tuning_enabled()) if deterministic is None else deterministic
+    if det:
+        _STATS["static"] += 1
+        return static_plan(kernel, extents, be)
+    key = _key(kernel, extents, dtype, be)
+    hit = _MEMORY.get(key)
+    if hit is not None:
+        _STATS["memory_hits"] += 1
+        return dict(hit)
+    disk = _load_disk().get(key)
+    if disk is not None and set(disk) == set(PRIORS[kernel]):
+        _STATS["disk_hits"] += 1
+        _MEMORY[key] = dict(disk)
+        return dict(disk)
+    plan = _tune(kernel, extents, dtype, be)
+    _MEMORY[key] = dict(plan)
+    return dict(plan)
+
+
+def resolve_blocks(kernel: str, extents: Dict[str, int],
+                   given: Dict[str, Optional[int]], dtype,
+                   interpret: bool,
+                   backend: Optional[Backend] = None) -> Dict[str, int]:
+    """Kernel-wrapper helper: fill the ``block_* = None`` holes in
+    ``given`` through :func:`resolve`, honoring explicit overrides."""
+    if all(v is not None for v in given.values()):
+        return {k: int(v) for k, v in given.items()}
+    be = backend if backend is not None \
+        else resolve_backend(interpret=interpret)
+    plan = resolve(kernel, extents, dtype, be)
+    return {k: int(v) if v is not None else plan[k]
+            for k, v in given.items()}
+
+
+def _synthetic(shape, dtype, *, log: bool = False) -> jax.Array:
+    """Deterministic device buffer for timing (contents are irrelevant to
+    kernel runtime; values stay finite/positive for both domains)."""
+    x = jnp.full(shape, 0.5, jnp.dtype(dtype))
+    return jax.device_put(x if not log else x - 1.0)

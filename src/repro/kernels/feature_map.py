@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused Gaussian positive-feature map (Lemma 1).
+"""Pallas kernel: fused Gaussian positive-feature map (Lemma 1).
 
 Computes  Xi[i, k] = exp( c_k - (2/eps) * ||x_i - u_k||^2 )  without ever
 materializing the (n, r) squared-distance matrix in HBM: the MXU produces
@@ -12,14 +12,22 @@ the fused LSE kernels (``logmatvec``). Padded anchors carry
 ``log_const = -inf`` so their log-features are exactly ``-inf`` (the LSE
 identity) and their linear features exactly 0.
 
-Tiling: grid (n/bn, r/br, d/bd). The d axis is the innermost (sequential)
-grid dimension; the x.u partial products accumulate in the f32 output tile,
-and the epilogue on the last d-step applies norms (+ exp) in place. Block
-sizes default through ``kernels.tiling.pick_block`` — small d (2-64 in the
-point-cloud workloads) gets one lane-multiple tile instead of padding to
-512. Working set per step: bn*bd + br*bd + bn*br floats — the default caps
+Tiling: grid (n/bn, r/br, d/bd). The d axis is the innermost SEQUENTIAL
+grid dimension — the x.u partial products accumulate in the f32 output
+tile, and the epilogue on the last d-step applies norms (+ exp) in place.
+That accumulation is a Mosaic-only idiom: on parallel-grid backends
+(Triton) the d axis must ride in ONE block (``d_steps == 1``, enforced by
+the tuner's single-block constraint for sequential axes), and point
+dimensions too large for that refuse into the XLA feature map at the plan
+layer (``backend.fused_map_max_d`` / ``kernels.backend.fused_map_admissible``)
+rather than silently interpreting.
+
+Block sizes resolve ``block_* = None`` through ``kernels.autotune``; the
+n-cap of 256 that used to be hardcoded here now lives in the tuner's PRIOR
+table (working set per step: bn*bd + br*bd + bn*br floats — caps
 (256, 512, 512) keep it < 2 MiB, comfortably inside VMEM with double
-buffering.
+buffering). Resolution happens OUTSIDE the jitted impl so the chosen
+blocks are part of the jit cache key.
 """
 from __future__ import annotations
 
@@ -30,7 +38,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .tiling import pad_axis, pick_block
+from . import autotune
+from .backend import Backend
+from .tiling import pad_axis
 
 __all__ = ["gaussian_feature_map_kernel", "gaussian_feature_map_pallas"]
 
@@ -73,23 +83,20 @@ def gaussian_feature_map_kernel(
         "inv_eps", "block_n", "block_r", "block_d", "interpret", "log_space",
     ),
 )
-def gaussian_feature_map_pallas(
+def _feature_map_impl(
     x: jax.Array,           # (n, d)
     anchors: jax.Array,     # (r, d)
-    log_const: jax.Array,   # (r,) per-anchor offset (incl. -0.5 log r)
+    log_const: jax.Array,   # (r,)
     *,
     inv_eps: float,
-    block_n: Optional[int] = None,
-    block_r: Optional[int] = None,
-    block_d: Optional[int] = None,
-    interpret: bool = False,
-    log_space: bool = False,
+    block_n: int,
+    block_r: int,
+    block_d: int,
+    interpret: bool,
+    log_space: bool,
 ) -> jax.Array:
     n, d = x.shape
     r = anchors.shape[0]
-    block_n = pick_block(n, cap=256) if block_n is None else block_n
-    block_r = pick_block(r) if block_r is None else block_r
-    block_d = pick_block(d) if block_d is None else block_d
     # pad: zero-rows of x are sliced away; padded anchors get log_const=-inf
     # so their features are exactly 0 (or -inf log-features) and harmless to
     # downstream contractions / LSEs.
@@ -121,3 +128,44 @@ def gaussian_feature_map_pallas(
         interpret=interpret,
     )(xp, up, x2, u2c)
     return out[:n, :r]
+
+
+def gaussian_feature_map_pallas(
+    x: jax.Array,           # (n, d)
+    anchors: jax.Array,     # (r, d)
+    log_const: jax.Array,   # (r,) per-anchor offset (incl. -0.5 log r)
+    *,
+    inv_eps: float,
+    block_n: Optional[int] = None,
+    block_r: Optional[int] = None,
+    block_d: Optional[int] = None,
+    interpret: bool = False,
+    log_space: bool = False,
+    backend: Optional[Backend] = None,
+) -> jax.Array:
+    n, d = x.shape
+    r = anchors.shape[0]
+    blocks = autotune.resolve_blocks(
+        "feature_map", {"n": n, "r": r, "d": d},
+        {"block_n": block_n, "block_r": block_r, "block_d": block_d},
+        x.dtype, interpret, backend)
+    return _feature_map_impl(
+        x, anchors, log_const, inv_eps=inv_eps, interpret=interpret,
+        log_space=log_space, **blocks)
+
+
+def _feature_map_runner(extents, dtype, backend):
+    x = autotune._synthetic((extents["n"], extents["d"]), dtype)
+    u = autotune._synthetic((extents["r"], extents["d"]), dtype)
+    c = autotune._synthetic((extents["r"],), jnp.float32, log=True)
+
+    def run(blocks):
+        jax.block_until_ready(
+            _feature_map_impl(x, u, c, inv_eps=1.0,
+                              interpret=backend.interpret, log_space=False,
+                              **blocks))
+
+    return run
+
+
+autotune.register_runner("feature_map", _feature_map_runner)

@@ -37,12 +37,13 @@ stays import-cycle-free.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import Backend
 from .logmatvec import _finite_or_zero
 from .tiling import LANE, compute_f32 as _f32, pad_axis, round_up
 
@@ -58,10 +59,12 @@ __all__ = [
 # sublane quantum covering both f32 (8) and bf16 (16) second-to-minor dims
 _SUBLANE_ANY = 16
 
-# VMEM working-set ceilings for the whole-array megakernel. Compiled TPU
-# kernels must fit the ~16 MiB/core VMEM with double-buffering headroom;
-# interpret mode has no VMEM, so the cap only guards against accidentally
-# materializing huge arrays in the CI/benchmark path.
+# Legacy working-set ceilings for the whole-array megakernel, used when no
+# Backend record is supplied (the interpret-flag compat surface). The
+# canonical per-backend budgets live in ``kernels.backend`` — TPU's 12 MiB
+# VMEM (double-buffering headroom under ~16 MiB/core), GPU's 192 KiB
+# shared-memory bound (a gridless Triton pallas_call is ONE CTA), and the
+# interpret guard against accidentally materializing huge arrays.
 VMEM_BUDGET_COMPILED = 12 * 2**20
 VMEM_BUDGET_INTERPRET = 512 * 2**20
 
@@ -122,10 +125,22 @@ def block_vmem_bytes(n: int, m: int, r: int, B: int = 1,
 
 def block_plan_fits(n: int, m: int, r: int, B: int = 1,
                     feature_dtype=jnp.float32,
-                    interpret: bool = False) -> bool:
-    """Whether the whole-array megakernel is admissible at this shape."""
+                    interpret: bool = False,
+                    backend: Optional[Backend] = None) -> bool:
+    """Whether the whole-array megakernel is admissible at this shape.
+
+    With a :class:`~repro.kernels.backend.Backend` record the admission
+    gate is the record's own budget — 12 MiB VMEM on tpu-mosaic, 192 KiB
+    shared memory on gpu-triton (one CTA holds the whole working set), a
+    materialization guard on interpret — and backends whose megakernel
+    lowering is disabled refuse outright. Without a record the legacy
+    interpret-flag behavior applies (compat surface for existing call
+    sites and tests)."""
+    bytes_ = block_vmem_bytes(n, m, r, B, feature_dtype)
+    if backend is not None:
+        return backend.megakernel and bytes_ <= backend.block_budget
     budget = VMEM_BUDGET_INTERPRET if interpret else VMEM_BUDGET_COMPILED
-    return block_vmem_bytes(n, m, r, B, feature_dtype) <= budget
+    return bytes_ <= budget
 
 
 def _pad_rows_rep(arr: jax.Array, mult: int) -> jax.Array:

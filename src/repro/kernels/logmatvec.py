@@ -1,4 +1,4 @@
-"""Pallas TPU kernels: stabilized log-space factored Sinkhorn operators.
+"""Pallas kernels: stabilized log-space factored Sinkhorn operators.
 
 Three kernels cover the exact two-stage log-domain update (small-eps regime
 where scalings under/overflow f32):
@@ -29,6 +29,15 @@ Row-local stabilization happens inside the tile, so nothing quadratic ever
 leaves VMEM. r rides whole per tile (r <= 4096 in all configs) and is
 lane-padded with ``-inf`` (the logsumexp identity) via ``kernels.tiling``
 then sliced back.
+
+Backends: the row kernels are one parallel grid axis — they lower on
+Mosaic and Triton unchanged. The stage-1 contraction's online-logaddexp
+accumulation across n-blocks is a sequential-grid idiom; parallel-grid
+backends (``split_reduce=True``) run the split-k variant — each grid cell
+writes its own per-block partial LSE and XLA combines them with one final
+``logsumexp`` over the block axis (LSE is associative, so the combine is
+exact up to f32 rounding order). Block sizes resolve through
+``kernels.autotune`` outside the jit boundary.
 """
 from __future__ import annotations
 
@@ -39,7 +48,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .tiling import LANE, compute_f32 as _f32, pad_axis, pick_block
+from . import autotune
+from .backend import Backend
+from .tiling import LANE, compute_f32 as _f32, pad_axis
 
 __all__ = [
     "log_matvec_pallas",
@@ -63,15 +74,14 @@ def _log_matvec_kernel(logm_ref, t_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def log_matvec_pallas(
+def _log_matvec_impl(
     log_m: jax.Array,       # (m, r)
     t: jax.Array,           # (r,)
     *,
-    block_m: Optional[int] = None,
-    interpret: bool = False,
+    block_m: int,
+    interpret: bool,
 ) -> jax.Array:
     m, r = log_m.shape
-    block_m = pick_block(m) if block_m is None else block_m
     lp = pad_axis(pad_axis(log_m, 0, block_m, value=-jnp.inf),
                   1, LANE, value=-jnp.inf)
     tp = pad_axis(t, 0, LANE)       # added to -inf columns: fill irrelevant
@@ -91,6 +101,33 @@ def log_matvec_pallas(
     return out[:m, 0]
 
 
+def log_matvec_pallas(
+    log_m: jax.Array,       # (m, r)
+    t: jax.Array,           # (r,)
+    *,
+    block_m: Optional[int] = None,
+    interpret: bool = False,
+    backend: Optional[Backend] = None,
+) -> jax.Array:
+    blocks = autotune.resolve_blocks(
+        "log_rows", {"m": log_m.shape[0], "r": log_m.shape[1], "B": 1},
+        {"block_m": block_m}, log_m.dtype, interpret, backend)
+    return _log_matvec_impl(log_m, t, interpret=interpret, **blocks)
+
+
+def _block_lse_cols(lw: jax.Array, s_ref, n_cols: int) -> jax.Array:
+    """Per-column exact-joint-max LSE of one (bn, br) block: column c
+    reduces ``lw + s[:, c]`` over axis 0. Returns (br, B)."""
+    cols = []
+    for c in range(n_cols):
+        z = lw + s_ref[:, c][:, None]                  # (bn, br)
+        m = _finite_or_zero(jnp.max(z, axis=0, keepdims=True))
+        cols.append(
+            (m + jnp.log(jnp.sum(jnp.exp(z - m), axis=0, keepdims=True)))[0]
+        )                                              # (br,)
+    return jnp.stack(cols, axis=1)                     # (br, B)
+
+
 def _log_contract_kernel(lw_ref, s_ref, t_ref, *, n_cols: int):
     """t = logaddexp(t, LSE_i(lw_blk + s_blk)); n sequential grid axis.
 
@@ -102,39 +139,30 @@ def _log_contract_kernel(lw_ref, s_ref, t_ref, *, n_cols: int):
     def _init():
         t_ref[...] = jnp.full_like(t_ref, -jnp.inf)
 
-    lw = _f32(lw_ref[...])                             # (bn, br)
-    cols = []
-    for c in range(n_cols):
-        z = lw + s_ref[:, c][:, None]                  # (bn, br)
-        m = _finite_or_zero(jnp.max(z, axis=0, keepdims=True))
-        cols.append(
-            (m + jnp.log(jnp.sum(jnp.exp(z - m), axis=0, keepdims=True)))[0]
-        )                                              # (br,)
-    contrib = jnp.stack(cols, axis=1)                  # (br, B)
+    contrib = _block_lse_cols(_f32(lw_ref[...]), s_ref, n_cols)
     t_ref[...] = jnp.logaddexp(t_ref[...], contrib)
+
+
+def _log_contract_splitk_kernel(lw_ref, s_ref, t_ref, *, n_cols: int):
+    """Split-k twin: cell (i, j) writes its own (1, br, B) partial LSE —
+    no cross-program logaddexp, so the kernel lowers on parallel grids;
+    the combine is one exact XLA ``logsumexp`` over the block axis."""
+    t_ref[...] = _block_lse_cols(_f32(lw_ref[...]), s_ref, n_cols)[None]
 
 
 @functools.partial(
     jax.jit, static_argnames=("block_n", "block_r", "interpret")
 )
-def log_feature_contract_pallas(
+def _log_contract_impl(
     log_w: jax.Array,       # (n, r) log-features
     s: jax.Array,           # (n, B) log-scalings (f / eps columns)
     *,
-    block_n: Optional[int] = None,
-    block_r: Optional[int] = None,
-    interpret: bool = False,
+    block_n: int,
+    block_r: int,
+    interpret: bool,
 ) -> jax.Array:
-    """t[k, c] = LSE_i(log_w[i, k] + s[i, c]), shape (r, B).
-
-    The log-space twin of ``feature_contract_pallas``: -inf-padded rows
-    are the LSE identity, so padding contributes nothing. B stays
-    unpadded — the column loop is unrolled (B = 1 on the solver path).
-    """
     n, r = log_w.shape
     B = s.shape[1]
-    block_n = pick_block(n) if block_n is None else block_n
-    block_r = pick_block(r) if block_r is None else block_r
     lp = pad_axis(pad_axis(log_w, 0, block_n, value=-jnp.inf),
                   1, block_r, value=-jnp.inf)
     sp = pad_axis(s, 0, block_n, value=-jnp.inf)
@@ -151,6 +179,64 @@ def log_feature_contract_pallas(
         interpret=interpret,
     )(lp, sp)
     return t[:r]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_r", "interpret")
+)
+def _log_contract_splitk_impl(
+    log_w: jax.Array,
+    s: jax.Array,
+    *,
+    block_n: int,
+    block_r: int,
+    interpret: bool,
+) -> jax.Array:
+    n, r = log_w.shape
+    B = s.shape[1]
+    lp = pad_axis(pad_axis(log_w, 0, block_n, value=-jnp.inf),
+                  1, block_r, value=-jnp.inf)
+    sp = pad_axis(s, 0, block_n, value=-jnp.inf)
+    n_steps = lp.shape[0] // block_n
+    grid = (lp.shape[1] // block_r, n_steps)
+    partials = pl.pallas_call(
+        functools.partial(_log_contract_splitk_kernel, n_cols=B),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_r), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, B), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_r, B), lambda i, j: (j, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_steps, lp.shape[1], B),
+                                       jnp.float32),
+        interpret=interpret,
+    )(lp, sp)
+    return jax.scipy.special.logsumexp(partials, axis=0)[:r]
+
+
+def log_feature_contract_pallas(
+    log_w: jax.Array,       # (n, r) log-features
+    s: jax.Array,           # (n, B) log-scalings (f / eps columns)
+    *,
+    block_n: Optional[int] = None,
+    block_r: Optional[int] = None,
+    interpret: bool = False,
+    split_reduce: bool = False,
+    backend: Optional[Backend] = None,
+) -> jax.Array:
+    """t[k, c] = LSE_i(log_w[i, k] + s[i, c]), shape (r, B).
+
+    The log-space twin of ``feature_contract_pallas``: -inf-padded rows
+    are the LSE identity, so padding contributes nothing. B stays
+    unpadded — the column loop is unrolled (B = 1 on the solver path).
+    """
+    n, r = log_w.shape
+    blocks = autotune.resolve_blocks(
+        "log_contract", {"n": n, "r": r, "B": s.shape[1]},
+        {"block_n": block_n, "block_r": block_r}, log_w.dtype, interpret,
+        backend)
+    impl = _log_contract_splitk_impl if split_reduce else _log_contract_impl
+    return impl(log_w, s, interpret=interpret, **blocks)
 
 
 def _log_halfstep_kernel(lw_ref, t_ref, lmarg_ref, o_ref, *, scale: float,
@@ -173,26 +259,17 @@ def _log_halfstep_kernel(lw_ref, t_ref, lmarg_ref, o_ref, *, scale: float,
 @functools.partial(
     jax.jit, static_argnames=("scale", "block_m", "interpret")
 )
-def log_halfstep_pallas(
+def _log_halfstep_impl(
     log_w: jax.Array,       # (m, r) log-features of the side being updated
     t: jax.Array,           # (r, B) stage-1 output
     lmarg: jax.Array,       # (m, B) log target marginal (0 for raw LSE)
     *,
-    scale: float = 1.0,
-    block_m: Optional[int] = None,
-    interpret: bool = False,
+    scale: float,
+    block_m: int,
+    interpret: bool,
 ) -> jax.Array:
-    """out = scale * (lmarg - LSE_k(log_w[:, k] + t[k, :])), shape (m, B).
-
-    The B-column generalization of :func:`log_matvec_pallas` with the
-    divide-free log half-step fused: ``scale=eps`` gives the potential
-    update ``eps (log b - log K^T e^{f/eps})`` directly; ``scale=-1`` with
-    ``lmarg=0`` recovers the raw LSE. r rides whole in VMEM; B stays
-    unpadded (unrolled columns, B = 1 on the solver path).
-    """
     m, r = log_w.shape
     B = t.shape[1]
-    block_m = pick_block(m) if block_m is None else block_m
     lp = pad_axis(pad_axis(log_w, 0, block_m, value=-jnp.inf),
                   1, LANE, value=-jnp.inf)
     tp = pad_axis(t, 0, LANE, value=-jnp.inf)
@@ -212,3 +289,67 @@ def log_halfstep_pallas(
         interpret=interpret,
     )(lp, tp, mp)
     return out[:m]
+
+
+def log_halfstep_pallas(
+    log_w: jax.Array,       # (m, r) log-features of the side being updated
+    t: jax.Array,           # (r, B) stage-1 output
+    lmarg: jax.Array,       # (m, B) log target marginal (0 for raw LSE)
+    *,
+    scale: float = 1.0,
+    block_m: Optional[int] = None,
+    interpret: bool = False,
+    backend: Optional[Backend] = None,
+) -> jax.Array:
+    """out = scale * (lmarg - LSE_k(log_w[:, k] + t[k, :])), shape (m, B).
+
+    The B-column generalization of :func:`log_matvec_pallas` with the
+    divide-free log half-step fused: ``scale=eps`` gives the potential
+    update ``eps (log b - log K^T e^{f/eps})`` directly; ``scale=-1`` with
+    ``lmarg=0`` recovers the raw LSE. r rides whole in VMEM; B stays
+    unpadded (unrolled columns, B = 1 on the solver path).
+    """
+    blocks = autotune.resolve_blocks(
+        "log_rows", {"m": log_w.shape[0], "r": log_w.shape[1],
+                     "B": t.shape[1]},
+        {"block_m": block_m}, log_w.dtype, interpret, backend)
+    return _log_halfstep_impl(log_w, t, lmarg, scale=scale,
+                              interpret=interpret, **blocks)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner runners
+# ---------------------------------------------------------------------------
+
+
+def _log_contract_runner(extents, dtype, backend):
+    lw = autotune._synthetic((extents["n"], extents["r"]), dtype, log=True)
+    s = autotune._synthetic((extents["n"], extents["B"]), jnp.float32,
+                            log=True)
+    impl = _log_contract_splitk_impl if backend.split_reduce \
+        else _log_contract_impl
+
+    def run(blocks):
+        jax.block_until_ready(
+            impl(lw, s, interpret=backend.interpret, **blocks))
+
+    return run
+
+
+def _log_rows_runner(extents, dtype, backend):
+    lw = autotune._synthetic((extents["m"], extents["r"]), dtype, log=True)
+    t = autotune._synthetic((extents["r"], extents["B"]), jnp.float32,
+                            log=True)
+    lmarg = autotune._synthetic((extents["m"], extents["B"]), jnp.float32,
+                                log=True)
+
+    def run(blocks):
+        jax.block_until_ready(
+            _log_halfstep_impl(lw, t, lmarg, scale=1.0,
+                               interpret=backend.interpret, **blocks))
+
+    return run
+
+
+autotune.register_runner("log_contract", _log_contract_runner)
+autotune.register_runner("log_rows", _log_rows_runner)

@@ -1,9 +1,12 @@
 """Jitted public wrappers over the Pallas kernels + the fused solve plans.
 
-On CPU (this container) every kernel runs in ``interpret=True`` mode — the
-kernel body executes in Python/XLA-CPU for correctness validation; on TPU
-the same BlockSpecs compile to Mosaic. ``interpret`` is resolved once from
-the backend unless overridden.
+Execution policy is a first-class :class:`~repro.kernels.backend.Backend`
+record (``kernels.backend.resolve_backend``): tpu-mosaic compiles the
+sequential-grid kernels as written; gpu-triton compiles too but routes
+grid reductions through their split-k variants and admission-gates the
+megakernel at shared-memory size; only platforms with no compiled lowering
+interpret. Every wrapper accepts ``backend=`` (record or resolved
+upstream) and the legacy ``interpret=`` bool as a compat override.
 
 ``fused_sinkhorn_iteration`` composes the kernels into one full Alg.-1
 iteration (v then u) — this is the paper's O(r(n+m)) hot loop as it would
@@ -33,6 +36,7 @@ from typing import Callable, List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .backend import Backend, fused_map_admissible, resolve_backend
 from .feature_map import gaussian_feature_map_pallas
 from .fused_loop import (
     block_plan_fits,
@@ -51,6 +55,7 @@ from .logmatvec import (
     log_halfstep_pallas,
     log_matvec_pallas,
 )
+from .ref import gaussian_feature_map_ref
 
 __all__ = [
     "default_interpret",
@@ -77,12 +82,17 @@ __all__ = [
 
 
 def default_interpret() -> bool:
-    """Pallas interpret mode iff we're not actually on TPU."""
-    return jax.default_backend() != "tpu"
+    """Compat shim: whether the AMBIENT backend policy interprets.
+
+    Historically this was ``jax.default_backend() != "tpu"`` — which
+    silently handed GPUs the interpreted kernels. It now defers to
+    ``kernels.backend.resolve_backend``: only platforms with no compiled
+    Pallas lowering (or an explicit override) interpret."""
+    return resolve_backend().interpret
 
 
 # ---------------------------------------------------------------------------
-# Thin interpret-resolving wrappers
+# Thin backend-resolving wrappers
 # ---------------------------------------------------------------------------
 
 
@@ -94,26 +104,36 @@ def gaussian_feature_map(
     inv_eps: float,
     interpret: Optional[bool] = None,
     log_space: bool = False,
+    backend: Optional[Backend] = None,
 ) -> jax.Array:
-    interpret = default_interpret() if interpret is None else interpret
+    be = resolve_backend(backend, interpret=interpret)
+    if not fused_map_admissible(x.shape[1], be):
+        # the fused map's d axis is a sequential accumulation grid; when it
+        # cannot ride in one block on a parallel-grid backend, REFUSE into
+        # the streaming XLA map — never silently interpret.
+        return gaussian_feature_map_ref(
+            x, anchors, log_const, inv_eps=inv_eps, log_space=log_space)
     return gaussian_feature_map_pallas(
-        x, anchors, log_const, inv_eps=inv_eps, interpret=interpret,
-        log_space=log_space,
+        x, anchors, log_const, inv_eps=inv_eps, interpret=be.interpret,
+        log_space=log_space, backend=be,
     )
 
 
 def feature_contract(
-    xi: jax.Array, u: jax.Array, *, interpret: Optional[bool] = None
+    xi: jax.Array, u: jax.Array, *, interpret: Optional[bool] = None,
+    backend: Optional[Backend] = None,
 ) -> jax.Array:
-    interpret = default_interpret() if interpret is None else interpret
-    return feature_contract_pallas(xi, u, interpret=interpret)
+    be = resolve_backend(backend, interpret=interpret)
+    return feature_contract_pallas(xi, u, interpret=be.interpret,
+                                   split_reduce=be.split_reduce, backend=be)
 
 
 def feature_matvec(
-    xi: jax.Array, t: jax.Array, *, interpret: Optional[bool] = None
+    xi: jax.Array, t: jax.Array, *, interpret: Optional[bool] = None,
+    backend: Optional[Backend] = None,
 ) -> jax.Array:
-    interpret = default_interpret() if interpret is None else interpret
-    return feature_matvec_pallas(xi, t, interpret=interpret)
+    be = resolve_backend(backend, interpret=interpret)
+    return feature_matvec_pallas(xi, t, interpret=be.interpret, backend=be)
 
 
 def sinkhorn_halfstep(
@@ -122,23 +142,29 @@ def sinkhorn_halfstep(
     marg: jax.Array,
     *,
     interpret: Optional[bool] = None,
+    backend: Optional[Backend] = None,
 ) -> jax.Array:
-    interpret = default_interpret() if interpret is None else interpret
-    return sinkhorn_halfstep_pallas(xi, t, marg, interpret=interpret)
+    be = resolve_backend(backend, interpret=interpret)
+    return sinkhorn_halfstep_pallas(xi, t, marg, interpret=be.interpret,
+                                    backend=be)
 
 
 def log_matvec(
-    log_m: jax.Array, t: jax.Array, *, interpret: Optional[bool] = None
+    log_m: jax.Array, t: jax.Array, *, interpret: Optional[bool] = None,
+    backend: Optional[Backend] = None,
 ) -> jax.Array:
-    interpret = default_interpret() if interpret is None else interpret
-    return log_matvec_pallas(log_m, t, interpret=interpret)
+    be = resolve_backend(backend, interpret=interpret)
+    return log_matvec_pallas(log_m, t, interpret=be.interpret, backend=be)
 
 
 def log_feature_contract(
-    log_w: jax.Array, s: jax.Array, *, interpret: Optional[bool] = None
+    log_w: jax.Array, s: jax.Array, *, interpret: Optional[bool] = None,
+    backend: Optional[Backend] = None,
 ) -> jax.Array:
-    interpret = default_interpret() if interpret is None else interpret
-    return log_feature_contract_pallas(log_w, s, interpret=interpret)
+    be = resolve_backend(backend, interpret=interpret)
+    return log_feature_contract_pallas(
+        log_w, s, interpret=be.interpret, split_reduce=be.split_reduce,
+        backend=be)
 
 
 def log_halfstep(
@@ -148,10 +174,11 @@ def log_halfstep(
     *,
     scale: float = 1.0,
     interpret: Optional[bool] = None,
+    backend: Optional[Backend] = None,
 ) -> jax.Array:
-    interpret = default_interpret() if interpret is None else interpret
+    be = resolve_backend(backend, interpret=interpret)
     return log_halfstep_pallas(log_w, t, lmarg, scale=scale,
-                               interpret=interpret)
+                               interpret=be.interpret, backend=be)
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +194,7 @@ def fused_sinkhorn_iteration(
     u: jax.Array,           # (n, B) current scaling
     *,
     interpret: Optional[bool] = None,
+    backend: Optional[Backend] = None,
 ):
     """One full Sinkhorn iteration on the factored kernel, Pallas end to end.
 
@@ -177,10 +205,11 @@ def fused_sinkhorn_iteration(
 
     Returns (u', v).
     """
-    t = feature_contract(xi, u, interpret=interpret)
-    v = sinkhorn_halfstep(zeta, t, b, interpret=interpret)
-    s = feature_contract(zeta, v, interpret=interpret)
-    u_new = sinkhorn_halfstep(xi, s, a, interpret=interpret)
+    be = resolve_backend(backend, interpret=interpret)
+    t = feature_contract(xi, u, backend=be)
+    v = sinkhorn_halfstep(zeta, t, b, backend=be)
+    s = feature_contract(zeta, v, backend=be)
+    u_new = sinkhorn_halfstep(xi, s, a, backend=be)
     return u_new, v
 
 
@@ -193,6 +222,7 @@ def fused_log_sinkhorn_iteration(
     *,
     eps: float,
     interpret: Optional[bool] = None,
+    backend: Optional[Backend] = None,
 ):
     """One full LOG-domain Sinkhorn iteration, Pallas end to end:
 
@@ -203,10 +233,11 @@ def fused_log_sinkhorn_iteration(
 
     Returns (f', g) — the small-eps twin of :func:`fused_sinkhorn_iteration`.
     """
-    t = log_feature_contract(log_xi, f / eps, interpret=interpret)
-    g = log_halfstep(log_zeta, t, logb, scale=eps, interpret=interpret)
-    s = log_feature_contract(log_zeta, g / eps, interpret=interpret)
-    f_new = log_halfstep(log_xi, s, loga, scale=eps, interpret=interpret)
+    be = resolve_backend(backend, interpret=interpret)
+    t = log_feature_contract(log_xi, f / eps, backend=be)
+    g = log_halfstep(log_zeta, t, logb, scale=eps, backend=be)
+    s = log_feature_contract(log_zeta, g / eps, backend=be)
+    f_new = log_halfstep(log_xi, s, loga, scale=eps, backend=be)
     return f_new, g
 
 
@@ -217,17 +248,19 @@ def batched_sinkhorn_halfstep(
     zeta: jax.Array,        # (B, m, r) features contracted against u
     *,
     interpret: Optional[bool] = None,
+    backend: Optional[Backend] = None,
 ) -> jax.Array:
     """One fused half-step  v_b = marg_b / (Xi_b (Zeta_b^T u_b))  for B
     independent problems (per-problem features, e.g. the BatchedSinkhorn
     engine's bucket groups). Pallas batching adds B as a leading grid axis,
     so the MXU still sees the same (block_n x r) tiles back to back.
     """
+    be = resolve_backend(backend, interpret=interpret)
 
     def one(xi_b, u_b, marg_b, zeta_b):
-        t = feature_contract(zeta_b, u_b[:, None], interpret=interpret)
+        t = feature_contract(zeta_b, u_b[:, None], backend=be)
         return sinkhorn_halfstep(xi_b, t, marg_b[:, None],
-                                 interpret=interpret)[:, 0]
+                                 backend=be)[:, 0]
 
     return jax.vmap(one)(xi, u, marg, zeta)
 
@@ -240,6 +273,7 @@ def fused_batched_sinkhorn_iteration(
     u: jax.Array,           # (B, n) current scalings
     *,
     interpret: Optional[bool] = None,
+    backend: Optional[Backend] = None,
 ):
     """One full Alg.-1 iteration for B independent problems, Pallas end to
     end:
@@ -255,8 +289,9 @@ def fused_batched_sinkhorn_iteration(
     per-problem solver when ``use_pallas`` is on: vmap adds B as a leading
     Pallas grid axis, exactly as here.
     """
-    v = batched_sinkhorn_halfstep(zeta, u, b, xi, interpret=interpret)
-    u_new = batched_sinkhorn_halfstep(xi, v, a, zeta, interpret=interpret)
+    be = resolve_backend(backend, interpret=interpret)
+    v = batched_sinkhorn_halfstep(zeta, u, b, xi, backend=be)
+    u_new = batched_sinkhorn_halfstep(xi, v, a, zeta, backend=be)
     return u_new, v
 
 
@@ -344,8 +379,11 @@ class GeometryOps(NamedTuple):
                     (``fused_loop.block_plan_fits``) — callers then fall
                     back to the streaming per-iteration ``make_step``.
     ``interpret`` — whether the plan's kernels run in interpret mode
-                    (off-TPU). The solver auto policy keys on this: the
-                    megakernel auto-enables only where it compiles.
+                    (``backend.interpret`` — kept as a flat field for the
+                    solver auto policy and existing call sites).
+    ``backend``   — the resolved :class:`Backend` record the plan was
+                    built at (budgets, split-k routing, megakernel
+                    admission all key off it).
     ``precision`` — the execution policy the plan was built at
                     ("highest" | "bf16"): bf16 stores/streams the factors
                     at half width; all contractions and LSE accumulations
@@ -362,19 +400,19 @@ class GeometryOps(NamedTuple):
     make_block_step: Optional[Callable] = None
     interpret: bool = False
     precision: str = "highest"
+    backend: Optional[Backend] = None
 
 
-def _scaling_plan(kind: str, xi, zeta, interpret,
+def _scaling_plan(kind: str, xi, zeta, be: Backend,
                   precision: str = "highest") -> GeometryOps:
     xi, zeta = _store_features(xi, zeta, precision)
 
     def iteration(a, b, u):
-        return fused_sinkhorn_iteration(xi, zeta, a, b, u,
-                                        interpret=interpret)
+        return fused_sinkhorn_iteration(xi, zeta, a, b, u, backend=be)
 
     def apply_kt(u):
-        t = feature_contract(xi, u[:, None], interpret=interpret)
-        return feature_matvec(zeta, t, interpret=interpret)[:, 0]
+        t = feature_contract(xi, u[:, None], backend=be)
+        return feature_matvec(zeta, t, backend=be)[:, 0]
 
     def make_step(a, b, *, momentum: float = 1.0,
                   err_reduce: Callable = jnp.sum):
@@ -383,15 +421,15 @@ def _scaling_plan(kind: str, xi, zeta, interpret,
         def step(carry):
             u, v, s = carry
             v_new = relax_scaling(b / s, v, momentum)
-            t = feature_contract(zeta, v_new[:, None], interpret=interpret)
+            t = feature_contract(zeta, v_new[:, None], backend=be)
             if momentum == 1.0:
                 # matvec + marginal divide fused in one VMEM pass
-                u_new = sinkhorn_halfstep(xi, t, ac, interpret=interpret)[:, 0]
+                u_new = sinkhorn_halfstep(xi, t, ac, backend=be)[:, 0]
             else:
-                kv = feature_matvec(xi, t, interpret=interpret)[:, 0]
+                kv = feature_matvec(xi, t, backend=be)[:, 0]
                 u_new = relax_scaling(a / kv, u, momentum)
-            t2 = feature_contract(xi, u_new[:, None], interpret=interpret)
-            s_new = feature_matvec(zeta, t2, interpret=interpret)[:, 0]
+            t2 = feature_contract(xi, u_new[:, None], backend=be)
+            s_new = feature_matvec(zeta, t2, backend=be)[:, 0]
             err = err_reduce(jnp.abs(v_new * s_new - b))
             return (u_new, v_new, s_new), err
 
@@ -402,7 +440,7 @@ def _scaling_plan(kind: str, xi, zeta, interpret,
 
     def make_block_step(a, b, *, inner_steps: int, momentum: float = 1.0):
         n, m = a.shape[0], b.shape[0]
-        if not block_plan_fits(n, m, xi.shape[1], 1, xi.dtype, interpret):
+        if not block_plan_fits(n, m, xi.shape[1], 1, xi.dtype, backend=be):
             return None
         ac, bc = a[:, None], b[:, None]
 
@@ -411,7 +449,7 @@ def _scaling_plan(kind: str, xi, zeta, interpret,
             u2, v2, s2, err = sinkhorn_block_pallas(
                 xi, zeta, ac, bc, u[:, None], v[:, None], s[:, None],
                 inner_steps=inner_steps, momentum=momentum,
-                interpret=interpret,
+                interpret=be.interpret,
             )
             return (u2[:, 0], v2[:, 0], s2[:, 0]), err
 
@@ -423,24 +461,24 @@ def _scaling_plan(kind: str, xi, zeta, interpret,
     return GeometryOps(mode="scaling", kind=kind, features=(xi, zeta),
                        iteration=iteration, make_step=make_step,
                        apply_kt=apply_kt, make_block_step=make_block_step,
-                       interpret=interpret, precision=precision)
+                       interpret=be.interpret, precision=precision,
+                       backend=be)
 
 
-def _log_plan(kind: str, log_xi, log_zeta, eps: float, interpret,
+def _log_plan(kind: str, log_xi, log_zeta, eps: float, be: Backend,
               precision: str = "highest") -> GeometryOps:
     log_xi, log_zeta = _store_features(log_xi, log_zeta, precision)
 
     def iteration(loga, logb, f):
         return fused_log_sinkhorn_iteration(
-            log_xi, log_zeta, loga, logb, f, eps=eps, interpret=interpret
+            log_xi, log_zeta, loga, logb, f, eps=eps, backend=be
         )
 
     def contract_f(f):
         """Stage-1 LSE over logXi — the carried intermediate: computing it
         once per iteration serves BOTH the convergence check and the next
         iteration's g-update (the log twin of carrying ``s = K^T u``)."""
-        return log_feature_contract(log_xi, f[:, None] / eps,
-                                    interpret=interpret)
+        return log_feature_contract(log_xi, f[:, None] / eps, backend=be)
 
     def make_step(a, b, *, momentum: float = 1.0,
                   err_reduce: Callable = jnp.sum):
@@ -452,15 +490,15 @@ def _log_plan(kind: str, log_xi, log_zeta, eps: float, interpret,
             f, g, t1 = carry                     # t1 = LSE(logXi + f/eps)
             g_new = relax_log(
                 log_halfstep(log_zeta, t1, logb, scale=eps,
-                             interpret=interpret)[:, 0], g, momentum)
+                             backend=be)[:, 0], g, momentum)
             t2 = log_feature_contract(log_zeta, g_new[:, None] / eps,
-                                      interpret=interpret)
+                                      backend=be)
             f_new = relax_log(
                 log_halfstep(log_xi, t2, loga, scale=eps,
-                             interpret=interpret)[:, 0], f, momentum)
+                             backend=be)[:, 0], f, momentum)
             t3 = contract_f(f_new)
             lse = log_halfstep(log_zeta, t3, zero, scale=-1.0,
-                               interpret=interpret)[:, 0]
+                               backend=be)[:, 0]
             log_col = lse + g_new / eps
             err = err_reduce(jnp.abs(jnp.exp(log_col) - b))
             return (f_new, g_new, t3), err
@@ -473,7 +511,7 @@ def _log_plan(kind: str, log_xi, log_zeta, eps: float, interpret,
     def make_block_step(a, b, *, inner_steps: int, momentum: float = 1.0):
         n, m = a.shape[0], b.shape[0]
         if not block_plan_fits(n, m, log_xi.shape[1], 1, log_xi.dtype,
-                               interpret):
+                               backend=be):
             return None
         loga = _masked_log(a)[:, None]
         logb = _masked_log(b)[:, None]
@@ -485,7 +523,7 @@ def _log_plan(kind: str, log_xi, log_zeta, eps: float, interpret,
                 log_xi, log_zeta, loga, logb, bc,
                 f[:, None], g[:, None], t1,
                 inner_steps=inner_steps, eps=eps, momentum=momentum,
-                interpret=interpret,
+                interpret=be.interpret,
             )
             return (f2[:, 0], g2[:, 0], t2), err
 
@@ -496,13 +534,15 @@ def _log_plan(kind: str, log_xi, log_zeta, eps: float, interpret,
 
     return GeometryOps(mode="log", kind=kind, features=(log_xi, log_zeta),
                        iteration=iteration, make_step=make_step, eps=eps,
-                       make_block_step=make_block_step, interpret=interpret,
-                       precision=precision)
+                       make_block_step=make_block_step,
+                       interpret=be.interpret, precision=precision,
+                       backend=be)
 
 
 def geometry_ops(geom, *, interpret: Optional[bool] = None,
                  mode: str = "scaling",
-                 precision: str = "highest") -> Optional[GeometryOps]:
+                 precision: str = "highest",
+                 backend: Optional[Backend] = None) -> Optional[GeometryOps]:
     """Fused-kernel plan for ``geom``, chosen by the geometry itself.
 
     ``mode="scaling"`` builds the linear-feature plan (Alg. 1 on scalings);
@@ -517,6 +557,12 @@ def geometry_ops(geom, *, interpret: Optional[bool] = None,
     feature blocks produced by the fused Gaussian map for point-cloud
     geometries — at half width; contractions and LSE accumulations stay
     f32 (see ``_store_features``).
+
+    ``backend=`` pins the plan to a resolved :class:`Backend` record;
+    otherwise the ambient policy applies (``interpret=`` being the legacy
+    override). The whole plan — kernel routing (split-k on parallel-grid
+    backends), fused-map admissibility, megakernel budget — keys off the
+    one record.
     """
     if mode not in ("scaling", "log"):
         raise ValueError(f"unknown plan mode {mode!r}")
@@ -524,33 +570,32 @@ def geometry_ops(geom, *, interpret: Optional[bool] = None,
     spec = geom.pallas_ops()
     if spec is None:
         return None
-    interpret = default_interpret() if interpret is None else interpret
+    be = resolve_backend(backend, interpret=interpret)
     kind = spec["kind"]
     if kind == "factored":
         xi, zeta = spec["xi"], spec["zeta"]
         if mode == "scaling":
-            return _scaling_plan(kind, xi, zeta, interpret, precision)
+            return _scaling_plan(kind, xi, zeta, be, precision)
         return _log_plan(kind, _masked_log(xi), _masked_log(zeta),
-                         float(geom.eps), interpret, precision)
+                         float(geom.eps), be, precision)
     if kind == "log_factored":
         lxi, lzt = spec["log_xi"], spec["log_zeta"]
         if mode == "log":
-            return _log_plan(kind, lxi, lzt, float(spec["eps"]), interpret,
+            return _log_plan(kind, lxi, lzt, float(spec["eps"]), be,
                              precision)
-        return _scaling_plan(kind, jnp.exp(lxi), jnp.exp(lzt), interpret,
+        return _scaling_plan(kind, jnp.exp(lxi), jnp.exp(lzt), be,
                              precision)
     if kind == "gaussian":
         fmap = functools.partial(
             gaussian_feature_map,
             anchors=spec["anchors"], log_const=spec["log_const"],
-            inv_eps=spec["inv_eps"], interpret=interpret,
+            inv_eps=spec["inv_eps"], backend=be,
             log_space=(mode == "log"),
         )
         xi, zeta = fmap(spec["x"]), fmap(spec["y"])
         if mode == "scaling":
-            return _scaling_plan(kind, xi, zeta, interpret, precision)
-        return _log_plan(kind, xi, zeta, float(geom.eps), interpret,
-                         precision)
+            return _scaling_plan(kind, xi, zeta, be, precision)
+        return _log_plan(kind, xi, zeta, float(geom.eps), be, precision)
     raise ValueError(f"unknown pallas_ops spec kind {kind!r}")
 
 

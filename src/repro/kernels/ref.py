@@ -24,12 +24,19 @@ def gaussian_feature_map_ref(
     log_const: jax.Array,  # (r,)  per-anchor additive log offset (incl -log r / 2)
     *,
     inv_eps: float,
+    log_space: bool = False,
 ) -> jax.Array:
-    """Xi[i,k] = exp(log_const[k] - 2/eps ||x_i - u_k||^2), shape (n, r)."""
+    """Xi[i,k] = exp(log_const[k] - 2/eps ||x_i - u_k||^2), shape (n, r).
+
+    ``log_space=True`` returns ``log Xi`` (no exp) — the small-eps twin.
+    Besides being the test oracle, this is the STREAMING fallback the plan
+    layer executes when the fused map refuses to lower (the single-d-block
+    constraint on parallel-grid backends; see ``kernels.backend``)."""
     x2 = jnp.sum(x * x, axis=-1)[:, None]
     u2 = jnp.sum(anchors * anchors, axis=-1)[None, :]
     sq = x2 + u2 - 2.0 * (x @ anchors.T)
-    return jnp.exp(log_const[None, :] - 2.0 * inv_eps * sq)
+    log_xi = log_const[None, :] - 2.0 * inv_eps * sq
+    return log_xi if log_space else jnp.exp(log_xi)
 
 
 def feature_contract_ref(xi: jax.Array, u: jax.Array) -> jax.Array:
