@@ -6,7 +6,10 @@
 Emits ``name,us_per_call,derived`` CSV rows:
   tradeoff/*   — Fig. 1/3/5  RF vs Nys vs Sin time-accuracy
   scaling/*    — §3.1        O(r(n+m)) vs O(nm) per-iteration scaling
-  gan_grad/*   — §4          GAN gradient cost vs batch size
+  gan_step/*   — §4          GAN loss+grad step time: OTObjective
+                 (positive features, bf16 training policy) vs dense
+                 Sinkhorn baseline, with loss-parity rows (``--gan``
+                 additionally gates the speedup >= 2x)
   solver/*     — Alg. 1      fused-kernel iteration microbench
   batch/*      — api.py      vmapped BatchedSinkhorn vs per-problem loop
   */pallas*    — kernels.ops fused-plan vs XLA parity + iteration counts
@@ -256,6 +259,10 @@ def main() -> None:
                     help="add the serving axis (bench_serve open-loop "
                          "latency, batched/warm capacity, zero-recompile "
                          "gate)")
+    ap.add_argument("--gan", action="store_true",
+                    help="gate the GAN-step axis: objective-vs-dense "
+                         "speedup >= 2x at the quick shapes (the parity "
+                         "rows are hard-gated via match=False regardless)")
     ap.add_argument("--tune", action="store_true",
                     help="add the autotuner axis (bench_autotune: tuned "
                          "vs static block shapes, ratio >= 1.0 gate; "
@@ -368,13 +375,17 @@ def main() -> None:
               f"engine loop; {serve_recompiles} post-warmup compiles "
               "(target 0)", file=sys.stderr)
 
-    section("gan gradient cost (Sec 4)")
+    section("gan step cost: objective vs dense baseline (Sec 4)")
     from . import bench_gan
     buf = io.StringIO()
     with contextlib.redirect_stdout(buf):
-        bench_gan.main(batch_sizes=(250, 500) if args.quick
-                       else (250, 500, 1000, 2000))
+        gan_speedup, gan_parity = bench_gan.main(
+            batch_sizes=(512, 1024) if args.quick
+            else (512, 1024, 2048))
     emit(buf.getvalue())
+    print(f"# gan objective-vs-dense speedup {gan_speedup:.2f}x "
+          f"(--gan target >= 2x); worst loss parity rel "
+          f"{gan_parity:.3f}", file=sys.stderr)
 
     section("roofline (from dry-run artifacts)")
     try:
@@ -413,6 +424,7 @@ def main() -> None:
             artifact["serve_speedup"] = float(serve_speedup)
         if tuned_ratio is not None:
             artifact["tuned_ratio"] = float(tuned_ratio)
+        artifact["gan_speedup"] = float(gan_speedup)
         with open(args.json, "w") as fh:
             json.dump(artifact, fh, indent=1)
         print(f"# wrote {len(parsed)} rows to {args.json}", file=sys.stderr)
@@ -429,6 +441,9 @@ def main() -> None:
         failures.append(
             f"{serve_recompiles} post-warmup serving-path compiles/"
             "retraces (must be zero)")
+    if args.gan and gan_speedup < 2.0:
+        failures.append(
+            f"GAN objective-vs-dense step speedup {gan_speedup:.2f}x < 2x")
     if tuned_ratio is not None and tuned_ratio < 1.0:
         failures.append(
             f"tuned-vs-static us/iter ratio {tuned_ratio:.2f} < 1.0 — "
@@ -464,6 +479,18 @@ def main() -> None:
                     f"megakernel speedup {fused_speedup:.2f}x regressed "
                     f">25% vs committed baseline {float(base_fused):.2f}x "
                     f"(floor {ffloor:.2f}x, {args.baseline})")
+        base_gan = base.get("gan_speedup")
+        if base_gan is not None:
+            gfloor = 0.75 * float(base_gan)
+            gstatus = "PASS" if gan_speedup >= gfloor else "FAIL"
+            print(f"gan_step/baseline_gate,0,speedup={gan_speedup:.2f};"
+                  f"baseline={float(base_gan):.2f};floor={gfloor:.2f};"
+                  f"ok={gstatus}")
+            if gan_speedup < gfloor:
+                failures.append(
+                    f"GAN step speedup {gan_speedup:.2f}x regressed >25% "
+                    f"vs committed baseline {float(base_gan):.2f}x "
+                    f"(floor {gfloor:.2f}x, {args.baseline})")
         base_serve = base.get("serve_speedup")
         if serve_speedup is not None and base_serve is not None:
             sfloor = 0.75 * float(base_serve)

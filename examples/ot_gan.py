@@ -10,10 +10,12 @@ Reproduces the paper's Eq. (18) objective at container scale:
 * f_gamma — adversarial embedding x -> R^d_latent  (the "cost" tower)
 * phi_theta — Lemma-1 Gaussian positive features with LEARNED anchors
 
-The Sinkhorn divergence is evaluated with the linear-time factored solver,
-and its gradients flow through the envelope-theorem VJP — both of the
-paper's claimed advantages (linear batch cost; no unrolled loop in the
-backward graph).
+The whole loss is ONE ``OTObjective``: the embedded clouds and learnable
+anchors become a ``GaussianPointCloud`` geometry, the divergence runs
+through the shared execution stack (fused megakernel + bf16 under the
+training :class:`ExecutionPolicy`), and gradients flow through the
+envelope-theorem VJP — both of the paper's claimed advantages (linear
+batch cost; no unrolled loop in the backward graph).
 
 Default target: 8-mode Gaussian ring in R^2 (mode coverage printed).
 --pixels switches to a 12x12 synthetic "two-moons pixels" image domain to
@@ -21,16 +23,22 @@ exercise the DCGAN-shaped pipeline (conv stubs replaced by MLPs on CPU).
 
 --eval-kernel prints the Table-1 analogue: learned kernel values between
 data/data, data/noise, noise/noise pairs.
+
+--strict is the CI train-smoke contract: assert the fused bf16 plan was
+selected (plan observability), all losses finite, zero post-warmup
+retraces, and a decreasing divergence trend.
 """
 import argparse
+import math
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rot_log_factored
+from repro.core.objective import ExecutionPolicy, OTObjective
 from repro.core.features import GaussianFeatureMap, gaussian_log_features
+from repro.kernels.ops import observe_plan_selection
 from repro.models.layers import init_linear, linear
 
 LATENT_Z = 16
@@ -74,27 +82,20 @@ def make_data(key, n, pixels=False):
     return centers + 0.05 * jax.random.normal(k2, (n, 2))
 
 
-def gan_losses(params, key, data, fm: GaussianFeatureMap, n_iter=40):
+def embed(f, pts):
+    """h_gamma: the adversarial tower into B(0, R_BALL)."""
+    return mlp_apply(f, pts, final_tanh=True) * R_BALL
+
+
+def gan_losses(params, key, data, obj: OTObjective):
+    """Eq. 18 inner term as ONE objective call: geometry from the embedded
+    clouds + learnable anchors, divergence under the shared policy."""
     g, f, anchors = params["gen"], params["emb"], params["anchors"]
     B = data.shape[0]
     z = jax.random.normal(key, (B, LATENT_Z))
     fake = mlp_apply(g, z)
-    a = jnp.full((B,), 1.0 / B)
-
-    def embed(pts):
-        h = mlp_apply(f, pts, final_tanh=True) * R_BALL   # h_gamma into B(0,R)
-        return h
-
-    def div(p, q_):
-        lx = gaussian_log_features(embed(p), anchors, eps=EPS, q=fm.q)
-        ly = gaussian_log_features(embed(q_), anchors, eps=EPS, q=fm.q)
-        w_xy = rot_log_factored(lx, ly, a, a, EPS, 0.0, n_iter)
-        w_xx = rot_log_factored(lx, lx, a, a, EPS, 0.0, n_iter)
-        w_yy = rot_log_factored(ly, ly, a, a, EPS, 0.0, n_iter)
-        return w_xy - 0.5 * (w_xx + w_yy)
-
-    d = div(fake, data)
-    return d, fake
+    geom = obj.gaussian(embed(f, fake), embed(f, data), anchors, R=R_BALL)
+    return obj.divergence(geom), fake
 
 
 def mode_coverage(fake):
@@ -110,10 +111,16 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--r", type=int, default=128)
+    ap.add_argument("--iters", type=int, default=40,
+                    help="Sinkhorn iterations per solve")
     ap.add_argument("--nc", type=int, default=3,
                     help="adversary steps per generator step (paper's n_c)")
     ap.add_argument("--pixels", action="store_true")
     ap.add_argument("--eval-kernel", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="CI mode: force the fused bf16 plan and assert "
+                    "plan selection, finite losses, zero post-warmup "
+                    "retraces, decreasing divergence")
     args = ap.parse_args()
 
     x_dim = 144 if args.pixels else 2
@@ -126,12 +133,20 @@ def main():
         "anchors": fm.init(ka),
     }
 
+    # ONE objective per run: geometry construction, divergence, envelope
+    # VJP and execution policy (bf16 factors; fused plan auto on compiled
+    # backends, forced interpret-mode in --strict so CI verifies it)
+    policy = ExecutionPolicy.training(
+        use_pallas=True if args.strict else None)
+    obj = OTObjective(eps=EPS, tol=0.0, max_iter=args.iters, policy=policy)
+    print(f"[ot-gan] ot-policy {policy.describe()}")
+
     from functools import partial
 
     @partial(jax.jit, static_argnames=("adv",))
     def train_step(params, key, data, lr_g=3e-3, lr_adv=1e-3, adv=False):
         def loss_fn(p):
-            d, fake = gan_losses(p, key, data, fm)
+            d, fake = gan_losses(p, key, data, obj)
             return d, fake
         (d, fake), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
         sign = {"gen": -1.0, "emb": +1.0, "anchors": +1.0}
@@ -148,31 +163,60 @@ def main():
                 new[name] = jax.tree.map(upd, params[name], grads[name])
         return new, d, fake
 
+    if args.strict:
+        # warm both trace variants under the observability hook: the GAN
+        # loss must run through the fused plan at the policy's precision
+        with observe_plan_selection() as events:
+            kw, kb = jax.random.split(kd)
+            data0 = make_data(kb, args.batch, pixels=args.pixels)
+            train_step(params, kw, data0, adv=True)
+            train_step(params, kw, data0, adv=False)
+        sel = [e for e in events if e["geometry"] == "GaussianPointCloud"]
+        assert sel, f"no fused plan selected for the GAN loss: {events}"
+        assert all(e["precision"] == "bf16" for e in sel), sel
+        print(f"[ot-gan] strict: fused plan active "
+              f"({sel[0]['kind']}/{sel[0]['mode']}, precision=bf16, "
+              f"{len(sel)} solves/trace)")
+        traces0 = train_step._cache_size()
+
     t0 = time.time()
+    divergences = []
     for step in range(args.steps):
         kd, ks, kb = jax.random.split(kd, 3)
         data = make_data(kb, args.batch, pixels=args.pixels)
         adv = bool((step % (args.nc + 1)) != args.nc)  # n_c adversary : 1 gen
         params, d, fake = train_step(params, ks, data, adv=adv)
+        divergences.append(float(d))
         if step % 50 == 0 or step == args.steps - 1:
             msg = f"[ot-gan] step {step:4d} Wbar={float(d):+.4f}"
             if not args.pixels:
                 msg += f" modes={mode_coverage(fake)}/8"
             print(msg + f" ({time.time() - t0:.1f}s)")
 
+    if args.strict:
+        assert all(math.isfinite(d) for d in divergences), "non-finite Wbar"
+        retraces = train_step._cache_size() - traces0
+        assert retraces == 0, f"{retraces} post-warmup retraces"
+        k = max(5, args.steps // 10)
+        head = float(np.mean(divergences[:k]))
+        tail = float(np.mean(divergences[-k:]))
+        assert tail < head, (
+            f"divergence did not decrease: first-{k} mean {head:.4f} "
+            f"-> last-{k} mean {tail:.4f}")
+        print(f"[ot-gan] strict: finite losses, 0 post-warmup retraces, "
+              f"Wbar {head:.4f} -> {tail:.4f} (decreasing)")
+
     if args.eval_kernel:
         # Table-1 analogue: learned kernel geometry
         kd1, kd2 = jax.random.split(kd)
         data = make_data(kd1, 64, pixels=args.pixels)
         noise = jax.random.normal(kd2, (64, x_dim))
+
         def k_mean(p, q_):
             lp = gaussian_log_features(
-                jnp.tanh(mlp_apply(params["emb"], p, final_tanh=True)) * R_BALL
-                if False else mlp_apply(params["emb"], p, final_tanh=True) * R_BALL,
-                params["anchors"], eps=EPS, q=fm.q)
+                embed(params["emb"], p), params["anchors"], eps=EPS, q=fm.q)
             lq = gaussian_log_features(
-                mlp_apply(params["emb"], q_, final_tanh=True) * R_BALL,
-                params["anchors"], eps=EPS, q=fm.q)
+                embed(params["emb"], q_), params["anchors"], eps=EPS, q=fm.q)
             return float(jnp.mean(jnp.exp(lp) @ jnp.exp(lq).T))
         print("learned kernel k_theta(f(x), f(y)) means "
               "(Table 1 analogue):")

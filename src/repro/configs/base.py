@@ -79,6 +79,14 @@ class ArchConfig:
     ot_eps: float = 2.0
     ot_tokens: int = 512                      # tokens subsampled per device
     ot_iters: int = 30
+    # execution policy for EVERY training-time OT solve (prototype loss,
+    # sinkhorn router, GAN objective) — consumed once per run via
+    # ExecutionPolicy.from_config (core.objective)
+    ot_precision: str = "bf16"                # "highest" | "bf16" factors
+    ot_use_pallas: Optional[bool] = None      # None=auto fused plan policy
+    ot_inner_steps: Optional[int] = None      # megakernel cadence (None=auto)
+    ot_check_every: Optional[int] = None      # convergence-check cadence
+    ot_backend: Optional[str] = None          # pin kernels.backend by name
 
     # long-context serving: rolling attention window override (hybrids)
     long_context_window: Optional[int] = None

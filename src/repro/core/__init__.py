@@ -10,6 +10,8 @@ Public API:
   grad        — envelope-theorem custom VJPs (Prop. 3.2), incl. the generic
                 rot_geometry rule that differentiates through any geometry
   divergence  — Sinkhorn divergence (Eq. 2) on any Geometry
+  objective   — training-facing OTObjective + ExecutionPolicy (the ONE
+                way to put an OT loss in a training loop)
   nystrom     — the paper's Nys baseline (NystromLowRank wrapper)
   sharded     — shard_map distributed solver (r-vector psum per iteration)
   routing     — Sinkhorn-balanced MoE routing
@@ -62,10 +64,9 @@ from .grad import (
     rot_factored,
     rot_factored_batched,
     rot_geometry,
-    rot_log_factored,
-    rot_log_factored_batched,
 )
 from .nystrom import nystrom_factors, sinkhorn_nystrom
+from .objective import ExecutionPolicy, OTObjective
 from .routing import sinkhorn_route
 from .sharded import (
     RowShardedFactored,
@@ -104,8 +105,10 @@ __all__ = [
     "GaussianFeatureMap",
     "GaussianPointCloud",
     "Geometry",
+    "ExecutionPolicy",
     "GridSeparable",
     "NystromLowRank",
+    "OTObjective",
     "OTProblem",
     "RowShardedFactored",
     "RowShardedGeometry",
@@ -127,8 +130,6 @@ __all__ = [
     "rot_factored",
     "rot_factored_batched",
     "rot_geometry",
-    "rot_log_factored",
-    "rot_log_factored_batched",
     "sharded_sinkhorn_divergence",
     "sharded_sinkhorn_factored",
     "sharded_sinkhorn_geometry",

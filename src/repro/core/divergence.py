@@ -47,6 +47,10 @@ def sinkhorn_divergence_geometry(
     max_iter: int = 2000,
     mesh=None,
     mesh_axis: str = "data",
+    use_pallas=None,
+    inner_steps=None,
+    check_every=None,
+    precision: str = "highest",
 ) -> jax.Array:
     """Wbar on any log-capable Geometry with per-measure parametrization
     (factored, point-cloud, arccos, grid — families defining ``xx``/``yy``
@@ -58,7 +62,13 @@ def sinkhorn_divergence_geometry(
     shard over ``mesh_axis``, each envelope solve uses the psum'd-LSE
     operators (one r-vector collective per half-iteration), and the same
     ``rot_geometry`` VJP keeps the result differentiable — including
-    w.r.t. replicated leaves like shared anchors."""
+    w.r.t. replicated leaves like shared anchors.
+
+    ``use_pallas``/``inner_steps``/``check_every``/``precision`` are the
+    execution-policy knobs of each forward solve (fused plan, megakernel
+    cadence, bf16 factor storage — see ``sinkhorn_log_geometry``); they do
+    not apply to the ``mesh=`` path, where sharded geometries always run
+    the psum'd XLA operators."""
     if mesh is not None:
         from .sharded import sharded_sinkhorn_divergence
 
@@ -68,9 +78,11 @@ def sinkhorn_divergence_geometry(
     n, m = geom.shape
     a = jnp.full((n,), 1.0 / n) if a is None else a
     b = jnp.full((m,), 1.0 / m) if b is None else b
-    w_xy = rot_geometry(geom, a, b, tol, max_iter)
-    w_xx = rot_geometry(geom.xx(), a, a, tol, max_iter)
-    w_yy = rot_geometry(geom.yy(), b, b, tol, max_iter)
+    kw = dict(use_pallas=use_pallas, inner_steps=inner_steps,
+              check_every=check_every, precision=precision)
+    w_xy = rot_geometry(geom, a, b, tol, max_iter, **kw)
+    w_xx = rot_geometry(geom.xx(), a, a, tol, max_iter, **kw)
+    w_yy = rot_geometry(geom.yy(), b, b, tol, max_iter, **kw)
     return w_xy - 0.5 * (w_xx + w_yy)
 
 

@@ -58,21 +58,46 @@ __all__ = [
 # geometries with zero per-family code.
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def rot_geometry(geom, a, b, tol=1e-6, max_iter=2000):
+def rot_geometry(geom, a, b, tol=1e-6, max_iter=2000, *,
+                 use_pallas=None, inner_steps=None, check_every=None,
+                 precision="highest"):
     """W_hat_{eps,c}(mu, nu) on any log-capable Geometry; differentiable in
     the geometry's arrays (features, supports, anchors, grid axes) and in
-    the weights via the envelope theorem — no backprop through the loop."""
-    res = sinkhorn_log_geometry(geom, a, b, tol=tol, max_iter=max_iter)
+    the weights via the envelope theorem — no backprop through the loop.
+
+    The keyword-only knobs are the execution policy of the FORWARD solve
+    (fused Pallas plan, megakernel cadence, bf16 factor storage — see
+    ``sinkhorn_log_geometry``); the backward rule differentiates the
+    frozen-potential correlation through the geometry's own hoisted
+    operators and is policy-independent.
+    """
+    return _rot_geometry(geom, a, b, tol, max_iter, use_pallas,
+                         inner_steps, check_every, precision)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _rot_geometry(geom, a, b, tol, max_iter, use_pallas, inner_steps,
+                  check_every, precision):
+    res = sinkhorn_log_geometry(
+        geom, a, b, tol=tol, max_iter=max_iter, use_pallas=use_pallas,
+        inner_steps=inner_steps, check_every=check_every,
+        precision=precision,
+    )
     return res.cost
 
 
-def _rot_geom_fwd(geom, a, b, tol, max_iter):
-    res = sinkhorn_log_geometry(geom, a, b, tol=tol, max_iter=max_iter)
+def _rot_geom_fwd(geom, a, b, tol, max_iter, use_pallas, inner_steps,
+                  check_every, precision):
+    res = sinkhorn_log_geometry(
+        geom, a, b, tol=tol, max_iter=max_iter, use_pallas=use_pallas,
+        inner_steps=inner_steps, check_every=check_every,
+        precision=precision,
+    )
     return res.cost, (geom, res.f, res.g)
 
 
-def _rot_geom_bwd(tol, max_iter, residuals, ct):
+def _rot_geom_bwd(tol, max_iter, use_pallas, inner_steps, check_every,
+                  precision, residuals, ct):
     geom, f, g = residuals
     eps = geom.eps
     from .sinkhorn import geometry_reduce
@@ -93,7 +118,7 @@ def _rot_geom_bwd(tol, max_iter, residuals, ct):
     return geom_bar, ct * f, ct * g
 
 
-rot_geometry.defvjp(_rot_geom_fwd, _rot_geom_bwd)
+_rot_geometry.defvjp(_rot_geom_fwd, _rot_geom_bwd)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
@@ -131,6 +156,11 @@ rot_factored.defvjp(_rot_fwd, _rot_bwd)
 @partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
 def rot_log_factored(log_xi, log_zeta, a, b, eps, tol=1e-6, max_iter=2000):
     """Log-domain twin of :func:`rot_factored` (small-eps safe).
+
+    DEPRECATED as a training entry point: build a ``FactoredPositive``
+    through :class:`~repro.core.objective.OTObjective` instead (same
+    envelope rule via ``rot_geometry``, plus the fused/bf16/mesh execution
+    policy). Kept as the hand-derived reference rule for parity tests.
 
     Gradient w.r.t. the *log*-features: dW/dlogXi = dW/dXi * Xi
         = -eps * (u (Zeta^T v)^T) .* Xi
@@ -208,8 +238,11 @@ def rot_gibbs_sqeuclid(x, y, a, b, eps, tol=1e-6, max_iter=2000):
 
         dW/dx_i = sum_j P_ij * d c(x_i, y_j)/dx_i = 2 (a_i x_i - [P y]_i)
 
-    with P = diag(u) K diag(v). Used by the GAN benchmark's Sin baseline
-    so both arms differentiate without unrolling the Sinkhorn loop."""
+    with P = diag(u) K diag(v).
+
+    DEPRECATED as a training entry point: the dense-baseline arm of the
+    GAN benchmark now solves a ``DenseCost`` geometry through
+    ``rot_geometry``. Kept as the hand-derived reference rule."""
     from .geometry import squared_euclidean
     from .sinkhorn import sinkhorn_quadratic
 

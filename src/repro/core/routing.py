@@ -15,13 +15,13 @@ Used by deepseek-v2-236b / deepseek-v3-671b configs via ``router="sinkhorn"``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .geometry import DenseCost
-from .sinkhorn import sinkhorn_geometry
+from .objective import ExecutionPolicy, OTObjective
 
 __all__ = ["SinkhornRouting", "sinkhorn_route"]
 
@@ -38,22 +38,40 @@ def sinkhorn_route(
     top_k: int,
     eps: float = 0.05,
     n_iter: int = 8,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> SinkhornRouting:
     """Balanced top-k assignment from an entropic OT plan.
 
     Fixed small iteration count (n_iter) keeps the op fully static for
     compilation; the plan is stop-gradiented (envelope discipline) and
     combine weights are straight-through so the router still trains.
+
+    ``policy`` shares the training-wide :class:`ExecutionPolicy` with the
+    other OT losses (check cadence, precision, backend pin). ``None``
+    keeps the legacy check-every-iteration f32 behavior. The solve runs
+    through the same ``OTObjective`` layer as every other training
+    surface; with ``tol=0`` the error check is dead weight, so the policy
+    defaults the check cadence to once per solve.
     """
     T, E = logits.shape
     a = jnp.full((T,), 1.0 / T, logits.dtype)
     b = jnp.full((E,), 1.0 / E, logits.dtype)
+    if policy is not None and policy.check_every is None \
+            and policy.inner_steps is None:
+        policy = ExecutionPolicy(
+            backend=policy.backend, precision=policy.precision,
+            use_pallas=policy.use_pallas, check_every=n_iter,
+        )
+    obj = OTObjective(
+        eps=eps, tol=0.0, max_iter=n_iter,
+        policy=policy if policy is not None else ExecutionPolicy(),
+    )
     # the router's Gibbs kernel K = exp(logits/eps) as a DenseCost geometry:
     # c = max(logits) - logits is the exact kernel-first cost (Eq. 7)
     geom = DenseCost(
         jax.lax.stop_gradient(jnp.max(logits) - logits), eps
     )
-    res = sinkhorn_geometry(geom, a, b, tol=0.0, max_iter=n_iter)
+    res = obj.solve(geom, a, b)
     plan = res.u[:, None] * geom.dense_kernel() * res.v[None, :]       # (T,E)
     plan = jax.lax.stop_gradient(plan)
     # top-k experts per token under the BALANCED plan

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs import ArchConfig, ShapeSpec
+from ..core.objective import ExecutionPolicy
 from ..distributed.sharding import MeshContext, use_mesh_context
 from ..models import decode_step, init_params, prefill, train_loss
 from ..models.model import effective_window
@@ -43,6 +44,11 @@ def make_train_step(
     0 = auto (on for the ZeRO-3 giants, off otherwise).
     """
     ctx = MeshContext(mesh, mode="train")
+    # ONE OT execution policy per run: every training-time solve (prototype
+    # loss, sinkhorn router) shares it; logged so runs record what executed
+    ot_policy = ExecutionPolicy.from_config(cfg)
+    if cfg.ot_loss_weight > 0 or cfg.router == "sinkhorn":
+        print(f"[steps] ot-policy {ot_policy.describe()}")
     sched = linear_warmup_cosine(opt.lr, min(200, total_steps // 10 + 1),
                                  total_steps)
     import dataclasses as _dc
@@ -65,7 +71,8 @@ def make_train_step(
     def step(params, opt_state, batch):
         with use_mesh_context(ctx):
             grad_fn = jax.value_and_grad(
-                lambda p, b: train_loss(p, cfg, b), has_aux=True
+                lambda p, b: train_loss(p, cfg, b, policy=ot_policy),
+                has_aux=True,
             )
             if micro_batches > 1:
                 micro = jax.tree.map(

@@ -55,6 +55,10 @@ def main():
     mesh = make_local_mesh(data_axis, model_axis)
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
     opt = AdamWConfig(lr=args.lr)
+    from ..core.objective import ExecutionPolicy
+    print(f"[train] arch={cfg.name} router={cfg.router} "
+          f"ot_loss={cfg.ot_loss_weight} "
+          f"ot-policy {ExecutionPolicy.from_config(cfg).describe()}")
     step_fn, shapes, shards = make_train_step(cfg, mesh, shape, opt,
                                               total_steps=args.steps)
 

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..core.objective import ExecutionPolicy
 from ..distributed.sharding import current_mesh_context, shard
 from .attention import (
     GQACache,
@@ -163,13 +164,22 @@ def _init_block(key, kind: str, cfg: ArchConfig) -> Dict:
     return p
 
 
+def _ot_policy(cfg: ArchConfig) -> ExecutionPolicy:
+    """The run-wide OT execution policy, derived from config. A pure
+    (static, hashable) function of cfg — equal to the record the launch
+    layer constructs once per run and logs."""
+    return ExecutionPolicy.from_config(cfg)
+
+
 def _moe_apply(p, x2: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
     """x2 (B, S, d) normed input -> (out, aux). EP under a mesh, dense otherwise."""
     B, S, d = x2.shape
+    policy = _ot_policy(cfg)
     ctx = current_mesh_context()
     if ctx is None or ctx.tp_axis is None:
         out, aux = moe_dense(
-            p["moe"], x2.reshape(-1, d), top_k=cfg.top_k, router=cfg.router
+            p["moe"], x2.reshape(-1, d), top_k=cfg.top_k, router=cfg.router,
+            policy=policy,
         )
         return out.reshape(B, S, d), aux
 
@@ -187,7 +197,7 @@ def _moe_apply(p, x2: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]
             p_loc, x_loc.reshape(-1, d), top_k=cfg.top_k,
             n_experts=cfg.n_experts, axis=tp, router=cfg.router,
             capacity_factor=cfg.capacity_factor,
-            fsdp_axis=fsdp,
+            fsdp_axis=fsdp, policy=policy,
         )
         if dp:
             aux = jax.lax.pmean(aux, dp)
@@ -324,7 +334,8 @@ def _moe_apply_decode(p, x2, cfg):
     (batch x E x d_ff flops with B <= 128)."""
     B, S, d = x2.shape
     out, aux = moe_dense(
-        p["moe"], x2.reshape(-1, d), top_k=cfg.top_k, router=cfg.router
+        p["moe"], x2.reshape(-1, d), top_k=cfg.top_k, router=cfg.router,
+        policy=_ot_policy(cfg),
     )
     return out.reshape(B, S, d), aux
 
@@ -533,7 +544,14 @@ def _lm_ce(params, cfg: ArchConfig, h: jax.Array, labels: jax.Array
     return _xent(_logits(params, cfg, h), labels)
 
 
-def train_loss(params, cfg: ArchConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
+def train_loss(params, cfg: ArchConfig, batch: Dict,
+               policy: Optional[ExecutionPolicy] = None
+               ) -> Tuple[jax.Array, Dict]:
+    """Full training objective. ``policy`` is the run-wide OT execution
+    policy (constructed once by the launch layer); ``None`` derives the
+    identical record from cfg."""
+    if policy is None:
+        policy = _ot_policy(cfg)
     h, aux = forward(params, cfg, batch)
     loss_ce = _lm_ce(params, cfg, h, batch["labels"])
     metrics = {"ce": loss_ce, "aux": aux}
@@ -551,7 +569,7 @@ def train_loss(params, cfg: ArchConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
     if cfg.ot_loss_weight > 0:
         loss_ot = ot_prototype_loss(
             params["ot"], h, eps=cfg.ot_eps, n_tokens=cfg.ot_tokens,
-            n_iter=cfg.ot_iters,
+            n_iter=cfg.ot_iters, policy=policy,
         )
         metrics["ot"] = loss_ot
         loss = loss + cfg.ot_loss_weight * loss_ot

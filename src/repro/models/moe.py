@@ -27,6 +27,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..core.objective import ExecutionPolicy
 from ..core.routing import sinkhorn_route
 from .layers import trunc_normal
 
@@ -50,12 +51,18 @@ def init_moe(
 def router_probs(
     p, x: jax.Array, *, top_k: int, router: str = "softmax",
     sinkhorn_eps: float = 0.05,
+    policy: Optional[ExecutionPolicy] = None,
 ):
-    """x (T, d) -> (combine (T, E), aux_loss). combine is zero off top-k."""
+    """x (T, d) -> (combine (T, E), aux_loss). combine is zero off top-k.
+
+    ``policy`` is the run-wide OT execution policy (shared with the
+    prototype loss); it shapes only the ``sinkhorn`` router's solve.
+    """
     logits = (x.astype(jnp.float32) @ p["router"])
     T, E = logits.shape
     if router == "sinkhorn":
-        r = sinkhorn_route(logits, top_k=top_k, eps=sinkhorn_eps)
+        r = sinkhorn_route(logits, top_k=top_k, eps=sinkhorn_eps,
+                           policy=policy)
         return r.combine, r.balance_loss
     probs = jax.nn.softmax(logits, axis=-1)
     gates, idx = jax.lax.top_k(probs, top_k)                  # (T, k)
@@ -77,12 +84,14 @@ def _expert_ffn(w_up, w_gate, w_down, x):
 
 def moe_dense(
     p, x: jax.Array, *, top_k: int, router: str = "softmax",
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Exact dense path: every token through every expert, combine-weighted.
 
     x (T, d) -> (T, d). Cost O(T E d f) — smoke/tests/small-E only.
     """
-    combine, aux = router_probs(p, x, top_k=top_k, router=router)
+    combine, aux = router_probs(p, x, top_k=top_k, router=router,
+                                policy=policy)
     h = jnp.einsum("td,edf->tef", x, p["gate"].astype(x.dtype))
     u = jnp.einsum("td,edf->tef", x, p["up"].astype(x.dtype))
     y = jax.nn.silu(h) * u
@@ -101,6 +110,7 @@ def moe_ep_local(
     router: str = "softmax",
     capacity_factor: float = 1.25,
     fsdp_axis: Optional[str] = None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Expert-parallel MoE body. MUST run inside shard_map over ``axis``.
 
@@ -113,7 +123,8 @@ def moe_ep_local(
     T, d = x.shape
     n_ranks = jax.lax.psum(1, axis)     # portable axis size (0.4.x has no lax.axis_size)
     E_loc = n_experts // n_ranks
-    combine, aux = router_probs(p_local, x, top_k=top_k, router=router)
+    combine, aux = router_probs(p_local, x, top_k=top_k, router=router,
+                                policy=policy)
     aux = jax.lax.pmean(aux, axis)
 
     # ---- flatten (token, k) assignments ----

@@ -13,18 +13,19 @@ Everything differentiable pieces together exactly as in the paper:
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core.divergence import sinkhorn_divergence_geometry
 from ..core.features import gaussian_log_features, gaussian_q
-from ..core.geometry import FactoredPositive
+from ..core.objective import ExecutionPolicy, OTObjective
 from ..distributed.sharding import shard
 from .layers import trunc_normal
 
-__all__ = ["init_ot_loss", "ot_prototype_loss", "OT_RADIUS"]
+__all__ = ["init_ot_loss", "ot_prototype_loss", "subsample_tokens",
+           "OT_RADIUS"]
 
 OT_RADIUS = 2.0     # f_gamma output is tanh-bounded into B(0, OT_RADIUS)
 
@@ -44,6 +45,22 @@ def init_ot_loss(key, d_model: int, *, ot_dim: int, n_protos: int,
     }
 
 
+def subsample_tokens(hidden: jax.Array, n_tokens: int) -> jax.Array:
+    """Exactly ``min(n_tokens, B*S)`` tokens from a (B, S, d) batch.
+
+    Evenly-spaced static gather over the flattened (batch, seq) grid — the
+    token budget is honored EXACTLY. (The old stride arithmetic
+    ``S // (n_tokens // B)`` overshot for small ``S`` and collapsed to the
+    full sequence whenever ``n_tokens < B``.)
+    """
+    B, S, d = hidden.shape
+    total = B * S
+    n = min(int(n_tokens), total)
+    idx = jnp.asarray(
+        np.round(np.linspace(0, total - 1, n)).astype(np.int32))
+    return hidden.reshape(total, d)[idx]
+
+
 def ot_prototype_loss(
     p_ot: Dict,
     hidden: jax.Array,          # (B, S, d) final hidden states
@@ -51,11 +68,21 @@ def ot_prototype_loss(
     eps: float,
     n_tokens: int,
     n_iter: int,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> jax.Array:
-    """Sinkhorn divergence between token states and learned prototypes."""
-    B, S, d = hidden.shape
-    stride = max(1, S // max(1, n_tokens // max(B, 1)))
-    sample = hidden[:, ::stride, :].reshape(-1, d).astype(jnp.float32)
+    """Sinkhorn divergence between token states and learned prototypes.
+
+    The solve runs through :class:`OTObjective` under ``policy`` — by
+    default the training policy (bf16 factor storage, fused megakernel
+    wherever the backend compiles Pallas). Pass the run-wide policy (e.g.
+    ``ExecutionPolicy.from_config(cfg)``) to share cadence/backend/mesh
+    settings with every other OT surface.
+    """
+    obj = OTObjective(
+        eps=eps, tol=0.0, max_iter=n_iter,
+        policy=policy if policy is not None else ExecutionPolicy.training(),
+    )
+    sample = subsample_tokens(hidden, n_tokens).astype(jnp.float32)
     sample = shard(sample, "batch", None)
     z = OT_RADIUS * jnp.tanh(sample @ p_ot["proj"])          # f_gamma
     protos = OT_RADIUS * jnp.tanh(p_ot["protos"])
@@ -73,10 +100,6 @@ def ot_prototype_loss(
         [lxi, jnp.broadcast_to(kappa_col, (lxi.shape[0], 1))], axis=1)
     lzeta = jnp.concatenate(
         [lzeta, jnp.broadcast_to(kappa_col, (lzeta.shape[0], 1))], axis=1)
-    n, m = lxi.shape[0], lzeta.shape[0]
-    a = jnp.full((n,), 1.0 / n, jnp.float32)
-    b = jnp.full((m,), 1.0 / m, jnp.float32)
-    geom = FactoredPositive(log_xi=lxi, log_zeta=lzeta, eps=eps)
-    return sinkhorn_divergence_geometry(
-        geom, a, b, tol=0.0, max_iter=n_iter
-    )
+    geom = obj.factored(lxi, lzeta)
+    a, b = obj.uniform_weights(geom)
+    return obj.divergence(geom, a, b)

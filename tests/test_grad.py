@@ -10,9 +10,10 @@ from repro.core import (
     gaussian_log_features,
     rot_factored,
     rot_factored_batched,
-    rot_log_factored,
-    rot_log_factored_batched,
 )
+# legacy hand-derived rules: kept in grad.py as the reference implementation
+# the OTObjective parity tests check against (no longer a public re-export)
+from repro.core.grad import rot_log_factored, rot_log_factored_batched
 from repro.core.features import GaussianFeatureMap
 
 
