@@ -18,6 +18,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   serve/*      — serving     OTService open-loop latency, warm-start hit
                  rates, batched/warm capacity vs per-request engine loop,
                  zero-recompile gate (``--serve``)
+  stream/*     — streaming   incremental warm re-solve vs full cold
+                 rebuild after a <= 5% support mutation (``--stream``;
+                 speedup >= 5x and zero post-warmup retraces gated)
   */tuned*     — autotuner   measured block shapes vs the static pick_block
                  prior (``--tune``); ratio >= 1.0 gated, warm-cache runs
                  gated to zero timing trials (``--tune-expect-cached``)
@@ -101,7 +104,7 @@ def bench_fused_loop(inner_steps: int = 8, quick: bool = False):
 
         variants = []
         for prec in ("highest", "bf16"):
-            plan = geometry_ops(geom, interpret=None, mode="scaling",
+            plan = geometry_ops(geom, mode="scaling",
                                 precision=prec)
             block = plan.make_block_step(a, a, inner_steps=inner_steps)
             if block is None:        # over the compiled-VMEM budget
@@ -117,7 +120,7 @@ def bench_fused_loop(inner_steps: int = 8, quick: bool = False):
             suffix = "" if prec == "highest" else "_bf16"
             variants.append((f"fused_block{suffix}", timed(run_block)))
 
-        plan = geometry_ops(geom, interpret=None, mode="scaling")
+        plan = geometry_ops(geom, mode="scaling")
         pstep, pinit = plan.make_step(a, a)
 
         @jax.jit
@@ -259,6 +262,10 @@ def main() -> None:
                     help="add the serving axis (bench_serve open-loop "
                          "latency, batched/warm capacity, zero-recompile "
                          "gate)")
+    ap.add_argument("--stream", action="store_true",
+                    help="add the streaming axis (bench_stream: paged "
+                         "store + warm re-solve vs full cold rebuild; "
+                         "gates speedup >= 5x and zero retraces)")
     ap.add_argument("--gan", action="store_true",
                     help="gate the GAN-step axis: objective-vs-dense "
                          "speedup >= 2x at the quick shapes (the parity "
@@ -375,6 +382,20 @@ def main() -> None:
               f"engine loop; {serve_recompiles} post-warmup compiles "
               "(target 0)", file=sys.stderr)
 
+    stream_speedup = stream_retraces = None
+    if args.stream:
+        section("streaming incremental vs cold rebuild (bench_stream)")
+        from . import bench_stream
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            stream_speedup, stream_retraces = bench_stream.main(
+                quick=args.quick)
+        emit(buf.getvalue())
+        print(f"# stream incremental-vs-cold worst gated speedup "
+              f"{stream_speedup:.2f}x (target >= 5x); "
+              f"{stream_retraces} post-warmup retraces (target 0)",
+              file=sys.stderr)
+
     section("gan step cost: objective vs dense baseline (Sec 4)")
     from . import bench_gan
     buf = io.StringIO()
@@ -422,6 +443,8 @@ def main() -> None:
             artifact["fused_speedup"] = float(fused_speedup)
         if serve_speedup is not None:
             artifact["serve_speedup"] = float(serve_speedup)
+        if stream_speedup is not None:
+            artifact["stream_speedup"] = float(stream_speedup)
         if tuned_ratio is not None:
             artifact["tuned_ratio"] = float(tuned_ratio)
         artifact["gan_speedup"] = float(gan_speedup)
@@ -441,6 +464,14 @@ def main() -> None:
         failures.append(
             f"{serve_recompiles} post-warmup serving-path compiles/"
             "retraces (must be zero)")
+    if stream_speedup is not None and stream_speedup < 5.0:
+        failures.append(
+            f"stream incremental-vs-cold speedup {stream_speedup:.2f}x "
+            "< 5x on a gated shape")
+    if stream_retraces:
+        failures.append(
+            f"{stream_retraces} post-warmup streaming-runner retraces "
+            "(must be zero)")
     if args.gan and gan_speedup < 2.0:
         failures.append(
             f"GAN objective-vs-dense step speedup {gan_speedup:.2f}x < 2x")
@@ -491,6 +522,18 @@ def main() -> None:
                     f"GAN step speedup {gan_speedup:.2f}x regressed >25% "
                     f"vs committed baseline {float(base_gan):.2f}x "
                     f"(floor {gfloor:.2f}x, {args.baseline})")
+        base_stream = base.get("stream_speedup")
+        if stream_speedup is not None and base_stream is not None:
+            tfloor = 0.75 * float(base_stream)
+            tstatus = "PASS" if stream_speedup >= tfloor else "FAIL"
+            print(f"stream/baseline_gate,0,speedup={stream_speedup:.2f};"
+                  f"baseline={float(base_stream):.2f};floor={tfloor:.2f};"
+                  f"ok={tstatus}")
+            if stream_speedup < tfloor:
+                failures.append(
+                    f"stream speedup {stream_speedup:.2f}x regressed >25% "
+                    f"vs committed baseline {float(base_stream):.2f}x "
+                    f"(floor {tfloor:.2f}x, {args.baseline})")
         base_serve = base.get("serve_speedup")
         if serve_speedup is not None and base_serve is not None:
             sfloor = 0.75 * float(base_serve)

@@ -87,6 +87,11 @@ class ArchConfig:
     ot_inner_steps: Optional[int] = None      # megakernel cadence (None=auto)
     ot_check_every: Optional[int] = None      # convergence-check cadence
     ot_backend: Optional[str] = None          # pin kernels.backend by name
+    # shard training-time OT solves over the step's mesh (psum'd-LSE
+    # operators). None = auto: shard exactly when the mesh spans more
+    # than one device; single-device meshes keep the local (fused-plan
+    # capable) solvers — a mesh-wrapped policy would disable them.
+    ot_shard: Optional[bool] = None
 
     # long-context serving: rolling attention window override (hybrids)
     long_context_window: Optional[int] = None

@@ -5,6 +5,11 @@ Public API:
                 GaussianPointCloud / ArcCosinePointCloud / NystromLowRank /
                 GridSeparable (one class per cost family)
   api         — unified front-end: solve()/solve_many()/BatchedSinkhorn/EpsSchedule
+  spec        — SolveSpec: the one record naming a solve (geometry +
+                target + ExecutionPolicy), accepted by solve/solve_many
+                and the serving layer's submit()
+  paged       — PagedFactored: fixed-capacity paged factor buffers for
+                streaming supports (repro.streaming)
   features    — Lemma-1 Gaussian / Lemma-3 arc-cosine / learnable feature maps
   sinkhorn    — operator-generic solvers (Alg. 1) over any Geometry
   grad        — envelope-theorem custom VJPs (Prop. 3.2), incl. the generic
@@ -67,6 +72,8 @@ from .grad import (
 )
 from .nystrom import nystrom_factors, sinkhorn_nystrom
 from .objective import ExecutionPolicy, OTObjective
+from .paged import PagedFactored
+from .spec import SolveSpec
 from .routing import sinkhorn_route
 from .sharded import (
     RowShardedFactored,
@@ -110,6 +117,8 @@ __all__ = [
     "NystromLowRank",
     "OTObjective",
     "OTProblem",
+    "PagedFactored",
+    "SolveSpec",
     "RowShardedFactored",
     "RowShardedGeometry",
     "SinkhornResult",

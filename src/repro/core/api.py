@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from collections import OrderedDict
 from functools import partial
 from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
@@ -125,9 +126,8 @@ class OTProblem:
     The geometry owns the kernel representation; ``a``/``b`` are the
     measure weights (zeros allowed — zero-weight atoms are masked exactly
     by every solver, which is what makes bucket padding exact). The
-    ``from_*`` constructors below are kept as the stable public surface;
-    the kernel-view accessors (``features_at`` etc.) are deprecated shims
-    over the geometry and will go once external callers migrate.
+    ``from_*`` constructors below are the stable public surface; kernel
+    views (features, costs) live on the geometry itself.
     """
 
     geometry: Geometry
@@ -198,29 +198,9 @@ class OTProblem:
             GridSeparable.build(axes_x, axes_y, eps=eps), a, b
         )
 
-    # -- deprecated kernel-view shims (pre-Geometry API) --------------------
-
-    @property
-    def has_geometry(self) -> bool:
-        """Deprecated: use ``isinstance(problem.geometry, ...)``."""
-        return isinstance(self.geometry,
-                          (GaussianPointCloud, ArcCosinePointCloud))
-
     @property
     def anneal_capable(self) -> bool:
         return self.geometry.anneal_capable
-
-    def log_features_at(self, eps: float) -> Tuple[jax.Array, jax.Array]:
-        """Deprecated: ``geometry.rebuild_at(eps).log_features()``."""
-        return self.geometry.rebuild_at(eps).log_features()
-
-    def features_at(self, eps: float) -> Tuple[jax.Array, jax.Array]:
-        """Deprecated: ``geometry.rebuild_at(eps).features()``."""
-        return self.geometry.rebuild_at(eps).features()
-
-    def cost_matrix(self) -> jax.Array:
-        """Deprecated: ``geometry.cost_matrix()``."""
-        return self.geometry.cost_matrix()
 
 
 # ---------------------------------------------------------------------------
@@ -664,6 +644,19 @@ def solve(
 ) -> SinkhornResult:
     """Solve one entropic OT problem with any solver variant in the repo.
 
+    The preferred calling convention is ONE argument — a
+    :class:`~repro.core.spec.SolveSpec` — which carries the geometry,
+    weights, target (tol/max_iter/schedule) and an
+    :class:`~repro.core.objective.ExecutionPolicy`::
+
+        solve(SolveSpec(geometry=geom, tol=1e-6,
+                        policy=ExecutionPolicy(precision="bf16")))
+
+    The keyword form below remains as a back-compat wrapper; passing the
+    legacy execution kwargs (``use_pallas=``/``inner_steps=``/
+    ``check_every=``/``precision=``) with a bare problem emits a
+    ``DeprecationWarning``.
+
     ``method``: "auto" | "factored" | "log_factored" | "accelerated" |
     "quadratic" | "log_quadratic" | "arccos" | "nystrom" | "sharded" |
     "sharded_log" (both need ``mesh``). "auto" dispatches on the
@@ -709,6 +702,32 @@ def solve(
     ``"highest"`` for small-eps log solves where log-features span
     hundreds of nats.
     """
+    from .spec import SolveSpec  # lazy: spec imports this module
+
+    if isinstance(problem, SolveSpec):
+        spec = problem
+        kw = spec.solver_kwargs()
+        kw.pop("method")
+        kw.pop("schedule")
+        with spec.policy.scope():
+            prob = spec.problem()
+            meth = spec.method
+            if meth == "auto":
+                meth = _auto_method(prob, spec.policy.mesh)
+            if spec.schedule is not None:
+                return solve_annealed(
+                    prob, method=meth, schedule=spec.schedule, **kw
+                ).result
+            return _solve_stage(
+                prob, meth, prob.eps, f_init=None, g_init=None, **kw)
+    if (use_pallas is not None or inner_steps is not None
+            or check_every is not None or precision != "highest"):
+        warnings.warn(
+            "passing execution kwargs (use_pallas=/inner_steps=/"
+            "check_every=/precision=) to solve() directly is deprecated: "
+            "build a SolveSpec with an ExecutionPolicy "
+            "(repro.core.spec) and call solve(spec)",
+            DeprecationWarning, stacklevel=2)
     if method == "auto":
         method = _auto_method(problem, mesh)
     if schedule is not None:
@@ -1242,9 +1261,75 @@ def solve_many(
     sharded twin of ``method``: scaling or psum'd-LSE log domain). Sharded
     problems are dispatched sequentially — each solve already occupies the
     whole mesh, so there is no idle hardware for a vmapped batch to fill.
+
+    A sequence of :class:`~repro.core.spec.SolveSpec` is also accepted —
+    the preferred form. The specs must share one
+    method/tol/max_iter/momentum/policy (engines are per-configuration;
+    heterogeneous configs go through ``solve(spec)`` one at a time); the
+    solver kwargs above are then ignored except ``f_inits``/``g_inits``.
     """
     if not problems:
         return []
+    from .spec import SolveSpec  # lazy: spec imports this module
+
+    if isinstance(problems[0], SolveSpec):
+        specs: List[SolveSpec] = list(problems)
+        head = specs[0]
+        shared = (head.method, head.tol, head.max_iter, head.momentum,
+                  head.policy)
+        for s in specs:
+            if not isinstance(s, SolveSpec):
+                raise TypeError(
+                    "solve_many: mixed SolveSpec and OTProblem entries")
+            if (s.method, s.tol, s.max_iter, s.momentum,
+                    s.policy) != shared:
+                raise ValueError(
+                    "solve_many(specs) needs one shared method/tol/"
+                    "max_iter/momentum/policy across specs (engines are "
+                    "per-configuration); call solve(spec) per problem "
+                    "for heterogeneous configs")
+            if s.schedule is not None or s.rank is not None \
+                    or s.key is not None:
+                raise ValueError(
+                    "solve_many(specs) does not support schedule/rank/"
+                    "key; call solve(spec) per problem")
+        pol = head.policy
+        if pol.mesh is not None:
+            if f_inits is not None or g_inits is not None:
+                raise ValueError(
+                    "sharded solve_many dispatches sequentially; "
+                    "per-problem warm starts are a batched-engine "
+                    "feature — drop the mesh or the inits")
+            twin = _SHARDED_TWIN.get(head.method)
+            if twin is None:
+                raise ValueError(
+                    f"solve_many(mesh=...) supports methods "
+                    f"{sorted(_SHARDED_TWIN)}, got {head.method!r}")
+            return [solve(s.replace(method=twin)) for s in specs]
+        eps_set = {float(s.eps) for s in specs}
+        if len(eps_set) != 1:
+            raise ValueError(
+                f"mixed spec eps {sorted(eps_set)}; batched engines "
+                "are per-eps — group specs by eps")
+        eng_method = ("log_factored" if head.method == "auto"
+                      else head.method)
+        with pol.scope():
+            engine = get_engine(
+                eps=eps_set.pop(), method=eng_method, tol=head.tol,
+                max_iter=head.max_iter, momentum=head.momentum,
+                use_pallas=pol.use_pallas, inner_steps=pol.inner_steps,
+                check_every=pol.check_every, precision=pol.precision,
+            )
+            return engine.solve_many([s.problem() for s in specs],
+                                     f_inits=f_inits, g_inits=g_inits)
+    if (use_pallas is not None or inner_steps is not None
+            or check_every is not None or precision != "highest"):
+        warnings.warn(
+            "passing execution kwargs (use_pallas=/inner_steps=/"
+            "check_every=/precision=) to solve_many() directly is "
+            "deprecated: build SolveSpecs with a shared ExecutionPolicy "
+            "(repro.core.spec) and call solve_many(specs)",
+            DeprecationWarning, stacklevel=2)
     eps_set = {float(p.eps) for p in problems}
     if eps is None:
         if len(eps_set) != 1:

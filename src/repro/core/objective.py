@@ -216,3 +216,19 @@ class OTObjective:
         n, m = geom.shape
         return (jnp.full((n,), 1.0 / n, jnp.float32),
                 jnp.full((m,), 1.0 / m, jnp.float32))
+
+    def spec(self, geom: Geometry,
+             a: Optional[jax.Array] = None,
+             b: Optional[jax.Array] = None,
+             *, method: str = "auto"):
+        """The :class:`~repro.core.spec.SolveSpec` naming this
+        objective's solve of ``geom`` — the bridge that makes a training
+        loss's configuration and an offline ``api.solve`` of the same
+        problem literally one record."""
+        from .spec import SolveSpec  # lazy: spec imports this module
+        if geom.eps != self.eps:
+            raise ValueError(
+                f"geometry eps={geom.eps} != objective eps={self.eps}")
+        return SolveSpec(geometry=geom, a=a, b=b, method=method,
+                         tol=self.tol, max_iter=self.max_iter,
+                         policy=self.policy)

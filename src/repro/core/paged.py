@@ -1,0 +1,117 @@
+"""Paged factored geometry: the streaming layer's view of a mutable support.
+
+:class:`PagedFactored` is a :class:`~repro.core.geometry.FactoredPositive`
+twin whose factor buffers are fixed-capacity PAGED stores
+(``repro.streaming.PagedFeatureStore``): the arrays are always
+``(capacity, r)``, mutation writes pages and flips weights — shapes never
+change, so one jitted solver serves every update. Dead slots carry
+arbitrary (but strictly positive, in linear space) stale feature values;
+correctness comes from the zero-weight masking every solver already does,
+NOT from the page table. The per-page live counts (``page_live_x`` /
+``page_live_y``) ride as traced int32 vectors so occupancy changes never
+retrace; they feed the ``pallas_ops`` spec that lets the paged kernels
+(``kernels.paged``) skip all-dead pages.
+
+The XLA operators are inherited unchanged from ``_FeatureKernelOps`` —
+masked, exact, page-agnostic — which is also the fallback on backends
+without the paged fast path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .geometry import (
+    Geometry,
+    _FeatureKernelOps,
+    _masked_log,
+    _register,
+)
+
+__all__ = ["PagedFactored"]
+
+
+@_register
+@dataclasses.dataclass(frozen=True, eq=False)
+class PagedFactored(_FeatureKernelOps, Geometry):
+    """K = Xi Zeta^T on fixed-capacity paged factor buffers.
+
+    ``xi``/``zeta`` (or ``log_xi``/``log_zeta``) are full-capacity
+    ``(C, r)`` buffers; ``page_live_*`` are ``(C // page_size,)`` int32
+    live-slot counts per page. The kernel is pinned to the eps the
+    features were drawn at (like :class:`FactoredPositive`): streaming
+    updates mutate supports, not the regularization.
+    """
+
+    xi: Optional[jax.Array] = None
+    zeta: Optional[jax.Array] = None
+    log_xi: Optional[jax.Array] = None
+    log_zeta: Optional[jax.Array] = None
+    page_live_x: jax.Array = None
+    page_live_y: jax.Array = None
+    page_size: int = dataclasses.field(default=64,
+                                       metadata=dict(static=True))
+    eps: float = dataclasses.field(kw_only=True,
+                                   metadata=dict(static=True))
+
+    anneal_capable = False
+    supports_log = True
+    supports_features = True
+
+    def __post_init__(self):
+        have_lin = self.xi is not None and self.zeta is not None
+        have_log = self.log_xi is not None and self.log_zeta is not None
+        if have_lin == have_log:
+            raise ValueError(
+                "PagedFactored needs exactly one factor pair: "
+                "(xi, zeta) or (log_xi, log_zeta)"
+            )
+        if self.page_live_x is None or self.page_live_y is None:
+            raise ValueError(
+                "PagedFactored needs page_live_x and page_live_y "
+                "(per-page int32 live-slot counts)"
+            )
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        if self.xi is not None:
+            return self.xi.shape[0], self.zeta.shape[0]
+        return self.log_xi.shape[0], self.log_zeta.shape[0]
+
+    @property
+    def rank(self) -> int:
+        return (self.xi if self.xi is not None else self.log_xi).shape[1]
+
+    def features(self):
+        if self.xi is not None:
+            return self.xi, self.zeta
+        return jnp.exp(self.log_xi), jnp.exp(self.log_zeta)
+
+    def log_features(self):
+        if self.log_xi is not None:
+            return self.log_xi, self.log_zeta
+        return _masked_log(self.xi), _masked_log(self.zeta)
+
+    def cost_matrix(self):
+        return -self.eps * self.log_dense_kernel()
+
+    def pallas_ops(self):
+        # "paged" spec: scaling mode routes through the page-skipping
+        # kernels (kernels.paged); log mode runs the standard log plan on
+        # the flat factors (dead slots are -inf-pinned potentials — inert
+        # in every LSE, no page predicate needed for correctness).
+        spec = {
+            "kind": "paged",
+            "page_live_x": self.page_live_x,
+            "page_live_y": self.page_live_y,
+            "page_size": self.page_size,
+            "eps": self.eps,
+        }
+        if self.xi is not None:
+            spec.update(xi=self.xi, zeta=self.zeta)
+        else:
+            spec.update(log_xi=self.log_xi, log_zeta=self.log_zeta)
+        return spec

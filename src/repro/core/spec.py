@@ -1,0 +1,116 @@
+"""SolveSpec: the one record that names a solve.
+
+``solve()`` grew a kwarg pile (method, schedule, tol, max_iter, momentum,
+mesh, mesh_axis, rank, key, use_pallas, inner_steps, check_every,
+precision), :class:`~repro.core.objective.OTObjective` carried its own
+copy of the same knobs for training, and the serving layer configured a
+third copy on :class:`~repro.serving.service.OTService`. A
+:class:`SolveSpec` collapses all three surfaces into one frozen record:
+
+    WHAT   — ``geometry`` (+ optional ``a``/``b`` weights)
+    TARGET — ``tol`` / ``max_iter`` / ``momentum`` / optional eps
+             ``schedule``
+    HOW    — ``method`` + an :class:`ExecutionPolicy` (backend pin,
+             precision, fused-plan switch, megakernel cadence, mesh)
+
+and the three front doors all accept it:
+
+    solve(spec)                  # repro.core.api
+    solve_many([spec, ...])      # shared-cell batched solves
+    service.submit(spec)         # repro.serving (eps/method validated
+                                 # against the service's engine)
+
+The keyword forms remain as thin back-compat wrappers; passing the legacy
+execution kwargs (``use_pallas=``/``inner_steps=``/``check_every=``/
+``precision=``) alongside a bare problem emits a ``DeprecationWarning``
+pointing here. Training code bridges via
+:meth:`OTObjective.spec <repro.core.objective.OTObjective>` so a loss's
+configuration and an offline solve of the same problem are literally the
+same record.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from .api import EpsSchedule, OTProblem, METHODS
+from .geometry import Geometry
+from .objective import ExecutionPolicy
+
+__all__ = ["SolveSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveSpec:
+    """One solve, fully specified. See module docstring.
+
+    ``a``/``b`` default to uniform weights over the geometry's supports.
+    ``policy.mesh``/``policy.mesh_axis`` are the ONLY mesh knobs — the
+    spec has no separate mesh argument, so a step function builds its
+    policy once (``ExecutionPolicy.from_config(cfg, mesh=mesh)``) and
+    every surface sees the same sharding decision. ``rank``/``key`` feed
+    the cost-family-converting methods ("arccos", "nystrom").
+    """
+
+    geometry: Geometry
+    a: Optional[jax.Array] = None
+    b: Optional[jax.Array] = None
+    method: str = "auto"
+    schedule: Optional[EpsSchedule] = None
+    tol: float = 1e-6
+    max_iter: int = 2000
+    momentum: float = 1.0
+    policy: ExecutionPolicy = ExecutionPolicy()
+    rank: Optional[int] = None
+    key: Optional[jax.Array] = None
+
+    def __post_init__(self):
+        if not isinstance(self.geometry, Geometry):
+            raise TypeError(
+                "SolveSpec.geometry must be a Geometry (wrap raw factors "
+                "via repro.core.geometry or OTProblem.from_*)")
+        if self.method not in METHODS:
+            raise ValueError(
+                f"method must be one of {METHODS}, got {self.method!r}")
+        if not isinstance(self.policy, ExecutionPolicy):
+            raise TypeError("SolveSpec.policy must be an ExecutionPolicy")
+
+    # -- bridges -------------------------------------------------------
+
+    @property
+    def eps(self) -> float:
+        return self.geometry.eps
+
+    def problem(self) -> OTProblem:
+        """The (geometry, a, b) record the engine layers consume."""
+        return OTProblem.from_geometry(self.geometry, self.a, self.b)
+
+    @classmethod
+    def from_problem(cls, problem: OTProblem, **overrides) -> "SolveSpec":
+        """Lift a legacy :class:`OTProblem` (plus optional field
+        overrides) into a spec."""
+        return cls(geometry=problem.geometry, a=problem.a, b=problem.b,
+                   **overrides)
+
+    def replace(self, **changes) -> "SolveSpec":
+        return dataclasses.replace(self, **changes)
+
+    def solver_kwargs(self) -> dict:
+        """Every keyword ``api.solve`` takes, in one dict — the spec's
+        expansion the back-compat wrapper path routes through."""
+        return dict(
+            method=self.method, schedule=self.schedule, tol=self.tol,
+            max_iter=self.max_iter, momentum=self.momentum,
+            mesh=self.policy.mesh, mesh_axis=self.policy.mesh_axis,
+            rank=self.rank, key=self.key,
+            **self.policy.solver_kwargs(),
+        )
+
+    def describe(self) -> str:
+        n, m = self.geometry.shape
+        sched = "-" if self.schedule is None else "anneal"
+        return (f"{type(self.geometry).__name__}({n}x{m}) eps={self.eps} "
+                f"method={self.method} tol={self.tol} sched={sched} | "
+                f"{self.policy.describe()}")

@@ -8,6 +8,8 @@
   fused_loop   — persistent multi-iteration megakernel (scaling + log):
                  ``inner_steps`` full iterations per launch, factors
                  VMEM-resident, carries on-chip, error at block boundaries
+  paged        — page-predicated matvecs over fixed-capacity streaming
+                 feature stores (all-dead pages skipped via ``pl.when``)
   tiling       — shared lane-padding + block-size selection policy
 
 Each kernel ships with a pure-jnp oracle in ``ref.py``; tests sweep shapes
@@ -32,12 +34,17 @@ from .fused_loop import (
     log_sinkhorn_block_pallas,
     sinkhorn_block_pallas,
 )
+from .paged import (
+    paged_feature_contract_pallas,
+    paged_feature_matvec_pallas,
+    paged_halfstep_pallas,
+    paged_supported,
+)
 from .ops import (
     PRECISIONS,
     GeometryOps,
     batched_sinkhorn_halfstep,
     check_precision,
-    default_interpret,
     feature_contract,
     feature_matvec,
     fused_batched_sinkhorn_iteration,
@@ -66,9 +73,12 @@ __all__ = [
     "block_plan_fits",
     "block_vmem_bytes",
     "check_precision",
-    "default_interpret",
     "log_sinkhorn_block_pallas",
     "sinkhorn_block_pallas",
+    "paged_feature_contract_pallas",
+    "paged_feature_matvec_pallas",
+    "paged_halfstep_pallas",
+    "paged_supported",
     "feature_contract",
     "feature_matvec",
     "fused_batched_sinkhorn_iteration",

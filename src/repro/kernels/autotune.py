@@ -373,8 +373,7 @@ def _tune(kernel: str, extents: Dict[str, int], dtype,
 
 def resolve(kernel: str, extents: Dict[str, int], dtype=jnp.float32,
             backend: Optional[Union[Backend, str]] = None,
-            *, interpret: Optional[bool] = None,
-            deterministic: Optional[bool] = None) -> Dict[str, int]:
+            *, deterministic: Optional[bool] = None) -> Dict[str, int]:
     """Block plan for one kernel call: the measured winner when tuning is
     enabled (in-process cache, then the persisted JSON cache, then a fresh
     timing pass), else exactly the static ``pick_block`` prior.
@@ -385,7 +384,7 @@ def resolve(kernel: str, extents: Dict[str, int], dtype=jnp.float32,
     from the keyed extents — never on the (possibly traced) runtime
     arrays.
     """
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     det = (not tuning_enabled()) if deterministic is None else deterministic
     if det:
         _STATS["static"] += 1
@@ -414,7 +413,7 @@ def resolve_blocks(kernel: str, extents: Dict[str, int],
     if all(v is not None for v in given.values()):
         return {k: int(v) for k, v in given.items()}
     be = backend if backend is not None \
-        else resolve_backend(interpret=interpret)
+        else resolve_backend("interpret" if interpret else None)
     plan = resolve(kernel, extents, dtype, be)
     return {k: int(v) if v is not None else plan[k]
             for k, v in given.items()}

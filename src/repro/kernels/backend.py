@@ -21,16 +21,16 @@ call site from the runtime platform with env/API overrides:
 The record carries everything the kernels/plan layer key decisions on:
 lane/sublane quanta, the megakernel admission budget, whether grid
 reductions need split-k, and the interpret flag. ``resolve_backend()`` is
-the single owner of the policy; ``kernels.ops.default_interpret`` survives
-as a shim over it.
+the single owner of the policy.
 
 Overrides, highest precedence first:
 
-  1. an explicit ``backend=`` record or name at the call site,
-  2. an explicit ``interpret=`` bool at the call site (compat surface),
-  3. :func:`set_backend` / :func:`backend_scope` (process-level API),
-  4. the ``REPRO_BACKEND`` env var (one of the three names above),
-  5. ``jax.default_backend()``.
+  1. an explicit ``backend=`` record or name at the call site
+     (``backend="interpret"`` is the test configuration — the legacy
+     ``interpret=`` bool kwarg is gone),
+  2. :func:`set_backend` / :func:`backend_scope` (process-level API),
+  3. the ``REPRO_BACKEND`` env var (one of the three names above),
+  4. ``jax.default_backend()``.
 """
 from __future__ import annotations
 
@@ -162,27 +162,20 @@ def _platform_default(platform: str) -> Backend:
 
 def resolve_backend(
     backend: Optional[Union[Backend, str]] = None,
-    *,
-    interpret: Optional[bool] = None,
 ) -> Backend:
     """Resolve the execution backend for a kernel/plan call site.
 
-    Explicit ``backend`` (record or name) wins; an explicit ``interpret``
-    bool is the compat surface (``True`` forces the interpreter — the test
-    configuration; ``False`` asks for the platform's compiled policy);
-    otherwise the ambient policy applies (:func:`set_backend` override,
-    then ``REPRO_BACKEND``, then ``jax.default_backend()``). A GPU
-    platform resolves to ``gpu-triton`` with ``interpret=False`` — the
-    interpreter is never selected silently on a compiled-capable backend.
+    Explicit ``backend`` (record or name — ``"interpret"`` is the test
+    configuration) wins; otherwise the ambient policy applies
+    (:func:`set_backend` override, then ``REPRO_BACKEND``, then
+    ``jax.default_backend()``). A GPU platform resolves to ``gpu-triton``
+    with ``interpret=False`` — the interpreter is never selected silently
+    on a compiled-capable backend.
     """
     if isinstance(backend, Backend):
         return backend
     if backend is not None:
         return _from_name(backend)
-    if interpret is not None:
-        if interpret:
-            return _interpret(jax.default_backend())
-        return _platform_default(jax.default_backend())
     if _OVERRIDE is not None:
         return _OVERRIDE
     env = os.environ.get(BACKEND_ENV)

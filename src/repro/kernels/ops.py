@@ -5,8 +5,9 @@ record (``kernels.backend.resolve_backend``): tpu-mosaic compiles the
 sequential-grid kernels as written; gpu-triton compiles too but routes
 grid reductions through their split-k variants and admission-gates the
 megakernel at shared-memory size; only platforms with no compiled lowering
-interpret. Every wrapper accepts ``backend=`` (record or resolved
-upstream) and the legacy ``interpret=`` bool as a compat override.
+interpret. Every wrapper accepts ``backend=`` (record or name, resolved
+upstream or here); ``backend="interpret"`` is the test configuration (the
+legacy ``interpret=`` bool kwarg is gone).
 
 ``fused_sinkhorn_iteration`` composes the kernels into one full Alg.-1
 iteration (v then u) — this is the paper's O(r(n+m)) hot loop as it would
@@ -55,10 +56,15 @@ from .logmatvec import (
     log_halfstep_pallas,
     log_matvec_pallas,
 )
+from .paged import (
+    paged_feature_contract_pallas,
+    paged_feature_matvec_pallas,
+    paged_halfstep_pallas,
+    paged_supported,
+)
 from .ref import gaussian_feature_map_ref
 
 __all__ = [
-    "default_interpret",
     "gaussian_feature_map",
     "feature_contract",
     "feature_matvec",
@@ -81,16 +87,6 @@ __all__ = [
 ]
 
 
-def default_interpret() -> bool:
-    """Compat shim: whether the AMBIENT backend policy interprets.
-
-    Historically this was ``jax.default_backend() != "tpu"`` — which
-    silently handed GPUs the interpreted kernels. It now defers to
-    ``kernels.backend.resolve_backend``: only platforms with no compiled
-    Pallas lowering (or an explicit override) interpret."""
-    return resolve_backend().interpret
-
-
 # ---------------------------------------------------------------------------
 # Thin backend-resolving wrappers
 # ---------------------------------------------------------------------------
@@ -102,11 +98,10 @@ def gaussian_feature_map(
     log_const: jax.Array,
     *,
     inv_eps: float,
-    interpret: Optional[bool] = None,
     log_space: bool = False,
     backend: Optional[Backend] = None,
 ) -> jax.Array:
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     if not fused_map_admissible(x.shape[1], be):
         # the fused map's d axis is a sequential accumulation grid; when it
         # cannot ride in one block on a parallel-grid backend, REFUSE into
@@ -120,19 +115,19 @@ def gaussian_feature_map(
 
 
 def feature_contract(
-    xi: jax.Array, u: jax.Array, *, interpret: Optional[bool] = None,
+    xi: jax.Array, u: jax.Array, *,
     backend: Optional[Backend] = None,
 ) -> jax.Array:
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     return feature_contract_pallas(xi, u, interpret=be.interpret,
                                    split_reduce=be.split_reduce, backend=be)
 
 
 def feature_matvec(
-    xi: jax.Array, t: jax.Array, *, interpret: Optional[bool] = None,
+    xi: jax.Array, t: jax.Array, *,
     backend: Optional[Backend] = None,
 ) -> jax.Array:
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     return feature_matvec_pallas(xi, t, interpret=be.interpret, backend=be)
 
 
@@ -141,27 +136,26 @@ def sinkhorn_halfstep(
     t: jax.Array,
     marg: jax.Array,
     *,
-    interpret: Optional[bool] = None,
     backend: Optional[Backend] = None,
 ) -> jax.Array:
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     return sinkhorn_halfstep_pallas(xi, t, marg, interpret=be.interpret,
                                     backend=be)
 
 
 def log_matvec(
-    log_m: jax.Array, t: jax.Array, *, interpret: Optional[bool] = None,
+    log_m: jax.Array, t: jax.Array, *,
     backend: Optional[Backend] = None,
 ) -> jax.Array:
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     return log_matvec_pallas(log_m, t, interpret=be.interpret, backend=be)
 
 
 def log_feature_contract(
-    log_w: jax.Array, s: jax.Array, *, interpret: Optional[bool] = None,
+    log_w: jax.Array, s: jax.Array, *,
     backend: Optional[Backend] = None,
 ) -> jax.Array:
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     return log_feature_contract_pallas(
         log_w, s, interpret=be.interpret, split_reduce=be.split_reduce,
         backend=be)
@@ -173,10 +167,9 @@ def log_halfstep(
     lmarg: jax.Array,
     *,
     scale: float = 1.0,
-    interpret: Optional[bool] = None,
     backend: Optional[Backend] = None,
 ) -> jax.Array:
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     return log_halfstep_pallas(log_w, t, lmarg, scale=scale,
                                interpret=be.interpret, backend=be)
 
@@ -193,7 +186,6 @@ def fused_sinkhorn_iteration(
     b: jax.Array,           # (m, B)
     u: jax.Array,           # (n, B) current scaling
     *,
-    interpret: Optional[bool] = None,
     backend: Optional[Backend] = None,
 ):
     """One full Sinkhorn iteration on the factored kernel, Pallas end to end.
@@ -205,7 +197,7 @@ def fused_sinkhorn_iteration(
 
     Returns (u', v).
     """
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     t = feature_contract(xi, u, backend=be)
     v = sinkhorn_halfstep(zeta, t, b, backend=be)
     s = feature_contract(zeta, v, backend=be)
@@ -221,7 +213,6 @@ def fused_log_sinkhorn_iteration(
     f: jax.Array,           # (n, B) current potential
     *,
     eps: float,
-    interpret: Optional[bool] = None,
     backend: Optional[Backend] = None,
 ):
     """One full LOG-domain Sinkhorn iteration, Pallas end to end:
@@ -233,7 +224,7 @@ def fused_log_sinkhorn_iteration(
 
     Returns (f', g) — the small-eps twin of :func:`fused_sinkhorn_iteration`.
     """
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     t = log_feature_contract(log_xi, f / eps, backend=be)
     g = log_halfstep(log_zeta, t, logb, scale=eps, backend=be)
     s = log_feature_contract(log_zeta, g / eps, backend=be)
@@ -247,7 +238,6 @@ def batched_sinkhorn_halfstep(
     marg: jax.Array,        # (B, n) target marginal of the updated side
     zeta: jax.Array,        # (B, m, r) features contracted against u
     *,
-    interpret: Optional[bool] = None,
     backend: Optional[Backend] = None,
 ) -> jax.Array:
     """One fused half-step  v_b = marg_b / (Xi_b (Zeta_b^T u_b))  for B
@@ -255,7 +245,7 @@ def batched_sinkhorn_halfstep(
     engine's bucket groups). Pallas batching adds B as a leading grid axis,
     so the MXU still sees the same (block_n x r) tiles back to back.
     """
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
 
     def one(xi_b, u_b, marg_b, zeta_b):
         t = feature_contract(zeta_b, u_b[:, None], backend=be)
@@ -272,7 +262,6 @@ def fused_batched_sinkhorn_iteration(
     b: jax.Array,           # (B, m)
     u: jax.Array,           # (B, n) current scalings
     *,
-    interpret: Optional[bool] = None,
     backend: Optional[Backend] = None,
 ):
     """One full Alg.-1 iteration for B independent problems, Pallas end to
@@ -289,7 +278,7 @@ def fused_batched_sinkhorn_iteration(
     per-problem solver when ``use_pallas`` is on: vmap adds B as a leading
     Pallas grid axis, exactly as here.
     """
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     v = batched_sinkhorn_halfstep(zeta, u, b, xi, backend=be)
     u_new = batched_sinkhorn_halfstep(xi, v, a, zeta, backend=be)
     return u_new, v
@@ -539,7 +528,65 @@ def _log_plan(kind: str, log_xi, log_zeta, eps: float, be: Backend,
                        backend=be)
 
 
-def geometry_ops(geom, *, interpret: Optional[bool] = None,
+def _paged_scaling_plan(kind: str, xi, zeta, live_x, live_y,
+                        page_size: int, be: Backend,
+                        precision: str = "highest") -> GeometryOps:
+    """Scaling plan over PAGED factor buffers: each contract / half-step
+    predicates per page on the live counts (``kernels.paged``), skipping
+    the MXU work for all-dead pages. Elementwise equal to
+    :func:`_scaling_plan` whenever dead slots carry zero weight/scaling —
+    the streaming store's invariant. No megakernel block step yet: paged
+    updates run the streaming per-iteration path."""
+    xi, zeta = _store_features(xi, zeta, precision)
+    kw = dict(page_size=page_size, interpret=be.interpret, backend=be)
+
+    def iteration(a, b, u):
+        t = paged_feature_contract_pallas(xi, u, live_x, **kw)
+        v = paged_halfstep_pallas(zeta, t, b, live_y, **kw)
+        s = paged_feature_contract_pallas(zeta, v, live_y, **kw)
+        u_new = paged_halfstep_pallas(xi, s, a, live_x, **kw)
+        return u_new, v
+
+    def apply_kt(u):
+        t = paged_feature_contract_pallas(xi, u[:, None], live_x, **kw)
+        return paged_feature_matvec_pallas(zeta, t, live_y, **kw)[:, 0]
+
+    def make_step(a, b, *, momentum: float = 1.0,
+                  err_reduce: Callable = jnp.sum):
+        ac = a[:, None]
+
+        def step(carry):
+            u, v, s = carry
+            # the paged matvec writes ZEROS on all-dead pages, so b / s is
+            # 0/0 there — mask to the flat plan's value (b = 0 -> v = 0)
+            v_new = relax_scaling(jnp.where(b > 0, b / s, 0.0), v, momentum)
+            t = paged_feature_contract_pallas(zeta, v_new[:, None], live_y,
+                                              **kw)
+            if momentum == 1.0:
+                u_new = paged_halfstep_pallas(xi, t, ac, live_x, **kw)[:, 0]
+            else:
+                kv = paged_feature_matvec_pallas(xi, t, live_x, **kw)[:, 0]
+                u_new = relax_scaling(jnp.where(a > 0, a / kv, 0.0), u,
+                                      momentum)
+            t2 = paged_feature_contract_pallas(xi, u_new[:, None], live_x,
+                                               **kw)
+            s_new = paged_feature_matvec_pallas(zeta, t2, live_y, **kw)[:, 0]
+            err = err_reduce(jnp.abs(v_new * s_new - b))
+            return (u_new, v_new, s_new), err
+
+        def init(u0, v0):
+            return (u0, v0, apply_kt(u0))
+
+        return step, init
+
+    return GeometryOps(mode="scaling", kind=kind, features=(xi, zeta),
+                       iteration=iteration, make_step=make_step,
+                       apply_kt=apply_kt, make_block_step=None,
+                       interpret=be.interpret, precision=precision,
+                       backend=be)
+
+
+def geometry_ops(geom, *,
                  mode: str = "scaling",
                  precision: str = "highest",
                  backend: Optional[Backend] = None) -> Optional[GeometryOps]:
@@ -558,11 +605,11 @@ def geometry_ops(geom, *, interpret: Optional[bool] = None,
     geometries — at half width; contractions and LSE accumulations stay
     f32 (see ``_store_features``).
 
-    ``backend=`` pins the plan to a resolved :class:`Backend` record;
-    otherwise the ambient policy applies (``interpret=`` being the legacy
-    override). The whole plan — kernel routing (split-k on parallel-grid
-    backends), fused-map admissibility, megakernel budget — keys off the
-    one record.
+    ``backend=`` pins the plan to a resolved :class:`Backend` record or
+    name (``"interpret"`` is the test configuration); otherwise the
+    ambient policy applies. The whole plan — kernel routing (split-k on
+    parallel-grid backends), fused-map admissibility, megakernel budget —
+    keys off the one record.
     """
     if mode not in ("scaling", "log"):
         raise ValueError(f"unknown plan mode {mode!r}")
@@ -570,7 +617,7 @@ def geometry_ops(geom, *, interpret: Optional[bool] = None,
     spec = geom.pallas_ops()
     if spec is None:
         return None
-    be = resolve_backend(backend, interpret=interpret)
+    be = resolve_backend(backend)
     kind = spec["kind"]
     if kind == "factored":
         xi, zeta = spec["xi"], spec["zeta"]
@@ -585,6 +632,29 @@ def geometry_ops(geom, *, interpret: Optional[bool] = None,
                              precision)
         return _scaling_plan(kind, jnp.exp(lxi), jnp.exp(lzt), be,
                              precision)
+    if kind == "paged":
+        if "xi" in spec:
+            xi, zeta = spec["xi"], spec["zeta"]
+            lxi = lzt = None
+        else:
+            lxi, lzt = spec["log_xi"], spec["log_zeta"]
+            xi, zeta = jnp.exp(lxi), jnp.exp(lzt)
+        if mode == "log":
+            # dead slots are -inf-pinned potentials — inert in every LSE —
+            # so the standard log plan on the flat factors is already
+            # exact; there is no paged log fast path (yet)
+            if lxi is None:
+                lxi, lzt = _masked_log(xi), _masked_log(zeta)
+            return _log_plan(kind, lxi, lzt, float(spec["eps"]), be,
+                             precision)
+        if not paged_supported(be):
+            # parallel-grid backends (Triton) cannot lower the paged
+            # contract's sequential accumulation — refuse into the flat
+            # split-k kernels (still masked-exact), never interpret
+            return _scaling_plan(kind, xi, zeta, be, precision)
+        return _paged_scaling_plan(
+            kind, xi, zeta, spec["page_live_x"], spec["page_live_y"],
+            int(spec["page_size"]), be, precision)
     if kind == "gaussian":
         fmap = functools.partial(
             gaussian_feature_map,

@@ -9,12 +9,21 @@ trace open-loop and prints throughput/latency percentiles plus the
 serving-path cache counters. ``--no-warm-starts`` A/Bs the potential
 re-serving; ``--strict`` exits nonzero if any runner traced or compiled
 after warmup (the zero-recompile serving invariant).
+
+``--stream`` switches to the STREAMING service instead: a pool of
+mutable pairs (paged feature stores) receives a synthetic stream of
+insert/evict mutations coalesced through the admission queue
+(:class:`repro.serving.StreamingOTService`), one warm re-solve per pair
+per flush. ``--strict`` then gates ZERO post-warmup runner retraces
+across every mutation.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+import numpy as np
 
 from ..serving import (
     OTService,
@@ -23,6 +32,78 @@ from ..serving import (
     run_open_loop,
     traffic_cells,
 )
+
+
+def run_stream(args) -> int:
+    """Synthetic mutation traffic through the streaming service."""
+    from ..serving import StreamingOTService
+    from ..streaming import StreamingDistribution, StreamingSolver
+
+    rng = np.random.default_rng(args.seed)
+    r, n, eps = args.rank, args.stream_n, args.eps
+    n_pairs = max(1, min(args.pool, 8))
+    svc = StreamingOTService(
+        solver=StreamingSolver(method="scaling", tol=args.tol,
+                               use_pallas=False),
+        max_batch=args.max_batch, max_wait=args.max_wait_ms * 1e-3,
+    )
+
+    def positive_feats(k):
+        return (np.abs(rng.normal(size=(k, r))) + 0.05).astype(np.float32)
+
+    t0 = time.monotonic()
+    for p in range(n_pairs):
+        dx = StreamingDistribution.from_features(
+            [(p, "x", i) for i in range(n)], positive_feats(n),
+            np.ones(n, np.float32), eps=eps)
+        dy = StreamingDistribution.from_features(
+            [(p, "y", i) for i in range(n)], positive_feats(n),
+            np.ones(n, np.float32), eps=eps)
+        svc.register(f"pair{p}", dx, dy)
+        svc.solver.re_solve(svc.solver.pair(f"pair{p}"))
+    traces0 = svc.solver.traces
+    print(f"[ot-service] stream warmup: {n_pairs} pairs at n={n} r={r} "
+          f"({svc.solver.stats()['runners']} runners, "
+          f"{traces0} traces) in {time.monotonic() - t0:.1f}s")
+
+    k = max(1, n // 50)                 # <= 2% of the support per update
+    tickets = []
+    # ids already scheduled for removal in a not-yet-flushed mutation:
+    # coalesced batches apply every removal, so sampling must avoid them
+    pending_rm = {p: set() for p in range(n_pairs)}
+    t0 = time.monotonic()
+    for j in range(args.requests):
+        p = int(rng.integers(n_pairs))
+        pair = svc.solver.pair(f"pair{p}")
+        live = [i for i in pair.x.store.ids() if i not in pending_rm[p]]
+        rm = [live[int(i)] for i in
+              rng.choice(len(live), size=k, replace=False)]
+        pending_rm[p].update(rm)
+        tickets.append(svc.submit_update(
+            f"pair{p}", remove_x=rm,
+            add_x=dict(ids=[(p, "new", j, i) for i in range(k)],
+                       feats=positive_feats(k),
+                       weights=np.ones(k, np.float32))))
+        svc.pump()
+    svc.drain()
+    dt = time.monotonic() - t0
+    lat = sorted(t.latency for t in tickets)
+    stats = svc.stats()
+    retraces = svc.solver.traces - traces0
+    print(f"[ot-service] streamed {len(tickets)} mutations over "
+          f"{n_pairs} pairs in {dt:.2f}s ({len(tickets) / dt:.1f} "
+          f"updates/s, delta_n={k}/{n} per update)")
+    print(f"[ot-service] latency p50={lat[len(lat) // 2] * 1e3:.2f}ms "
+          f"p99={lat[int(len(lat) * 0.99)] * 1e3:.2f}ms")
+    print(f"[ot-service] coalescing: {stats['solves']} warm re-solves "
+          f"for {stats['dispatched']} mutations "
+          f"(ratio {stats['coalesce_ratio']:.2f}); "
+          f"post-warmup retraces={retraces}")
+    if args.strict and retraces:
+        print("[ot-service] STRICT FAILURE: streaming runner retraced "
+              "after warmup", file=sys.stderr)
+        return 1
+    return 0
 
 
 def main(argv=None) -> int:
@@ -44,7 +125,16 @@ def main(argv=None) -> int:
     ap.add_argument("--no-warm-starts", action="store_true")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on any post-warmup trace/compile")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve synthetic MUTATION traffic through the "
+                         "streaming service (paged stores + incremental "
+                         "re-solve) instead of the request-trace service")
+    ap.add_argument("--stream-n", type=int, default=400,
+                    help="--stream: live support size per distribution")
     args = ap.parse_args(argv)
+
+    if args.stream:
+        return run_stream(args)
 
     spec = TrafficSpec(
         n_requests=args.requests, rate_hz=args.rate, eps=args.eps,

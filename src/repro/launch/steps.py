@@ -45,8 +45,15 @@ def make_train_step(
     """
     ctx = MeshContext(mesh, mode="train")
     # ONE OT execution policy per run: every training-time solve (prototype
-    # loss, sinkhorn router) shares it; logged so runs record what executed
-    ot_policy = ExecutionPolicy.from_config(cfg)
+    # loss, sinkhorn router) shares it; logged so runs record what executed.
+    # The step's mesh is threaded INTO the policy (cfg.ot_shard: None =
+    # auto, shard exactly when the mesh spans > 1 device) — building the
+    # policy meshless here used to silently demote every training-time OT
+    # solve to single-device execution on multi-device runs.
+    want_shard = (cfg.ot_shard if cfg.ot_shard is not None
+                  else mesh.devices.size > 1)
+    ot_policy = ExecutionPolicy.from_config(
+        cfg, mesh=mesh if want_shard else None)
     if cfg.ot_loss_weight > 0 or cfg.router == "sinkhorn":
         print(f"[steps] ot-policy {ot_policy.describe()}")
     sched = linear_warmup_cosine(opt.lr, min(200, total_steps // 10 + 1),

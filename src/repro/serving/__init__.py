@@ -6,10 +6,13 @@
   admission    — max-batch/max-wait continuous batching of ragged requests
   warmstart    — fingerprinted potential cache for repeat/near-repeat pairs
   traffic      — synthetic heavy-tailed open-loop traffic + report
+  streaming    — StreamingOTService: coalesced mutations over paged
+                 supports, one warm re-solve per pair per flush
 """
 from .admission import AdmissionQueue
 from .runner_cache import BucketRunner, RunnerCache
 from .service import OTService, Ticket
+from .streaming import MutationTicket, StreamingOTService
 from .traffic import (
     Request,
     TrafficReport,
@@ -23,7 +26,9 @@ from .warmstart import WarmHit, WarmStartCache, fingerprint, request_keys
 __all__ = [
     "AdmissionQueue",
     "BucketRunner",
+    "MutationTicket",
     "OTService",
+    "StreamingOTService",
     "Request",
     "RunnerCache",
     "Ticket",

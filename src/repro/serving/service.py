@@ -210,11 +210,42 @@ class OTService:
 
     # -- request path --------------------------------------------------------
 
-    def submit(self, problem: OTProblem,
+    def submit(self, problem: Union[OTProblem, "SolveSpec"],
                now: Optional[float] = None) -> Ticket:
         """Admit one request: derive its kernel data and bucket cell, look
         up a warm start, enqueue. Returns the request's :class:`Ticket`
-        (filled when a ``pump``/``drain`` dispatches its megabatch)."""
+        (filled when a ``pump``/``drain`` dispatches its megabatch).
+
+        Accepts a :class:`~repro.core.spec.SolveSpec` (the unified
+        record): its geometry/weights become the request and its solver-
+        facing fields are VALIDATED against this service's engine — a
+        spec asking for a different eps/tol/max_iter/momentum than the
+        service was built with is an error, not a silent reconfigure
+        (services are per-configuration; the spec's execution policy and
+        method are the service's to choose)."""
+        from ..core.spec import SolveSpec
+        if isinstance(problem, SolveSpec):
+            spec = problem
+            e = self.engine
+            mismatches = [
+                f"{name}: spec={got} != service={want}"
+                for name, got, want in (
+                    ("eps", float(spec.eps), float(e.eps)),
+                    ("tol", float(spec.tol), float(e.tol)),
+                    ("max_iter", int(spec.max_iter), int(e.max_iter)),
+                    ("momentum", float(spec.momentum), float(e.momentum)),
+                )
+                if got != want
+            ]
+            if spec.schedule is not None:
+                mismatches.append("schedule: serving solves are "
+                                  "single-stage (no eps annealing)")
+            if mismatches:
+                raise ValueError(
+                    "SolveSpec incompatible with this service's engine "
+                    "(run one service per configuration): "
+                    + "; ".join(mismatches))
+            problem = spec.problem()
         if float(problem.eps) != float(self.engine.eps):
             raise ValueError(
                 f"request declares eps={problem.eps} but this service "

@@ -1,0 +1,27 @@
+"""Streaming supports: paged feature storage + incremental re-solve.
+
+The mutable-distribution stack, bottom-up:
+
+* :class:`~repro.streaming.store.PagedFeatureStore` — fixed-capacity
+  paged buffer of positive feature rows; insert/evict flips weights and
+  writes pages, never shapes.
+* :class:`~repro.streaming.store.StreamingDistribution` — one mutable
+  side of an OT problem (precomputed features or raw points through the
+  pinned Gaussian feature map), with bucket-boundary rebucketing.
+* :class:`~repro.streaming.solver.StreamingSolver` — warm-started
+  incremental re-solves through one pre-planned jitted runner per
+  ``(capacity, rank)`` bucket cell; zero post-warmup retraces.
+
+The serving front end (mutation coalescing through the admission queue)
+lives in ``repro.serving.streaming``.
+"""
+from .solver import StreamingPair, StreamingSolver
+from .store import PagedFeatureStore, StreamingDistribution, bucket_capacity
+
+__all__ = [
+    "PagedFeatureStore",
+    "StreamingDistribution",
+    "StreamingPair",
+    "StreamingSolver",
+    "bucket_capacity",
+]

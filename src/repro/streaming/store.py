@@ -1,0 +1,444 @@
+"""Paged feature storage for streaming (mutable) distributions.
+
+A :class:`PagedFeatureStore` keeps one distribution's positive feature
+rows in a FIXED-CAPACITY buffer carved into pages of ``page_size`` rows —
+the KV-cache page-table idiom applied to OT supports. Insert and evict
+write pages and flip weights; array shapes NEVER change, so one jitted
+solver (``repro.streaming.StreamingSolver``) serves every update without
+retracing.
+
+Invariants the rest of the stack leans on:
+
+* **Dead slots carry zero weight.** Every solver in the repo masks
+  zero-weight atoms exactly (``u = 0`` / ``f = -inf``), so stale feature
+  rows in evicted slots change nothing.
+* **Feature rows stay strictly positive**, live or dead. Linear-space
+  kernels divide by ``K^T u`` and log-space takes ``log Xi``; the buffer
+  is initialized to ones and only ever overwritten with feature rows
+  drawn from a positive feature map, so no masked path ever sees a zero
+  or negative entry.
+* **Per-page live counts ride as traced int32** (``page_live``): the
+  paged Pallas kernels (``repro.kernels.paged``) skip all-dead pages via
+  scalar-prefetch + ``pl.when`` without occupancy changes ever retracing.
+
+Bookkeeping is host-side numpy + dicts (the serving dispatch-path rule:
+no eager jnp glue); the device buffer syncs lazily, one fixed-shape
+jitted ``dynamic_update_slice`` per dirty page with a TRACED page start —
+flushing page 3 and page 17 replays the same executable.
+
+The host-side page table is exposed CSR-style (``page_indices`` /
+``page_indptr`` / ``last_page_len``) for occupancy accounting and the
+allocation policy (pack new rows into the most-filled non-full page, so
+live pages stay dense and dead pages stay skippable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.shapes import ot_bucket
+from ..core.features import gaussian_features
+
+__all__ = ["PagedFeatureStore", "StreamingDistribution", "bucket_capacity"]
+
+
+def bucket_capacity(n: int, page_size: int) -> int:
+    """Bucketed store capacity for ``n`` expected live rows: the
+    ``ot_bucket`` of ``n`` plus one headroom page, rounded up to a whole
+    number of pages (the paged kernels require exact multiples)."""
+    cap = ot_bucket(max(1, n) + page_size)
+    return ((cap + page_size - 1) // page_size) * page_size
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _write_page(buf: jax.Array, block: jax.Array,
+                start: jax.Array) -> jax.Array:
+    """One dirty-page flush: overwrite ``page_size`` rows at ``start``.
+
+    ``start`` is a traced scalar, so every page of a given buffer shape
+    replays one compiled executable — flushes never retrace."""
+    return jax.lax.dynamic_update_slice(
+        buf, block, (start, jnp.zeros((), start.dtype)))
+
+
+class PagedFeatureStore:
+    """Fixed-capacity paged buffer of positive feature rows + weights.
+
+    ``capacity`` must be a multiple of ``page_size``. Rows are addressed
+    by caller-chosen hashable ids; ``add`` on an existing id overwrites
+    its row in place (same slot), ``remove`` flips its weight to zero and
+    frees the slot. The device mirror is synced by :meth:`flush` (called
+    by :meth:`device_features`), page-granular.
+    """
+
+    def __init__(self, rank: int, capacity: int, *, page_size: int = 64,
+                 dtype=np.float32):
+        if page_size < 1 or page_size % 8 != 0:
+            raise ValueError(
+                f"page_size must be a positive multiple of 8, got "
+                f"{page_size}")
+        if capacity < page_size or capacity % page_size != 0:
+            raise ValueError(
+                f"capacity {capacity} must be a positive multiple of "
+                f"page_size {page_size}")
+        self.rank = int(rank)
+        self.capacity = int(capacity)
+        self.page_size = int(page_size)
+        self.n_pages = capacity // page_size
+        self.dtype = np.dtype(dtype)
+        # ones, not zeros: dead rows must stay strictly positive so the
+        # masked linear/log operators never see log(0) or divide into 0
+        self._feats = np.ones((capacity, rank), self.dtype)
+        self._weights = np.zeros((capacity,), self.dtype)
+        self._live = np.zeros((capacity,), bool)
+        self._page_live = np.zeros((self.n_pages,), np.int32)
+        self._slot: Dict[Hashable, int] = {}
+        self._alloc_order: List[int] = []   # pages in first-touch order
+        self._dirty: set = set()            # page ids pending device sync
+        self._dev_feats: Optional[jax.Array] = None
+        self.version = 0                    # bumps on every mutation
+
+    # -- occupancy / page table ---------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._slot)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._slot)
+
+    @property
+    def page_live(self) -> np.ndarray:
+        """Per-page live-slot counts, int32 ``(n_pages,)`` (copy)."""
+        return self._page_live.copy()
+
+    @property
+    def page_indices(self) -> np.ndarray:
+        """Physical ids of pages holding >= 1 live slot, in first-touch
+        order (the CSR page-table view, host-side)."""
+        return np.asarray(
+            [p for p in self._alloc_order if self._page_live[p] > 0],
+            np.int32)
+
+    @property
+    def page_indptr(self) -> np.ndarray:
+        """CSR offsets over :attr:`page_indices`: slot
+        ``page_indptr[i]:page_indptr[i+1]`` of the logical live ordering
+        lives in page ``page_indices[i]``."""
+        counts = self._page_live[self.page_indices]
+        return np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+
+    @property
+    def last_page_len(self) -> int:
+        """Live count of the most recently touched live page (the page
+        new inserts drain into first when it is non-full)."""
+        idx = self.page_indices
+        return int(self._page_live[idx[-1]]) if idx.size else 0
+
+    def ids(self) -> List[Hashable]:
+        return list(self._slot)
+
+    def slot_of(self, id_) -> int:
+        return self._slot[id_]
+
+    def live_mask(self) -> np.ndarray:
+        return self._live.copy()
+
+    def weights_host(self) -> np.ndarray:
+        return self._weights.copy()
+
+    def stats(self) -> Dict[str, object]:
+        live_pages = int(np.count_nonzero(self._page_live))
+        return {
+            "capacity": self.capacity,
+            "rank": self.rank,
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "n_live": self.n_live,
+            "live_pages": live_pages,
+            "occupancy": self.n_live / self.capacity,
+            "page_occupancy": live_pages / self.n_pages,
+            "version": self.version,
+        }
+
+    # -- mutation ------------------------------------------------------
+
+    def _alloc_slot(self) -> int:
+        """Pick a dead slot: most-filled non-full page first (keeps live
+        pages dense so all-dead pages stay skippable), fresh page last."""
+        best_page, best_count = -1, -1
+        for p in range(self.n_pages):
+            c = int(self._page_live[p])
+            if 0 < c < self.page_size and c > best_count:
+                best_page, best_count = p, c
+        if best_page < 0:
+            # no partially-filled page: open the first fully-dead one
+            for p in range(self.n_pages):
+                if self._page_live[p] == 0:
+                    best_page = p
+                    break
+        if best_page < 0:
+            raise ValueError(
+                f"store full: capacity {self.capacity} exhausted "
+                "(grow via StreamingDistribution rebucketing)")
+        base = best_page * self.page_size
+        for s in range(base, base + self.page_size):
+            if not self._live[s]:
+                return s
+        raise AssertionError("page_live count out of sync with live mask")
+
+    def add(self, ids: Sequence[Hashable], feats, weights) -> None:
+        """Insert (or overwrite in place) rows for ``ids``.
+
+        ``feats``: ``(k, rank)`` strictly positive rows; ``weights``:
+        ``(k,)`` strictly positive masses. Raises before mutating if the
+        batch does not fit the remaining capacity."""
+        feats = np.asarray(feats, self.dtype)
+        weights = np.asarray(weights, self.dtype)
+        if feats.shape != (len(ids), self.rank):
+            raise ValueError(
+                f"feats shape {feats.shape} != ({len(ids)}, {self.rank})")
+        if weights.shape != (len(ids),):
+            raise ValueError(
+                f"weights shape {weights.shape} != ({len(ids)},)")
+        if np.any(weights <= 0):
+            raise ValueError("weights must be strictly positive "
+                             "(zero weight means dead — use remove)")
+        if np.any(feats <= 0):
+            raise ValueError("feature rows must be strictly positive "
+                             "(linear-space positive-feature invariant)")
+        n_new = sum(1 for i in ids if i not in self._slot)
+        if self.n_live + n_new > self.capacity:
+            raise ValueError(
+                f"insert of {n_new} new rows overflows capacity "
+                f"{self.capacity} (live: {self.n_live})")
+        for j, id_ in enumerate(ids):
+            slot = self._slot.get(id_)
+            if slot is None:
+                slot = self._alloc_slot()
+                self._slot[id_] = slot
+                self._live[slot] = True
+                page = slot // self.page_size
+                self._page_live[page] += 1
+                if page not in self._alloc_order:
+                    self._alloc_order.append(page)
+            self._feats[slot] = feats[j]
+            self._weights[slot] = weights[j]
+            self._dirty.add(slot // self.page_size)
+        self.version += 1
+
+    def remove(self, ids: Sequence[Hashable]) -> None:
+        """Evict rows: weight -> 0, slot freed; the stale (positive)
+        feature row stays in place — masked out, never read as data."""
+        missing = [i for i in ids if i not in self._slot]
+        if missing:
+            raise KeyError(f"ids not in store: {missing[:5]}")
+        for id_ in ids:
+            slot = self._slot.pop(id_)
+            self._live[slot] = False
+            self._weights[slot] = 0.0
+            self._page_live[slot // self.page_size] -= 1
+            # no dirty mark: eviction touches weights/liveness only, the
+            # stale feature bytes on device are already correct
+        self.version += 1
+
+    def set_weights(self, ids: Sequence[Hashable], weights) -> None:
+        """Reweight live rows in place (no feature write, no flush)."""
+        weights = np.asarray(weights, self.dtype)
+        if np.any(weights <= 0):
+            raise ValueError("weights must be strictly positive")
+        for id_, w in zip(ids, weights):
+            self._weights[self._slot[id_]] = w
+        self.version += 1
+
+    # -- device sync ---------------------------------------------------
+
+    def flush(self) -> int:
+        """Sync dirty pages to the device mirror; returns pages written."""
+        if self._dev_feats is None:
+            self._dev_feats = jnp.asarray(self._feats)
+            n = len(self._dirty)
+            self._dirty.clear()
+            return n
+        n = 0
+        for page in sorted(self._dirty):
+            base = page * self.page_size
+            block = jnp.asarray(self._feats[base:base + self.page_size])
+            self._dev_feats = _write_page(
+                self._dev_feats, block, np.int32(base))
+            n += 1
+        self._dirty.clear()
+        return n
+
+    def device_features(self) -> jax.Array:
+        """The ``(capacity, rank)`` device buffer, synced."""
+        self.flush()
+        return self._dev_feats
+
+    def compact_grow(self, new_capacity: int) -> np.ndarray:
+        """Repack live rows densely into a larger buffer (bucket-boundary
+        crossing). Returns ``perm``: ``(new_capacity,)`` int array with
+        ``perm[new_slot] = old_slot`` for moved rows and ``-1`` for empty
+        slots — callers remap persisted per-slot state (warm-start
+        potentials) through it."""
+        if new_capacity < self.n_live:
+            raise ValueError(
+                f"new capacity {new_capacity} < {self.n_live} live rows")
+        if new_capacity % self.page_size != 0:
+            raise ValueError(
+                f"new capacity {new_capacity} must be a multiple of "
+                f"page_size {self.page_size}")
+        perm = np.full((new_capacity,), -1, np.int64)
+        feats = np.ones((new_capacity, self.rank), self.dtype)
+        weights = np.zeros((new_capacity,), self.dtype)
+        live = np.zeros((new_capacity,), bool)
+        new_slot_of: Dict[Hashable, int] = {}
+        for new_slot, (id_, old_slot) in enumerate(self._slot.items()):
+            perm[new_slot] = old_slot
+            feats[new_slot] = self._feats[old_slot]
+            weights[new_slot] = self._weights[old_slot]
+            live[new_slot] = True
+            new_slot_of[id_] = new_slot
+        self.capacity = int(new_capacity)
+        self.n_pages = new_capacity // self.page_size
+        self._feats, self._weights, self._live = feats, weights, live
+        self._slot = new_slot_of
+        self._page_live = np.asarray(
+            [int(live[p * self.page_size:(p + 1) * self.page_size].sum())
+             for p in range(self.n_pages)], np.int32)
+        self._alloc_order = [p for p in range(self.n_pages)
+                             if self._page_live[p] > 0]
+        self._dirty = set()
+        self._dev_feats = None      # full re-upload on next flush
+        self.version += 1
+        return perm
+
+
+class StreamingDistribution:
+    """A mutable weighted point set backed by a :class:`PagedFeatureStore`.
+
+    Wraps one SIDE of a factored OT problem — the rows of ``Xi`` (or
+    ``Zeta``) plus masses — at bucketed capacity. Build it
+    :meth:`from_features` (precomputed positive rows, the
+    ``FactoredPositive`` view) or :meth:`from_points` (raw points run
+    through the Lemma-1 Gaussian feature map at the distribution's
+    pinned ``eps`` — the ``GaussianPointCloud`` view, so later ``add``
+    calls can pass points and featurize consistently).
+
+    ``add`` past capacity triggers a bucket-boundary crossing: the store
+    compact-grows to the next ``ot_bucket`` and the slot permutation is
+    queued for the solver to remap its persisted warm-start potentials
+    (:meth:`take_remap`).
+    """
+
+    def __init__(self, store: PagedFeatureStore, *, eps: float,
+                 featurize: Optional[Callable[[np.ndarray], np.ndarray]]
+                 = None):
+        self.store = store
+        self.eps = float(eps)
+        self._featurize = featurize
+        self._remaps: List[np.ndarray] = []
+
+    # -- constructors --------------------------------------------------
+
+    @classmethod
+    def from_features(cls, ids: Sequence[Hashable], feats, weights, *,
+                      eps: float, capacity: Optional[int] = None,
+                      page_size: int = 64) -> "StreamingDistribution":
+        feats = np.asarray(feats)
+        cap = capacity or bucket_capacity(len(ids), page_size)
+        store = PagedFeatureStore(feats.shape[1], cap, page_size=page_size)
+        dist = cls(store, eps=eps)
+        if len(ids):
+            dist.add(ids, feats=feats, weights=weights)
+        return dist
+
+    @classmethod
+    def from_points(cls, ids: Sequence[Hashable], points, weights,
+                    anchors, *, eps: float, q: float = 1.0,
+                    capacity: Optional[int] = None,
+                    page_size: int = 64) -> "StreamingDistribution":
+        anchors = np.asarray(anchors, np.float32)
+
+        def featurize(pts: np.ndarray) -> np.ndarray:
+            return np.asarray(
+                gaussian_features(jnp.asarray(pts, jnp.float32),
+                                  jnp.asarray(anchors), eps=eps, q=q))
+
+        cap = capacity or bucket_capacity(len(ids), page_size)
+        store = PagedFeatureStore(anchors.shape[0], cap,
+                                  page_size=page_size)
+        dist = cls(store, eps=eps, featurize=featurize)
+        if len(ids):
+            dist.add(ids, points=points, weights=weights)
+        return dist
+
+    # -- mutation ------------------------------------------------------
+
+    def add(self, ids: Sequence[Hashable], *, feats=None, points=None,
+            weights=None) -> None:
+        """Insert/overwrite rows; pass ``feats`` (precomputed) or
+        ``points`` (featurized through the pinned map). Grows the store
+        through the next bucket boundary when needed."""
+        if (feats is None) == (points is None):
+            raise ValueError("pass exactly one of feats= or points=")
+        if points is not None:
+            if self._featurize is None:
+                raise ValueError(
+                    "this distribution was built from_features; "
+                    "pass feats=, not points=")
+            feats = self._featurize(np.asarray(points))
+        if weights is None:
+            raise ValueError("weights= is required")
+        n_new = sum(1 for i in ids if i not in self.store._slot)
+        if self.store.n_live + n_new > self.store.capacity:
+            self._grow(self.store.n_live + n_new)
+        self.store.add(ids, feats, weights)
+
+    def remove(self, ids: Sequence[Hashable]) -> None:
+        self.store.remove(ids)
+
+    def _grow(self, needed: int) -> None:
+        new_cap = bucket_capacity(needed, self.store.page_size)
+        self._remaps.append(self.store.compact_grow(new_cap))
+
+    def take_remap(self) -> Optional[np.ndarray]:
+        """Composed slot permutation since the last call (or ``None``):
+        ``perm[new_slot] = oldest_slot``. The solver pipes its persisted
+        potentials through this after a bucket crossing."""
+        if not self._remaps:
+            return None
+        perm = self._remaps[0]
+        for nxt in self._remaps[1:]:
+            keep = nxt >= 0
+            composed = np.full_like(nxt, -1)
+            composed[keep] = perm[nxt[keep]]
+            perm = composed
+        self._remaps = []
+        return perm
+
+    # -- solve-side views ----------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.store.capacity
+
+    @property
+    def n_live(self) -> int:
+        return self.store.n_live
+
+    def device_features(self) -> jax.Array:
+        return self.store.device_features()
+
+    def page_live(self) -> np.ndarray:
+        return self.store.page_live
+
+    def weights_host(self) -> np.ndarray:
+        return self.store.weights_host()
+
+    def live_mask(self) -> np.ndarray:
+        return self.store.live_mask()

@@ -3,9 +3,9 @@
 Contracts under test:
 
 * backend resolution: tpu -> tpu-mosaic, gpu/cuda/rocm -> gpu-triton with
-  ``interpret=False`` (the regression for the old ``default_interpret()``
+  ``interpret=False`` (the regression for the old default-interpret
   trap that silently interpreted on GPU), everything else -> interpret;
-  precedence of explicit record > interpret bool > set_backend/scope >
+  precedence of explicit record/name > set_backend/scope >
   ``REPRO_BACKEND`` env > platform;
 * ``block_plan_fits`` reads its admission budget from the Backend record
   (GPU gets the shared-memory gate, not TPU's 12 MiB VMEM constant) while
@@ -42,7 +42,6 @@ from repro.kernels.fused_loop import block_plan_fits, block_vmem_bytes
 from repro.kernels.kermatvec import feature_contract_pallas
 from repro.kernels.logmatvec import log_feature_contract_pallas
 from repro.kernels.ops import (
-    default_interpret,
     gaussian_feature_map,
     geometry_ops,
 )
@@ -104,11 +103,9 @@ def test_gpu_never_interprets_silently(monkeypatch, platform):
     assert be.name == "gpu-triton"
     assert be.interpret is False
     assert be.split_reduce is True
-    assert default_interpret() is False
-    # auto ``interpret=False`` request keeps the compiled gpu policy
-    assert resolve_backend(interpret=False).name == "gpu-triton"
-    # the interpreter stays reachable, but only EXPLICITLY
-    assert resolve_backend(interpret=True).interpret is True
+    # the ambient resolution keeps the compiled gpu policy
+    assert resolve_backend(None).name == "gpu-triton"
+    # the interpreter stays reachable, but only by EXPLICIT name
     assert resolve_backend("interpret").interpret is True
 
 
@@ -120,11 +117,11 @@ def test_override_precedence(monkeypatch):
     # set_backend beats env
     set_backend("tpu-mosaic")
     assert resolve_backend().name == "tpu-mosaic"
-    # explicit interpret bool beats set_backend
-    assert resolve_backend(interpret=True).name == "interpret"
+    # explicit name beats set_backend
+    assert resolve_backend("interpret").name == "interpret"
     # explicit record beats everything
     rec = resolve_backend("gpu-triton")
-    assert resolve_backend(rec, interpret=True) is rec
+    assert resolve_backend(rec) is rec
     set_backend(None)
     assert resolve_backend().name == "gpu-triton"   # env again
 
@@ -270,7 +267,7 @@ def test_static_plan_forces_single_seq_block_on_splitk_backends():
 
 def test_deterministic_bitwise_matches_static(monkeypatch):
     extents = {"n": 200, "r": 129, "B": 1}
-    be = resolve_backend(interpret=True)
+    be = resolve_backend("interpret")
     want = autotune.static_plan("feature_contract", extents, be)
     got = autotune.resolve("feature_contract", extents, jnp.float32, be,
                            deterministic=True)
@@ -291,7 +288,7 @@ def test_resolve_blocks_honors_explicit_overrides():
 
 def test_candidates_start_from_static_plan():
     extents = {"n": 2048, "r": 256, "B": 1}
-    be = resolve_backend(interpret=True)
+    be = resolve_backend("interpret")
     cands = autotune.candidates("feature_contract", extents, be)
     assert cands[0] == autotune.static_plan("feature_contract", extents, be)
     assert 1 < len(cands) <= 8
@@ -306,7 +303,7 @@ _EXTENTS = {"n": 200, "r": 129, "B": 1}
 
 
 def _tune_once():
-    be = resolve_backend(interpret=True)
+    be = resolve_backend("interpret")
     return autotune.resolve("feature_contract", _EXTENTS, jnp.float32, be,
                             deterministic=False)
 
@@ -361,7 +358,7 @@ def test_corrupt_or_stale_cache_falls_back(tmp_path, payload):
 def test_tuned_candidates_all_match_oracle():
     """Whatever plan the tuner lands on, numerics are unchanged: every
     candidate block shape produces the oracle result elementwise."""
-    be = resolve_backend(interpret=True)
+    be = resolve_backend("interpret")
     for n, r, B in [(19, 3, 1), (200, 129, 5), (64, 127, 2)]:
         xi = jax.random.uniform(KEY, (n, r)) + 0.1
         u = jax.random.uniform(jax.random.fold_in(KEY, 5), (n, B)) + 0.1

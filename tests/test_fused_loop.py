@@ -77,7 +77,7 @@ def test_block_step_matches_unfused(family, mode, momentum):
     # zero-weight atoms on the factored case exercise the masked relax
     if family == "factored":
         geom, a, b = _factored(dead=3)
-    plan = geometry_ops(geom, interpret=True, mode=mode)
+    plan = geometry_ops(geom, backend="interpret", mode=mode)
     inner = 4
     step, init = plan.make_step(a, b, momentum=momentum)
     block = plan.make_block_step(a, b, inner_steps=inner, momentum=momentum)
@@ -110,7 +110,7 @@ def test_block_step_warm_start_boundary():
     """A SECOND block continues exactly where the first stopped — the
     megakernel carry round-trips through HBM unchanged."""
     geom, a, b = _factored()
-    plan = geometry_ops(geom, interpret=True, mode="scaling")
+    plan = geometry_ops(geom, backend="interpret", mode="scaling")
     step, init = plan.make_step(a, b)
     bstep, binit = plan.make_block_step(a, b, inner_steps=3)
     carry = init(jnp.ones_like(a), jnp.ones_like(b))
@@ -261,11 +261,11 @@ def test_bf16_policy_parity(family, method, use_pallas):
 
 def test_bf16_storage_dtype():
     geom, a, b = _factored()
-    plan = geometry_ops(geom, interpret=True, mode="scaling",
+    plan = geometry_ops(geom, backend="interpret", mode="scaling",
                         precision="bf16")
     assert plan.features[0].dtype == jnp.bfloat16
     assert plan.precision == "bf16"
-    plan32 = geometry_ops(geom, interpret=True, mode="scaling")
+    plan32 = geometry_ops(geom, backend="interpret", mode="scaling")
     assert plan32.features[0].dtype == jnp.float32
     # the XLA operator path stores bf16 too but accumulates/returns f32 —
     # even for a WEAK-typed operand, which dtype promotion alone would
@@ -277,7 +277,7 @@ def test_bf16_storage_dtype():
 
 def test_bf16_megakernel_block():
     geom, a, b = _factored()
-    plan = geometry_ops(geom, interpret=True, mode="scaling",
+    plan = geometry_ops(geom, backend="interpret", mode="scaling",
                         precision="bf16")
     bstep, binit = plan.make_block_step(a, b, inner_steps=4)
     step, init = plan.make_step(a, b)

@@ -327,7 +327,7 @@ def test_geometry_ops_matches_xla_operators(family):
     from repro.kernels.ops import geometry_ops
 
     geom = _make_geometry(family, 24, 20)
-    plan = geometry_ops(geom, interpret=True)
+    plan = geometry_ops(geom, backend="interpret")
     assert plan is not None
     xi, zeta = plan.features
     xi_ref, zeta_ref = geom.features()
@@ -368,7 +368,7 @@ def test_geometry_ops_log_mode_matches_xla_operators(family):
     from repro.kernels.ops import geometry_ops
 
     geom = _make_geometry(family, 24, 20)
-    plan = geometry_ops(geom, interpret=True, mode="log")
+    plan = geometry_ops(geom, backend="interpret", mode="log")
     assert plan is not None and plan.mode == "log"
     lxi, lzt = plan.features
     lxi_ref, lzt_ref = geom.log_features()

@@ -30,7 +30,7 @@ def test_feature_map_shapes(n, r, d):
     U = fm.init(jax.random.fold_in(key, 1))
     logc = (0.25 * d * jnp.log(2 * fm.q)
             + jnp.sum(U * U, -1) / (fm.q * 0.6) - 0.5 * jnp.log(float(r)))
-    out = gaussian_feature_map(x, U, logc, inv_eps=1 / 0.6, interpret=True)
+    out = gaussian_feature_map(x, U, logc, inv_eps=1 / 0.6, backend="interpret")
     want = ref.gaussian_feature_map_ref(x, U, logc, inv_eps=1 / 0.6)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-4, atol=1e-6)
@@ -43,7 +43,7 @@ def test_feature_contract_shapes(n, r, B):
     key = jax.random.PRNGKey(n * 7 + r)
     xi = jax.random.uniform(key, (n, r)) + 0.05
     u = jax.random.uniform(jax.random.fold_in(key, 1), (n, B)) + 0.05
-    out = feature_contract(xi, u, interpret=True)
+    out = feature_contract(xi, u, backend="interpret")
     want = ref.feature_contract_ref(xi, u)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-4, atol=1e-5)
@@ -57,7 +57,7 @@ def test_halfstep_shapes(m, r, B):
     zeta = jax.random.uniform(key, (m, r)) + 0.05
     t = jax.random.uniform(jax.random.fold_in(key, 1), (r, B)) + 0.05
     marg = jax.random.uniform(jax.random.fold_in(key, 2), (m, B)) + 0.5
-    out = sinkhorn_halfstep(zeta, t, marg, interpret=True)
+    out = sinkhorn_halfstep(zeta, t, marg, backend="interpret")
     want = ref.sinkhorn_halfstep_ref(zeta, t, marg)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-4, atol=1e-6)
@@ -68,7 +68,7 @@ def test_log_matvec_shapes(m, r):
     key = jax.random.PRNGKey(m * 3 + r)
     log_m = jax.random.normal(key, (m, r)) * 3.0
     t = jax.random.normal(jax.random.fold_in(key, 1), (r,)) * 2.0
-    out = log_matvec(log_m, t, interpret=True)
+    out = log_matvec(log_m, t, backend="interpret")
     want = ref.log_matvec_ref(log_m, t)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
@@ -89,7 +89,7 @@ def test_fused_iteration_converges_like_reference(dtype):
     v_r = None
     for _ in range(50):
         u_k, v_k = fused_sinkhorn_iteration(xi, zeta, a, b, u_k,
-                                            interpret=True)
+                                            backend="interpret")
         t = xi.T @ u_r
         v_r = b / (zeta @ t)
         u_r = a / (xi @ (zeta.T @ v_r))
@@ -118,14 +118,14 @@ def test_lane_padding_parity_scaling_kernels(n, r, B):
     t = jax.random.uniform(jax.random.fold_in(key, 2), (r, B)) + 0.05
     marg = jax.random.uniform(jax.random.fold_in(key, 3), (n, B)) + 0.5
     np.testing.assert_allclose(
-        np.asarray(feature_contract(xi, u, interpret=True)),
+        np.asarray(feature_contract(xi, u, backend="interpret")),
         np.asarray(ref.feature_contract_ref(xi, u)), rtol=2e-4, atol=1e-5)
     np.testing.assert_allclose(
-        np.asarray(sinkhorn_halfstep(xi, t, marg, interpret=True)),
+        np.asarray(sinkhorn_halfstep(xi, t, marg, backend="interpret")),
         np.asarray(ref.sinkhorn_halfstep_ref(xi, t, marg)),
         rtol=2e-4, atol=1e-6)
     np.testing.assert_allclose(
-        np.asarray(feature_matvec(xi, t, interpret=True)),
+        np.asarray(feature_matvec(xi, t, backend="interpret")),
         np.asarray(xi @ t), rtol=2e-4, atol=1e-6)
 
 
@@ -136,11 +136,11 @@ def test_lane_padding_parity_log_kernels(n, r, B):
     s = jax.random.normal(jax.random.fold_in(key, 1), (n, B)) * 2.0
     t = jax.random.normal(jax.random.fold_in(key, 2), (r, B)) * 2.0
     lmarg = jax.random.normal(jax.random.fold_in(key, 3), (n, B))
-    out_c = log_feature_contract(lw, s, interpret=True)
+    out_c = log_feature_contract(lw, s, backend="interpret")
     np.testing.assert_allclose(
         np.asarray(out_c), np.asarray(ref.log_feature_contract_ref(lw, s)),
         rtol=1e-4, atol=1e-4)
-    out_h = log_halfstep(lw, t, lmarg, scale=0.37, interpret=True)
+    out_h = log_halfstep(lw, t, lmarg, scale=0.37, backend="interpret")
     np.testing.assert_allclose(
         np.asarray(out_h),
         np.asarray(ref.log_halfstep_ref(lw, t, lmarg, scale=0.37)),
@@ -155,7 +155,7 @@ def test_log_matvec_odd_rank_lane_padding(m, r):
     log_m = jax.random.normal(key, (m, r)) * 3.0
     t = jax.random.normal(jax.random.fold_in(key, 1), (r,)) * 2.0
     np.testing.assert_allclose(
-        np.asarray(log_matvec(log_m, t, interpret=True)),
+        np.asarray(log_matvec(log_m, t, backend="interpret")),
         np.asarray(ref.log_matvec_ref(log_m, t)), rtol=1e-5, atol=1e-5)
 
 
@@ -168,7 +168,7 @@ def test_log_kernels_masked_neutral_entries():
     lw = lw.at[3, :].set(-jnp.inf)          # fully masked feature row
     s = jax.random.normal(jax.random.fold_in(key, 1), (n, B))
     s = s.at[5, :].set(-jnp.inf)            # masked potential (zero weight)
-    out = log_feature_contract(lw, s, interpret=True)
+    out = log_feature_contract(lw, s, backend="interpret")
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref.log_feature_contract_ref(lw, s)),
         rtol=1e-4, atol=1e-4)
@@ -185,7 +185,7 @@ def test_fused_log_iteration_matches_xla_two_stage():
     logb = jnp.log(jnp.full((m, B), 1.0 / m))
     f = jax.random.normal(jax.random.fold_in(key, 2), (n, B))
     f_new, g = fused_log_sinkhorn_iteration(
-        lxi, lzt, loga, logb, f, eps=eps, interpret=True)
+        lxi, lzt, loga, logb, f, eps=eps, backend="interpret")
     lse = jax.scipy.special.logsumexp
     for c in range(B):
         t = lse(lxi + (f[:, c] / eps)[:, None], axis=0)
@@ -207,8 +207,8 @@ def test_feature_map_log_space_epilogue():
     fm = GaussianFeatureMap(r=r, d=d, eps=0.7, R=3.0)
     U = fm.init(jax.random.fold_in(key, 1))
     logc = jnp.zeros((r,), jnp.float32)
-    lin = gaussian_feature_map(x, U, logc, inv_eps=1 / 0.7, interpret=True)
-    log = gaussian_feature_map(x, U, logc, inv_eps=1 / 0.7, interpret=True,
+    lin = gaussian_feature_map(x, U, logc, inv_eps=1 / 0.7, backend="interpret")
+    log = gaussian_feature_map(x, U, logc, inv_eps=1 / 0.7, backend="interpret",
                                log_space=True)
     np.testing.assert_allclose(np.asarray(jnp.exp(log)), np.asarray(lin),
                                rtol=2e-4, atol=1e-6)
@@ -236,7 +236,7 @@ def test_feature_map_dtype_bf16_inputs():
     logc = jnp.zeros((r,), jnp.float32)
     out = gaussian_feature_map(x.astype(jnp.float32),
                                U.astype(jnp.float32), logc,
-                               inv_eps=1.0, interpret=True)
+                               inv_eps=1.0, backend="interpret")
     want = ref.gaussian_feature_map_ref(x.astype(jnp.float32),
                                         U.astype(jnp.float32), logc,
                                         inv_eps=1.0)
@@ -259,7 +259,7 @@ def test_fused_batched_iteration_matches_reference():
     u = jnp.ones((B, n))
     for _ in range(5):
         u, v = fused_batched_sinkhorn_iteration(xi, zeta, a, b, u,
-                                                interpret=True)
+                                                backend="interpret")
     for i in range(B):
         u_r = jnp.ones((n,))
         for _ in range(5):

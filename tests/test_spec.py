@@ -1,0 +1,144 @@
+"""SolveSpec: one record accepted by every solve surface.
+
+Covers the API-redesign satellite: construction validation, the
+solve(spec) / solve_many(specs) / OTService.submit(spec) front doors all
+agreeing with the legacy keyword paths, the OTObjective.spec bridge, and
+the DeprecationWarning on legacy execution kwargs.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EpsSchedule,
+    ExecutionPolicy,
+    FactoredPositive,
+    OTObjective,
+    OTProblem,
+    SolveSpec,
+    solve,
+    solve_many,
+)
+from repro.serving import OTService
+
+RNG = np.random.default_rng(7)
+EPS = 0.5
+
+
+def _geom(n=24, m=20, r=6, rng=RNG):
+    xi = jnp.asarray(np.abs(rng.normal(size=(n, r))).astype(np.float32)
+                     + 0.1)
+    zeta = jnp.asarray(np.abs(rng.normal(size=(m, r))).astype(np.float32)
+                       + 0.1)
+    return FactoredPositive(xi=xi, zeta=zeta, eps=EPS)
+
+
+def test_spec_validation():
+    g = _geom()
+    with pytest.raises(TypeError, match="Geometry"):
+        SolveSpec(geometry=jnp.ones((4, 4)))
+    with pytest.raises(ValueError, match="method"):
+        SolveSpec(geometry=g, method="nope")
+    with pytest.raises(TypeError, match="ExecutionPolicy"):
+        SolveSpec(geometry=g, policy="cpu")
+    spec = SolveSpec(geometry=g, method="factored")
+    assert spec.eps == EPS
+    assert "FactoredPositive" in spec.describe()
+    assert spec.replace(tol=1e-4).tol == 1e-4
+    prob = spec.problem()
+    assert isinstance(prob, OTProblem)
+    round_trip = SolveSpec.from_problem(prob, method="factored", tol=1e-5)
+    assert round_trip.method == "factored" and round_trip.tol == 1e-5
+
+
+def test_solve_spec_matches_keyword_path():
+    g = _geom()
+    spec = SolveSpec(geometry=g, method="factored", tol=1e-6)
+    res_spec = solve(spec)
+    res_kw = solve(OTProblem.from_geometry(g), method="factored", tol=1e-6)
+    np.testing.assert_allclose(float(res_spec.cost), float(res_kw.cost),
+                               rtol=0, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(res_spec.f), np.asarray(res_kw.f),
+                               rtol=0, atol=1e-6)
+
+
+def test_solve_spec_annealed():
+    from repro.core import GaussianPointCloud
+    x = jnp.asarray(RNG.normal(size=(24, 3)).astype(np.float32))
+    y = jnp.asarray(RNG.normal(size=(20, 3)).astype(np.float32))
+    anchors = jnp.asarray(RNG.normal(size=(32, 3)).astype(np.float32))
+    g = GaussianPointCloud.build(x, y, anchors, eps=EPS)
+    spec = SolveSpec(geometry=g, method="log_factored",
+                     schedule=EpsSchedule(eps_init=4.0, decay=0.5))
+    res = solve(spec)
+    assert bool(res.converged)
+
+
+def test_solve_many_specs():
+    g1, g2 = _geom(), _geom()
+    s1 = SolveSpec(geometry=g1, method="factored")
+    s2 = SolveSpec(geometry=g2, method="factored")
+    r1, r2 = solve_many([s1, s2])
+    ref = solve(s2)
+    np.testing.assert_allclose(float(r2.cost), float(ref.cost),
+                               rtol=0, atol=1e-5)
+    del r1
+
+
+def test_solve_many_rejects_heterogeneous_specs():
+    g = _geom()
+    s1 = SolveSpec(geometry=g, method="factored", tol=1e-6)
+    s2 = s1.replace(tol=1e-4)
+    with pytest.raises(ValueError, match="heterogeneous"):
+        solve_many([s1, s2])
+    with pytest.raises(TypeError, match="mixed"):
+        solve_many([s1, OTProblem.from_geometry(g)])
+
+
+def test_legacy_execution_kwargs_deprecated():
+    g = _geom()
+    prob = OTProblem.from_geometry(g)
+    with pytest.warns(DeprecationWarning, match="SolveSpec"):
+        solve(prob, method="factored", use_pallas=False)
+    with pytest.warns(DeprecationWarning, match="SolveSpec"):
+        solve_many([prob], method="factored", precision="bf16")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # spec path must be silent
+        solve(SolveSpec(geometry=g, method="factored",
+                        policy=ExecutionPolicy(use_pallas=False)))
+
+
+def test_objective_spec_bridge():
+    g = _geom()
+    obj = OTObjective(eps=EPS, tol=1e-6, max_iter=500,
+                      policy=ExecutionPolicy(use_pallas=False))
+    spec = obj.spec(g, method="factored")
+    assert spec.tol == obj.tol and spec.max_iter == obj.max_iter
+    assert spec.policy is obj.policy
+    res = solve(spec)
+    assert bool(res.converged)
+    bad = FactoredPositive(xi=g.xi, zeta=g.zeta, eps=2 * EPS)
+    with pytest.raises(ValueError, match="eps"):
+        obj.spec(bad)
+
+
+def test_service_submit_spec():
+    g = _geom()
+    svc = OTService(eps=EPS, method="factored", tol=1e-6, max_batch=4,
+                    max_wait=0.0)
+    spec = SolveSpec(geometry=g, method="factored", tol=1e-6)
+    ticket = svc.submit(spec)
+    svc.drain()
+    assert ticket.done
+    ref = solve(spec)
+    np.testing.assert_allclose(float(ticket.result.cost), float(ref.cost),
+                               rtol=0, atol=1e-5)
+    # mismatched target -> explicit rejection, not silent reconfiguration
+    with pytest.raises(ValueError, match="one service per configuration"):
+        svc.submit(spec.replace(tol=1e-3))
+    with pytest.raises(ValueError, match="schedule"):
+        svc.submit(spec.replace(schedule=EpsSchedule(eps_init=4.0,
+                                                     decay=0.5)))

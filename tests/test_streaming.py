@@ -1,0 +1,413 @@
+"""Streaming supports: paged store, incremental re-solve, serving front.
+
+The tentpole contracts under test:
+
+* paged-store PARITY MATRIX: a streamed support (insert/evict mutations,
+  dead slots, arbitrary slot order) solved through the paged runner is
+  elementwise-equal to the cold dense solve on the equivalent compact
+  support — scaling AND log domains, cold and warm starts, across bucket
+  -boundary crossings;
+* the all-dead-page fast path: the paged Pallas kernels SKIP pages with
+  no live slot (proven by planting garbage in the dead page's operand)
+  while agreeing elementwise with the masked XLA oracles;
+* zero post-warmup retraces: any number of insert/evict/re-solve cycles
+  at fixed capacity replays one compiled executable;
+* store bookkeeping: page-table CSR view, most-filled-page allocation,
+  in-place overwrite, eviction, capacity errors, page-granular flush;
+* serving: mutation coalescing through the admission queue — many
+  submitted mutations per pair, ONE warm re-solve per flush.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.geometry import FactoredPositive
+from repro.core.paged import PagedFactored
+from repro.core.sinkhorn import sinkhorn_geometry, sinkhorn_log_geometry
+from repro.kernels.paged import (
+    paged_contract_ref,
+    paged_feature_contract_pallas,
+    paged_feature_matvec_pallas,
+    paged_halfstep_pallas,
+    paged_matvec_ref,
+)
+from repro.serving.streaming import StreamingOTService
+from repro.streaming import (
+    PagedFeatureStore,
+    StreamingDistribution,
+    StreamingSolver,
+    bucket_capacity,
+)
+
+RNG = np.random.default_rng(42)
+EPS = 0.4
+TOL = 1e-6
+
+
+def _feats(n, r, rng=RNG):
+    return (np.abs(rng.normal(size=(n, r))) + 0.1).astype(np.float32)
+
+
+def _weights(n, rng=RNG):
+    return rng.uniform(0.5, 1.5, n).astype(np.float32)
+
+
+def _dense_ref(xi, zeta, wa, wb, method, **kw):
+    geom = FactoredPositive(xi=jnp.asarray(xi), zeta=jnp.asarray(zeta),
+                            eps=EPS)
+    a = jnp.asarray(wa / wa.sum())
+    b = jnp.asarray(wb / wb.sum())
+    f = sinkhorn_geometry if method == "scaling" else sinkhorn_log_geometry
+    return f(geom, a, b, tol=TOL, use_pallas=False, **kw)
+
+
+def _pair(n=50, m=40, r=8, method="scaling", use_pallas=False):
+    xi, zeta = _feats(n, r), _feats(m, r)
+    wa, wb = _weights(n), _weights(m)
+    dx = StreamingDistribution.from_features(
+        [("x", i) for i in range(n)], xi, wa, eps=EPS)
+    dy = StreamingDistribution.from_features(
+        [("y", j) for j in range(m)], zeta, wb, eps=EPS)
+    sol = StreamingSolver(method=method, tol=TOL, use_pallas=use_pallas)
+    pair = sol.register("p", dx, dy)
+    return sol, pair, (xi, zeta, wa, wb)
+
+
+def _live_rows(dist, ids):
+    return [dist.store.slot_of(i) for i in ids]
+
+
+# ---------------------------------------------------------------------------
+# Parity matrix: streamed vs cold dense on the equivalent compact support
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["scaling", "log"])
+def test_cold_parity_elementwise(method):
+    """A paged cold solve (dead-slot padding, normalized-in-runner
+    weights) is ELEMENTWISE equal to the compact dense solve — not just
+    at the fixed point: scaling seeds u0 = live mask, log pins dead
+    potentials to -inf, so the trajectories coincide from iteration 0."""
+    sol, pair, (xi, zeta, wa, wb) = _pair(method=method)
+    res = sol.cold_solve(pair)
+    ref = _dense_ref(xi, zeta, wa, wb, method)
+    rows = _live_rows(pair.x, [("x", i) for i in range(len(wa))])
+    cols = _live_rows(pair.y, [("y", j) for j in range(len(wb))])
+    assert bool(res.converged) and bool(ref.converged)
+    assert int(res.n_iter) == int(ref.n_iter)
+    np.testing.assert_allclose(float(res.cost), float(ref.cost),
+                               rtol=0, atol=5e-6)
+    np.testing.assert_allclose(np.asarray(res.f)[rows], np.asarray(ref.f),
+                               rtol=0, atol=5e-6)
+    np.testing.assert_allclose(np.asarray(res.g)[cols], np.asarray(ref.g),
+                               rtol=0, atol=5e-6)
+    # dead slots are exactly masked
+    dead = ~pair.x.live_mask()
+    if method == "scaling":
+        assert np.all(np.asarray(res.u)[dead] == 0.0)
+    assert np.all(np.isneginf(np.asarray(res.f)[dead]))
+
+
+@pytest.mark.parametrize("method", ["scaling", "log"])
+def test_insert_evict_warm_parity(method):
+    """Insert + evict + warm re-solve converges to the same coupling as
+    a cold dense solve of the post-mutation support (cost is invariant
+    under the potentials' gauge freedom; both ends converged to tol)."""
+    n, m, r = 50, 40, 8
+    sol, pair, (xi, zeta, wa, wb) = _pair(n, m, r, method=method)
+    sol.re_solve(pair)
+
+    new_xi, new_w = _feats(6, r), _weights(6)
+    res = sol.update(
+        pair,
+        remove_x=[("x", 0), ("x", 7), ("x", 13)],
+        add_x=dict(ids=[("nx", k) for k in range(6)], feats=new_xi,
+                   weights=new_w),
+        remove_y=[("y", 2)],
+    )
+    assert bool(res.converged)
+    assert pair.n_warm >= 1
+
+    keep_x = [i for i in range(n) if i not in (0, 7, 13)]
+    keep_y = [j for j in range(m) if j != 2]
+    xi_m = np.concatenate([xi[keep_x], new_xi])
+    wa_m = np.concatenate([wa[keep_x], new_w])
+    ref = _dense_ref(xi_m, zeta[keep_y], wa_m, wb[keep_y], method)
+    np.testing.assert_allclose(float(res.cost), float(ref.cost),
+                               rtol=0, atol=1e-5)
+    assert float(res.marginal_err) <= TOL
+    # a second cold solve through the SAME paged runner is again
+    # elementwise-identical to dense (the equivalent-support invariant
+    # holds at any occupancy pattern, not just the fresh packing)
+    res_cold = sol.cold_solve(pair)
+    rows = _live_rows(pair.x, [("x", i) for i in keep_x]
+                      + [("nx", k) for k in range(6)])
+    np.testing.assert_allclose(np.asarray(res_cold.f)[rows],
+                               np.asarray(ref.f), rtol=0, atol=5e-6)
+
+
+@pytest.mark.parametrize("method", ["scaling", "log"])
+def test_bucket_boundary_crossing(method):
+    """Inserting past capacity compact-grows the store to the next
+    bucket; the persisted potentials ride through the slot permutation
+    and the post-crossing solve still matches dense cold."""
+    n, m, r = 50, 40, 8
+    sol, pair, (xi, zeta, wa, wb) = _pair(n, m, r, method=method)
+    sol.re_solve(pair)
+    cap0 = pair.x.capacity
+    k = cap0 - n + 5                      # forces the crossing
+    big_xi, big_w = _feats(k, r), _weights(k)
+    res = sol.update(pair, add_x=dict(
+        ids=[("big", i) for i in range(k)], feats=big_xi, weights=big_w))
+    assert pair.x.capacity > cap0
+    assert pair.x.capacity % pair.x.store.page_size == 0
+    assert bool(res.converged)
+    xi_m = np.concatenate([xi, big_xi])
+    wa_m = np.concatenate([wa, big_w])
+    ref = _dense_ref(xi_m, zeta, wa_m, wb, method)
+    np.testing.assert_allclose(float(res.cost), float(ref.cost),
+                               rtol=0, atol=1e-5)
+
+
+def test_warm_restart_fewer_iterations():
+    """Re-solving after a small mutation from the previous potentials
+    takes no more iterations than the cold solve of the same state —
+    the whole point of persisting duals."""
+    sol, pair, _ = _pair(n=60, m=60, method="scaling")
+    sol.re_solve(pair)
+    res_noop = sol.re_solve(pair)         # no mutation: instant
+    res_cold = sol.cold_solve(pair)
+    assert int(res_noop.n_iter) <= int(res_cold.n_iter)
+
+
+# ---------------------------------------------------------------------------
+# Paged kernels: all-dead-page skip path
+# ---------------------------------------------------------------------------
+
+
+def test_all_dead_page_skipped_not_read():
+    """The contract kernel must SKIP all-dead pages: garbage planted in
+    a dead page's u-block changes nothing (the dense unmasked product
+    would differ, proving the predicate actually gates the work)."""
+    C, r, B, ps = 192, 8, 4, 64
+    xi = jnp.asarray(_feats(C, r))
+    u = jnp.asarray(np.abs(RNG.normal(size=(C, B))).astype(np.float32))
+    # page 1 fully dead; plant non-zero garbage there
+    u = u.at[ps:2 * ps].set(1e6)
+    live = jnp.asarray(np.array([ps, 0, ps], np.int32))
+    got = paged_feature_contract_pallas(xi, u, live, page_size=ps,
+                                        interpret=True)
+    want = paged_contract_ref(xi, u, live, page_size=ps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    dense = np.asarray(xi).T @ np.asarray(u)
+    assert not np.allclose(np.asarray(got), dense)
+
+
+def test_paged_row_kernels_zero_dead_pages():
+    C, r, B, ps = 128, 8, 3, 64
+    xi = jnp.asarray(_feats(C, r))
+    t = jnp.asarray(np.abs(RNG.normal(size=(r, B))).astype(np.float32) + .1)
+    marg = jnp.asarray(np.abs(RNG.normal(size=(C, B))).astype(np.float32))
+    marg = marg.at[:ps].set(0.0)          # dead page's marginal is zero
+    live = jnp.asarray(np.array([0, ps], np.int32))
+    half = paged_halfstep_pallas(xi, t, marg, live, page_size=ps,
+                                 interpret=True)
+    assert np.all(np.asarray(half)[:ps] == 0.0)
+    mv = paged_feature_matvec_pallas(xi, t, live, page_size=ps,
+                                     interpret=True)
+    assert np.all(np.asarray(mv)[:ps] == 0.0)
+    want = paged_matvec_ref(xi, t, live, page_size=ps)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_paged_plan_parity_scaling():
+    """End-to-end: the paged Pallas plan (use_pallas=True, interpret
+    backend) solves to the same result as the XLA-operator path."""
+    sol_x, pair_x, data = _pair(n=40, m=30, method="scaling",
+                                use_pallas=False)
+    res_xla = sol_x.cold_solve(pair_x)
+    sol_p = StreamingSolver(method="scaling", tol=TOL, use_pallas=True)
+    dxp = StreamingDistribution.from_features(
+        [("x", i) for i in range(40)], data[0], data[2], eps=EPS)
+    dyp = StreamingDistribution.from_features(
+        [("y", j) for j in range(30)], data[1], data[3], eps=EPS)
+    pair_p = sol_p.register("pal", dxp, dyp)
+    res_pal = sol_p.cold_solve(pair_p)
+    np.testing.assert_allclose(float(res_pal.cost), float(res_xla.cost),
+                               rtol=0, atol=2e-4)
+    assert bool(res_pal.converged)
+
+
+def test_paged_geometry_validation():
+    xi = jnp.ones((128, 4))
+    live = jnp.ones((2,), jnp.int32)
+    with pytest.raises(ValueError, match="exactly one factor pair"):
+        PagedFactored(xi=xi, zeta=xi, log_xi=xi, log_zeta=xi,
+                      page_live_x=live, page_live_y=live, eps=0.1)
+    with pytest.raises(ValueError, match="page_live"):
+        PagedFactored(xi=xi, zeta=xi, page_live_x=None, page_live_y=None,
+                      eps=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Retrace gate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["scaling", "log"])
+def test_zero_retraces_after_warmup(method):
+    sol, pair, _ = _pair(n=30, m=30, method=method)
+    sol.warmup(pair)
+    t0 = sol.traces
+    sol.cold_solve(pair)
+    sol.re_solve(pair)
+    for k in range(3):
+        f = _feats(2, 8)
+        sol.update(pair,
+                   remove_x=[("x", 2 * k), ("x", 2 * k + 1)],
+                   add_x=dict(ids=[("n", k, 0), ("n", k, 1)], feats=f,
+                              weights=np.ones(2, np.float32)))
+    assert sol.traces == t0, "occupancy changes must never retrace"
+
+
+# ---------------------------------------------------------------------------
+# Store bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_store_pagetable_and_allocation():
+    st = PagedFeatureStore(4, 256, page_size=64)
+    st.add(list(range(70)), np.ones((70, 4), np.float32),
+           np.ones(70, np.float32))
+    assert st.n_live == 70
+    np.testing.assert_array_equal(st.page_live, [64, 6, 0, 0])
+    np.testing.assert_array_equal(st.page_indices, [0, 1])
+    np.testing.assert_array_equal(st.page_indptr, [0, 64, 70])
+    assert st.last_page_len == 6
+    # eviction empties page 0 except one row -> new inserts pack into the
+    # MOST-FILLED non-full page (page 1), not the emptier page 0
+    st.remove(list(range(63)))
+    st.add([1000], 2 * np.ones((1, 4), np.float32),
+           np.ones(1, np.float32))
+    assert st.slot_of(1000) // 64 == 1
+    # overwrite stays in place
+    slot = st.slot_of(1000)
+    st.add([1000], 3 * np.ones((1, 4), np.float32),
+           np.ones(1, np.float32))
+    assert st.slot_of(1000) == slot
+    assert st.weights_host()[slot] == 1.0
+    assert np.all(np.asarray(st.device_features())[slot] == 3.0)
+
+
+def test_store_flush_is_page_granular():
+    st = PagedFeatureStore(4, 256, page_size=64)
+    st.add([0], np.ones((1, 4), np.float32), np.ones(1, np.float32))
+    assert st.flush() >= 0                 # initial full upload
+    st.add([1], np.ones((1, 4), np.float32), np.ones(1, np.float32))
+    assert st.flush() == 1                 # one dirty page
+    st.add([2, 200], np.ones((2, 4), np.float32),
+           np.ones(2, np.float32))
+    st.remove([0])                         # eviction marks nothing dirty
+    assert st.flush() == 1                 # both adds packed one page
+    assert st.flush() == 0
+
+
+def test_store_errors():
+    st = PagedFeatureStore(4, 64, page_size=64)
+    ones = np.ones((1, 4), np.float32)
+    w1 = np.ones(1, np.float32)
+    with pytest.raises(ValueError, match="strictly positive"):
+        st.add([0], ones, np.zeros(1, np.float32))
+    with pytest.raises(ValueError, match="strictly positive"):
+        st.add([0], np.zeros((1, 4), np.float32), w1)
+    with pytest.raises(KeyError):
+        st.remove([99])
+    st.add(list(range(64)), np.ones((64, 4), np.float32),
+           np.ones(64, np.float32))
+    with pytest.raises(ValueError, match="overflows capacity"):
+        st.add([999], ones, w1)
+    with pytest.raises(ValueError, match="multiple"):
+        PagedFeatureStore(4, 100, page_size=64)
+    with pytest.raises(ValueError, match="multiple"):
+        PagedFeatureStore(4, 64, page_size=30)
+
+
+def test_bucket_capacity_headroom():
+    for n in (1, 63, 64, 500, 5000):
+        cap = bucket_capacity(n, 64)
+        assert cap % 64 == 0 and cap > n
+
+
+def test_from_points_featurizes_consistently():
+    r, d, n = 16, 3, 20
+    anchors = RNG.normal(size=(r, d)).astype(np.float32)
+    pts = RNG.normal(size=(n, d)).astype(np.float32)
+    dist = StreamingDistribution.from_points(
+        list(range(n)), pts, np.ones(n, np.float32), anchors, eps=1.0)
+    assert dist.store.rank == r
+    feats0 = np.asarray(dist.device_features())[
+        [dist.store.slot_of(i) for i in range(n)]]
+    assert np.all(feats0 > 0)
+    dist.add([n], points=pts[:1], weights=np.ones(1, np.float32))
+    row = np.asarray(dist.device_features())[dist.store.slot_of(n)]
+    np.testing.assert_allclose(row, feats0[0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Serving front end
+# ---------------------------------------------------------------------------
+
+
+def test_service_coalesces_mutations():
+    n, m, r = 30, 30, 8
+    xi, zeta = _feats(n, r), _feats(m, r)
+    dx = StreamingDistribution.from_features(
+        list(range(n)), xi, np.ones(n, np.float32), eps=EPS)
+    dy = StreamingDistribution.from_features(
+        list(range(m)), zeta, np.ones(m, np.float32), eps=EPS)
+    clock = {"t": 0.0}
+    svc = StreamingOTService(
+        solver=StreamingSolver(method="scaling", tol=TOL,
+                               use_pallas=False),
+        max_batch=8, max_wait=1.0, clock=lambda: clock["t"])
+    svc.register("p", dx, dy)
+    t1 = svc.submit_update("p", remove_x=[0])
+    t2 = svc.submit_update("p", add_x=dict(
+        ids=[900], feats=_feats(1, r), weights=np.ones(1, np.float32)))
+    t3 = svc.submit_update("p", remove_y=[5])
+    assert svc.pump() == 0                 # before the deadline: nothing
+    clock["t"] = 2.0
+    assert svc.pump() == 3                 # one flush resolves all three
+    assert svc.solves == 1                 # ... with ONE warm re-solve
+    assert t1.result is t2.result is t3.result
+    assert bool(t3.result.converged)
+    assert svc.stats()["coalesce_ratio"] == 3.0
+    # the post-batch state reflects every mutation
+    assert dx.n_live == n and dy.n_live == m - 1
+    ref = _dense_ref(np.concatenate([xi[1:], np.asarray(
+        dx.store._feats[dx.store.slot_of(900)])[None]]),
+        zeta[[j for j in range(m) if j != 5]],
+        np.ones(n, np.float32),
+        np.ones(m - 1, np.float32), "scaling")
+    np.testing.assert_allclose(float(t1.result.cost), float(ref.cost),
+                               rtol=0, atol=1e-5)
+
+
+def test_service_unknown_pair_and_drain():
+    svc = StreamingOTService(solver=StreamingSolver(use_pallas=False))
+    with pytest.raises(KeyError):
+        svc.submit_update("nope", remove_x=[0])
+    n = 20
+    xi = _feats(n, 8)
+    dx = StreamingDistribution.from_features(
+        list(range(n)), xi, np.ones(n, np.float32), eps=EPS)
+    dy = StreamingDistribution.from_features(
+        list(range(n)), xi, np.ones(n, np.float32), eps=EPS)
+    svc.register("q", dx, dy)
+    t = svc.submit_update("q", remove_x=[3])
+    assert svc.pending == 1
+    assert svc.drain() == 1
+    assert t.done and t.latency >= 0.0
