@@ -123,15 +123,22 @@ def main():
 
     def one_step(state, step):
         params, opt_state = state
-        params, opt_state, m = step_fn(params, opt_state,
-                                       data.batch_at(step))
+        new_params, new_opt, m = step_fn(params, opt_state,
+                                         data.batch_at(step))
+        mm = {k: float(v) for k, v in jax.device_get(m).items()}
+        if not sup.admit_step(mm):
+            # non-finite OT loss / grad norm: applying this update would
+            # poison the parameters permanently — keep the OLD state and
+            # train on the next batch (the supervisor bounds the streak)
+            print(f"[train_lm] step {step:4d} SKIPPED on non-finite "
+                  f"metrics (streak {sup.consecutive_skips})")
+            return params, opt_state
         if step % 20 == 0:
-            mm = {k: float(v) for k, v in m.items()}
             hist.append(mm)
             print(f"[train_lm] step {step:4d} loss {mm['loss']:.4f} "
                   f"ce {mm['ce']:.4f} ot {mm.get('ot', 0):.4f} "
                   f"lr {mm['lr']:.2e} ({time.time() - t0:.0f}s)")
-        return params, opt_state
+        return new_params, new_opt
 
     traces_after_warmup = step_fn._cache_size() if args.strict else None
     (params, opt_state), end = sup.run((params, opt_state), 0, args.steps,
@@ -144,7 +151,10 @@ def main():
         assert all(math.isfinite(m[k]) for m in hist for k in m), hist
         retraces = step_fn._cache_size() - traces_after_warmup
         assert retraces == 0, f"{retraces} post-warmup retraces"
-        print(f"[train_lm] strict: all losses finite, "
+        assert sup.skipped_steps == 0, (
+            f"{sup.skipped_steps} steps skipped on non-finite metrics in "
+            "a clean run")
+        print(f"[train_lm] strict: all losses finite, 0 skipped steps, "
               f"0 post-warmup retraces ({step_fn._cache_size()} trace)")
 
 

@@ -706,6 +706,9 @@ def solve(
 
     if isinstance(problem, SolveSpec):
         spec = problem
+        if spec.recovery is not None:
+            from ..resilience.ladder import solve_with_recovery
+            return solve_with_recovery(spec).result
         kw = spec.solver_kwargs()
         kw.pop("method")
         kw.pop("schedule")
@@ -1276,18 +1279,18 @@ def solve_many(
         specs: List[SolveSpec] = list(problems)
         head = specs[0]
         shared = (head.method, head.tol, head.max_iter, head.momentum,
-                  head.policy)
+                  head.policy, head.recovery)
         for s in specs:
             if not isinstance(s, SolveSpec):
                 raise TypeError(
                     "solve_many: mixed SolveSpec and OTProblem entries")
             if (s.method, s.tol, s.max_iter, s.momentum,
-                    s.policy) != shared:
+                    s.policy, s.recovery) != shared:
                 raise ValueError(
                     "solve_many(specs) needs one shared method/tol/"
-                    "max_iter/momentum/policy across specs (engines are "
-                    "per-configuration); call solve(spec) per problem "
-                    "for heterogeneous configs")
+                    "max_iter/momentum/policy/recovery across specs "
+                    "(engines are per-configuration); call solve(spec) "
+                    "per problem for heterogeneous configs")
             if s.schedule is not None or s.rank is not None \
                     or s.key is not None:
                 raise ValueError(
@@ -1320,8 +1323,25 @@ def solve_many(
                 use_pallas=pol.use_pallas, inner_steps=pol.inner_steps,
                 check_every=pol.check_every, precision=pol.precision,
             )
-            return engine.solve_many([s.problem() for s in specs],
-                                     f_inits=f_inits, g_inits=g_inits)
+            results = engine.solve_many([s.problem() for s in specs],
+                                        f_inits=f_inits, g_inits=g_inits)
+        if head.recovery is not None:
+            # failed lanes climb the ladder INDIVIDUALLY (batched lanes
+            # are independent under vmap — a diverged lane never poisons
+            # its siblings, so only the failures pay for retries); the
+            # already-computed lane result seeds the ladder so the base
+            # configuration is not re-failed
+            from ..resilience.health import classify
+            from ..resilience.ladder import solve_with_recovery
+            for i, r in enumerate(results):
+                fi = f_inits[i] if f_inits is not None else None
+                gi = g_inits[i] if g_inits is not None else None
+                h = classify(r, f_init=fi, g_init=gi,
+                             a=specs[i].problem().a, b=specs[i].problem().b)
+                if h.verdict not in head.recovery.accept:
+                    results[i] = solve_with_recovery(
+                        specs[i], first_attempt=r).result
+        return results
     if (use_pallas is not None or inner_steps is not None
             or check_every is not None or precision != "highest"):
         warnings.warn(

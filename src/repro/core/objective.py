@@ -202,7 +202,13 @@ class OTObjective:
               b: jax.Array) -> SinkhornResult:
         """Raw balanced-transport solve (scaling space) under this policy —
         the routing entry point. NOT differentiable by itself: callers own
-        the gradient discipline (routers stop-gradient the plan)."""
+        the gradient discipline (routers stop-gradient the plan).
+
+        Outside ``jit``, ``result.health`` classifies the outcome
+        (``ok`` / ``maxed_out`` / ``diverged``); traced callers (the MoE
+        router) read ``result.diverged``, which stays an array — the
+        training-step guard (``TrainingSupervisor.admit_step``) is where
+        a non-finite routing solve turns into a skipped step."""
         if geom.eps != self.eps:
             raise ValueError(
                 f"geometry eps={geom.eps} != objective eps={self.eps}")

@@ -108,6 +108,19 @@ class SinkhornResult(NamedTuple):
         unchanged."""
         return ~(jnp.isfinite(self.marginal_err) & jnp.isfinite(self.cost))
 
+    @property
+    def health(self):
+        """Host-side :class:`~repro.resilience.health.SolveHealth` verdict
+        for a CONCRETE unbatched result (``ok`` / ``maxed_out`` /
+        ``diverged``). Pulls the scalar diagnostics to host — inside
+        ``jit``/``vmap`` use :attr:`diverged`, which stays an array. The
+        ``poisoned_warm_start`` verdict needs the warm-start context the
+        result alone does not carry; classify through
+        :func:`repro.resilience.classify` with ``f_init``/``g_init``
+        to enable it."""
+        from ..resilience.health import classify  # lazy: avoid cycle
+        return classify(self)
+
 
 # ---------------------------------------------------------------------------
 # Building blocks
@@ -161,9 +174,14 @@ def make_scaling_step(
 
     def step(carry):
         u, v, s = carry
-        # geometric over-relaxation: u <- u_old^{1-w} * u_new^{w}
-        v_new = relax_scaling(b / s, v, momentum)
-        u_new = relax_scaling(a / matvec(v_new), u, momentum)
+        # geometric over-relaxation: u <- u_old^{1-w} * u_new^{w}.
+        # Dead (zero-mass) atoms are pinned to scaling 0 rather than left
+        # to b/s: a stale kernel row under a dead slot can underflow its
+        # contraction to exactly 0, and the resulting 0/0 = NaN would ride
+        # the next matvec into every LIVE lane.
+        v_new = relax_scaling(jnp.where(b > 0, b / s, 0.0), v, momentum)
+        u_new = relax_scaling(jnp.where(a > 0, a / matvec(v_new), 0.0),
+                              u, momentum)
         s_new = rmatvec(u_new)
         err = err_reduce(jnp.abs(v_new * s_new - b))
         return (u_new, v_new, s_new), err

@@ -35,6 +35,7 @@ from typing import Optional
 
 import jax
 
+from ..resilience.policy import RecoveryPolicy
 from .api import EpsSchedule, OTProblem, METHODS
 from .geometry import Geometry
 from .objective import ExecutionPolicy
@@ -52,6 +53,10 @@ class SolveSpec:
     policy once (``ExecutionPolicy.from_config(cfg, mesh=mesh)``) and
     every surface sees the same sharding decision. ``rank``/``key`` feed
     the cost-family-converting methods ("arccos", "nystrom").
+    ``recovery`` optionally attaches a
+    :class:`~repro.resilience.RecoveryPolicy`: ``solve(spec)`` then
+    classifies the result and climbs the fallback ladder on failure
+    (``solve_many`` re-solves failed lanes the same way).
     """
 
     geometry: Geometry
@@ -65,6 +70,7 @@ class SolveSpec:
     policy: ExecutionPolicy = ExecutionPolicy()
     rank: Optional[int] = None
     key: Optional[jax.Array] = None
+    recovery: Optional[RecoveryPolicy] = None
 
     def __post_init__(self):
         if not isinstance(self.geometry, Geometry):
@@ -76,6 +82,11 @@ class SolveSpec:
                 f"method must be one of {METHODS}, got {self.method!r}")
         if not isinstance(self.policy, ExecutionPolicy):
             raise TypeError("SolveSpec.policy must be an ExecutionPolicy")
+        if self.recovery is not None and not isinstance(self.recovery,
+                                                        RecoveryPolicy):
+            raise TypeError(
+                "SolveSpec.recovery must be a "
+                "repro.resilience.RecoveryPolicy (or None)")
 
     # -- bridges -------------------------------------------------------
 

@@ -30,6 +30,8 @@ import math
 import time
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 from ..checkpoint import CheckpointManager
 
 __all__ = ["FaultToleranceConfig", "TrainingSupervisor", "remesh_plan",
@@ -43,6 +45,10 @@ class FaultToleranceConfig:
     max_restarts: int = 10
     straggler_tolerance: float = 2.0      # x median step time
     straggler_windows: int = 3
+    # bound on CONSECUTIVE steps skipped for non-finite OT metrics
+    # (admit_step): past it the run aborts instead of silently making no
+    # progress on a persistently-diverging objective
+    max_consecutive_skips: int = 8
 
 
 def suggest_save_every(step_time_s: float, ckpt_time_s: float,
@@ -77,6 +83,41 @@ class TrainingSupervisor:
         self.cfg = cfg
         self.restarts = 0
         self.step_times: List[float] = []
+        self.skipped_steps = 0          # total steps refused by admit_step
+        self.consecutive_skips = 0      # current refusal streak
+
+    def admit_step(self, metrics: Dict) -> bool:
+        """Training-step guard for the OT objective layer: admit the step
+        only when every numeric metric (OT loss, grad norm, ...) is
+        finite.
+
+        A diverged routing/GAN solve surfaces here as a NaN loss or grad
+        norm — applying that update poisons the parameters permanently,
+        so the caller keeps the OLD state on refusal (skip the step, keep
+        training on the next batch). Refusals are counted; a streak
+        longer than ``max_consecutive_skips`` aborts with ``RuntimeError``
+        — at that point the objective is persistently diverging and
+        skipping forever would burn the job silently.
+        """
+        bad = []
+        for k, v in metrics.items():
+            try:
+                arr = np.asarray(v, dtype=np.float64)
+            except (TypeError, ValueError):
+                continue        # non-numeric metric (tags, names): ignore
+            if not np.all(np.isfinite(arr)):
+                bad.append(k)
+        if not bad:
+            self.consecutive_skips = 0
+            return True
+        self.skipped_steps += 1
+        self.consecutive_skips += 1
+        if self.consecutive_skips > self.cfg.max_consecutive_skips:
+            raise RuntimeError(
+                f"aborting: {self.consecutive_skips} consecutive steps "
+                f"skipped on non-finite metrics {bad} (bound "
+                f"max_consecutive_skips={self.cfg.max_consecutive_skips})")
+        return False
 
     def run(self, state, start_step: int, n_steps: int,
             step_fn: Callable, *, on_restore: Optional[Callable] = None):

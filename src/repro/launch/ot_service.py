@@ -16,6 +16,16 @@ insert/evict mutations coalesced through the admission queue
 (:class:`repro.serving.StreamingOTService`), one warm re-solve per pair
 per flush. ``--strict`` then gates ZERO post-warmup runner retraces
 across every mutation.
+
+``--chaos`` runs the RESILIENCE lane: a seeded fault campaign
+(:class:`repro.resilience.ChaosInjector`) mixes NaN/inf feature rows,
+NaN weights, an adversarially small eps (Gaussian features underflow ->
+the scaling path diverges; the log rung recovers), injected runner
+exceptions, a poisoned warm cache and a skewed clock into the traffic,
+with the recovery ladder + quarantine enabled. ``--strict`` then gates:
+every request terminates in a finite result or a STRUCTURED refusal (no
+NaN cost is ever returned), zero post-warmup compiles/retraces across
+the main AND rung runner caches, and zero unhandled exceptions.
 """
 from __future__ import annotations
 
@@ -106,6 +116,227 @@ def run_stream(args) -> int:
     return 0
 
 
+def run_chaos(args) -> int:
+    """Chaos-tested serving: seeded fault campaign through the recovery
+    ladder, with the no-NaN / no-retrace / no-unhandled-exception gates."""
+    from collections import Counter
+
+    from ..core.api import OTProblem, solve
+    from ..core.geometry import GaussianPointCloud
+    from ..resilience import ChaosInjector, ChaosSpec, RecoveryPolicy
+    from ..serving import QuarantineError, QueueFullError
+
+    eps = args.chaos_eps
+    r = args.rank
+    rng = np.random.default_rng(args.seed)
+    inj = ChaosInjector(ChaosSpec(
+        seed=args.seed, nan_feature_frac=0.15, inf_feature_frac=0.10,
+        nan_weight_frac=0.10, runner_fault_frac=0.08, clock_skew_s=0.005))
+
+    # -- fault-assigned problem pool ----------------------------------------
+    # healthy slots alternate between two classes: "gauss" (Gaussian
+    # features at an adversarially small eps — exp(-d^2/eps) underflows,
+    # the scaling path diverges, the LOG rung recovers a finite result)
+    # and "benign" (explicit positive features — converges as-is)
+    pool_n = args.pool
+    size_classes = ((24, 20), (40, 32))
+    kinds = inj.assign_faults(pool_n)
+    problems, classes = [], []
+    healthy_seen = 0
+    for i, kind in enumerate(kinds):
+        n, m = size_classes[i % len(size_classes)]
+        xi = np.asarray(rng.uniform(0.05, 1.05, (n, r)), np.float32)
+        zeta = np.asarray(rng.uniform(0.05, 1.05, (m, r)), np.float32)
+        a = np.full(n, 1.0 / n, np.float32)
+        b = np.full(m, 1.0 / m, np.float32)
+        if kind == "":
+            if healthy_seen % 2 == 0:
+                x = np.asarray(rng.normal(size=(n, 2)), np.float32)
+                y = np.asarray(rng.normal(size=(m, 2)), np.float32)
+                anchors = np.asarray(rng.normal(size=(r, 2)), np.float32)
+                geom = GaussianPointCloud.build(x, y, anchors, eps=eps)
+                problems.append(OTProblem(geometry=geom, a=a, b=b))
+                classes.append("gauss_small_eps")
+            else:
+                problems.append(OTProblem.from_features(xi, zeta, a, b,
+                                                        eps=eps))
+                classes.append("benign")
+            healthy_seen += 1
+        elif kind == "nan_weight":
+            problems.append(OTProblem.from_features(
+                xi, zeta, inj.corrupt_weights(a), b, eps=eps))
+            classes.append(kind)
+        else:
+            problems.append(OTProblem.from_features(
+                inj.corrupt_features(xi, kind), zeta, a, b, eps=eps))
+            classes.append(kind)
+
+    svc = OTService(
+        eps=eps, method="factored", tol=args.tol, max_iter=300,
+        max_batch=args.max_batch, max_wait=args.max_wait_ms * 1e-3,
+        recovery=RecoveryPolicy(), quarantine_after=2,
+        max_depth=16, chaos_hook=inj.fault_hook(),
+        clock=inj.skewed(time.monotonic),
+    )
+
+    cells, seen = [], set()
+    for p in problems:
+        ka, kb = svc.engine.kernel_data(p)
+        shape = svc.engine.batch_shape(ka, kb)
+        if shape not in seen:
+            seen.add(shape)
+            cells.append(shape)
+    t0 = time.monotonic()
+    built_main = svc.warmup(cells)
+    built_rungs = svc.warmup_recovery(cells)
+    print(f"[ot-chaos] warmup: {built_main} main + {built_rungs} rung "
+          f"runners over {len(cells)} cells in {time.monotonic() - t0:.1f}s")
+
+    # fp32 log-domain ground truth for the healthy classes, under the
+    # SAME iteration budget as the service: parity then measures whether
+    # a recovered result IS the log-domain answer (not an iteration-count
+    # artifact)
+    ref_cost = {}
+    for i, cls in enumerate(classes):
+        if cls in ("gauss_small_eps", "benign"):
+            res = solve(problems[i], method="log_factored", tol=args.tol,
+                        max_iter=300)
+            ref_cost[i] = float(res.cost)
+
+    # -- drive: round-robin closed loop with fault handling -----------------
+    outcomes = Counter()
+    tickets = []
+    unhandled = 0
+    poisoned = False
+    t0 = time.monotonic()
+    for j in range(args.requests):
+        i = j % pool_n
+        if not poisoned and j == pool_n and ref_cost:
+            # one full round served: corrupt a healthy pair's warm-cache
+            # entry under its REAL fingerprint (bypassing put-validation)
+            # — its next repeat must evict on get and cold-solve
+            i0 = next(iter(ref_cost))
+            ka, kb = svc.engine.kernel_data(problems[i0])
+            sk, fk = svc.warm.keys_for(
+                np.asarray(ka, np.float32), np.asarray(kb, np.float32),
+                np.asarray(problems[i0].a, np.float32),
+                np.asarray(problems[i0].b, np.float32))
+            inj.poison_warm_cache(svc.warm, sk, fk,
+                                  problems[i0].a.shape[0],
+                                  problems[i0].b.shape[0])
+            poisoned = True
+        try:
+            tickets.append((i, svc.submit(problems[i])))
+        except QuarantineError:
+            outcomes["quarantined_submit"] += 1
+            continue
+        except QueueFullError:
+            outcomes["shed_submit"] += 1
+            continue
+        except Exception:
+            unhandled += 1
+            continue
+        try:
+            svc.pump()
+        except Exception:
+            unhandled += 1
+    try:
+        svc.drain()
+    except Exception:
+        unhandled += 1
+    dt = time.monotonic() - t0
+
+    # -- shed burst: overflow the bounded queue without pumping -------------
+    benign = [i for i, c in enumerate(classes) if c == "benign"]
+    if benign:
+        for _ in range(20):
+            try:
+                tickets.append((benign[0], svc.submit(problems[benign[0]])))
+            except QueueFullError:
+                outcomes["shed_submit"] += 1
+            except QuarantineError:
+                outcomes["quarantined_submit"] += 1
+        try:
+            svc.drain()
+        except Exception:
+            unhandled += 1
+
+    # -- verdicts, parity, gates --------------------------------------------
+    nonterminal = sum(not t.done for _, t in tickets)
+    nan_served = 0
+    parity = 0.0
+    per_class = {}
+    for i, t in tickets:
+        cls = classes[i]
+        hist = per_class.setdefault(cls, Counter())
+        if t.refusal is not None:
+            hist["refused:" + t.refusal.reason] += 1
+        elif t.result is not None:
+            v = t.health.verdict if t.health is not None else "?"
+            hist[("recovered:" + "+".join(t.rungs)) if t.rungs else v] += 1
+            c = float(t.result.cost)
+            if not np.isfinite(c):
+                nan_served += 1
+            elif i in ref_cost:
+                parity = max(parity,
+                             abs(c - ref_cost[i]) / max(1.0, abs(ref_cost[i])))
+    stats = svc.stats()
+    rec, runner, warm = stats["recovery"], stats["runner"], stats["warm"]
+    post_main = runner["misses"] - built_main
+    post_rung = rec["rung_compiles"] - built_rungs
+
+    print(f"[ot-chaos] drove {len(tickets)} admitted requests over "
+          f"{pool_n} pool entries in {dt:.2f}s; injected: {inj.stats()}")
+    print(f"[ot-chaos] fault mix -> outcomes:")
+    for cls in sorted(per_class):
+        print(f"[ot-chaos]   {cls:16s} {dict(per_class[cls])}")
+    print(f"[ot-chaos] submit refusals: {dict(outcomes)}")
+    print(f"[ot-chaos] recovery: attempts={rec['attempts']} "
+          f"recovered={rec['recovered']} refused={rec['refused']} "
+          f"runner_faults={rec['runner_faults']} "
+          f"rung_hist={rec['rung_hist']} "
+          f"quarantined={rec['quarantined']} shed={stats['shed']}")
+    print(f"[ot-chaos] warm cache: poisoned_rejects="
+          f"{warm['poisoned_rejects']} poisoned_evictions="
+          f"{warm['poisoned_evictions']}")
+    print(f"[ot-chaos] parity: recovered/served healthy results within "
+          f"{parity:.2e} (rel) of fp32 log-domain ground truth")
+    print(f"[ot-chaos] compiles after warmup: main={post_main} "
+          f"rung={post_rung} extra_traces="
+          f"{runner['extra_traces'] + rec['rung_extra_traces']}; "
+          f"unhandled exceptions={unhandled}; "
+          f"non-terminal tickets={nonterminal}; "
+          f"NaN results served={nan_served}")
+
+    failures = []
+    if nonterminal:
+        failures.append(f"{nonterminal} tickets not terminal")
+    if nan_served:
+        failures.append(f"{nan_served} NaN-cost results served")
+    if unhandled:
+        failures.append(f"{unhandled} unhandled exceptions")
+    if rec["recovered"] == 0:
+        failures.append("recovery ladder never rescued a request")
+    if rec["refused"] == 0:
+        failures.append("no structured refusals (faults not exercised)")
+    if warm["poisoned_evictions"] == 0:
+        failures.append("poisoned warm entry was not evicted on get")
+    if stats["shed"] == 0:
+        failures.append("queue depth bound never shed")
+    if post_main or post_rung or runner["extra_traces"] \
+            or rec["rung_extra_traces"]:
+        failures.append(
+            f"post-warmup compiles/retraces (main={post_main} "
+            f"rung={post_rung})")
+    if parity > 1e-3:
+        failures.append(f"parity {parity:.2e} vs ground truth")
+    if args.strict and failures:
+        print("[ot-chaos] STRICT FAILURE: " + "; ".join(failures),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=200)
@@ -131,8 +362,16 @@ def main(argv=None) -> int:
                          "re-solve) instead of the request-trace service")
     ap.add_argument("--stream-n", type=int, default=400,
                     help="--stream: live support size per distribution")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the resilience lane: seeded fault injection "
+                         "through the recovery ladder (see module doc)")
+    ap.add_argument("--chaos-eps", type=float, default=1e-4,
+                    help="--chaos: the adversarially small eps the "
+                         "Gaussian-feature class underflows at")
     args = ap.parse_args(argv)
 
+    if args.chaos:
+        return run_chaos(args)
     if args.stream:
         return run_stream(args)
 

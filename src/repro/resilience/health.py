@@ -1,0 +1,125 @@
+"""Failure classification: one cheap host-side verdict per solve.
+
+The solvers already surface a structured ``diverged`` flag
+(:class:`~repro.core.sinkhorn.SinkhornResult`), but every caller was left
+to interpret it alone — and a diverged solve whose warm start was itself
+poisoned (NaN potentials inherited from an earlier blow-up) looks exactly
+like a fresh numerical failure unless somebody checks the init. This
+module is the shared vocabulary:
+
+``ok``
+    converged with finite marginal error and cost.
+``maxed_out``
+    hit the iteration budget but everything is finite — the result is a
+    USABLE partial solve (today's ``converged=False`` semantics).
+``diverged``
+    the iteration blew up: non-finite marginal error or dual value
+    (scaling-domain over/underflow at small eps, signed-Nystrom failure,
+    NaN inputs).
+``poisoned_warm_start``
+    diverged AND the warm-start potentials handed to the solve were
+    themselves corrupt (NaN/+inf anywhere, or ``-inf`` on an atom that
+    carries mass). The distinction matters for recovery: a poisoned warm
+    start is fixed by a cold restart, not by changing solver domain.
+
+Classification is HOST-side on purpose: verdicts drive Python-level
+control flow (retry ladders, cache eviction, refusals), so they pull the
+scalar diagnostics once and never trace. Call it on concrete results
+only — inside ``jit`` use ``SinkhornResult.diverged``, which stays a lazy
+array property.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["VERDICTS", "SolveHealth", "classify", "warm_is_poisoned"]
+
+VERDICTS: Tuple[str, ...] = (
+    "ok", "maxed_out", "diverged", "poisoned_warm_start",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveHealth:
+    """One solve's verdict plus the scalar diagnostics it was read from."""
+
+    verdict: str
+    marginal_err: float
+    cost: float
+    n_iter: int
+    converged: bool
+
+    @property
+    def ok(self) -> bool:
+        return self.verdict == "ok"
+
+    @property
+    def finite(self) -> bool:
+        """True when the result is safe to hand to a caller (converged or
+        a usable finite partial solve)."""
+        return self.verdict in ("ok", "maxed_out")
+
+    @property
+    def failed(self) -> bool:
+        return not self.finite
+
+    def describe(self) -> str:
+        return (f"{self.verdict} (err={self.marginal_err:.3g} "
+                f"cost={self.cost:.6g} iters={self.n_iter})")
+
+
+def warm_is_poisoned(f0: Optional[np.ndarray], g0: Optional[np.ndarray],
+                     a: Optional[np.ndarray] = None,
+                     b: Optional[np.ndarray] = None) -> bool:
+    """Were these warm-start potentials corrupt before the solve ran?
+
+    NaN or ``+inf`` anywhere is poison. ``-inf`` is poison only on atoms
+    that carry mass: zero-weight atoms legitimately sit at ``f = -inf``
+    in the log domain (the exactness contract for bucket padding), so a
+    blanket finiteness check would misclassify every padded solve.
+    Without weights, ``-inf`` counts as poison (conservative).
+    """
+    for pot, w in ((f0, a), (g0, b)):
+        if pot is None:
+            continue
+        x = np.asarray(pot, np.float64)
+        if np.isnan(x).any() or np.isposinf(x).any():
+            return True
+        neg = np.isneginf(x)
+        if not neg.any():
+            continue
+        if w is None:
+            return True
+        if neg[np.asarray(w, np.float64) > 0].any():
+            return True
+    return False
+
+
+def classify(res, *, f_init: Optional[np.ndarray] = None,
+             g_init: Optional[np.ndarray] = None,
+             a: Optional[np.ndarray] = None,
+             b: Optional[np.ndarray] = None) -> SolveHealth:
+    """Verdict for ONE concrete (unbatched) solver result.
+
+    ``res`` is anything with scalar ``marginal_err``/``cost``/``n_iter``/
+    ``converged`` fields (a :class:`~repro.core.sinkhorn.SinkhornResult`
+    or an unpadded lane of one). Pass the warm-start potentials the solve
+    was LAUNCHED with (plus the weights, so legitimate ``-inf`` entries
+    on dead atoms are not misread) to enable the
+    ``poisoned_warm_start`` verdict.
+    """
+    err = float(np.asarray(res.marginal_err))
+    cost = float(np.asarray(res.cost))
+    n_iter = int(np.asarray(res.n_iter))
+    converged = bool(np.asarray(res.converged))
+    if np.isfinite(err) and np.isfinite(cost):
+        verdict = "ok" if converged else "maxed_out"
+    elif warm_is_poisoned(f_init, g_init, a, b):
+        verdict = "poisoned_warm_start"
+    else:
+        verdict = "diverged"
+    return SolveHealth(verdict=verdict, marginal_err=err, cost=cost,
+                       n_iter=n_iter, converged=converged)

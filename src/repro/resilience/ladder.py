@@ -1,0 +1,176 @@
+"""Ladder executor for the core ``solve`` surface.
+
+``solve_with_recovery`` runs a :class:`~repro.core.spec.SolveSpec` whose
+``recovery`` field names a :class:`RecoveryPolicy`: the base
+configuration solves first; on a failed verdict the executor climbs the
+rung ladder, applying each rung's degradation CUMULATIVELY (see
+:mod:`repro.resilience.policy`) and re-solving cold, until a verdict in
+``policy.accept`` lands or the attempt/deadline budget runs out.
+
+This is the offline/one-shot twin of the serving executor
+(:meth:`OTService._recover_one <repro.serving.service.OTService>`): the
+serving one routes retries through pre-planned batch-1 runners so they
+never trace under traffic; here each attempt goes through the ordinary
+``solve`` path, whose engines/stage-runners are cached per configuration
+— a ladder climbed twice reuses every executable the first climb built.
+
+The ``raise_eps`` rung respects the :class:`~repro.core.api.EpsSchedule`
+warm-start semantics by construction: it installs a schedule starting at
+``eps * eps_scale``, so the annealed cascade hands each stage's
+potentials to the next and the final stage solves AT the requested eps —
+the caller still gets the answer it asked for, reached along a
+better-conditioned path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+from .health import SolveHealth, classify
+from .policy import RecoveryPolicy
+
+__all__ = ["RecoveredSolve", "solve_with_recovery"]
+
+# scaling-domain methods and their log-domain twins; methods absent here
+# (already log-domain, or cost-family conversions whose solver domain is
+# not a free knob) skip the log_domain rung
+LOG_TWIN = {
+    "factored": "log_factored",
+    "quadratic": "log_quadratic",
+    "sharded": "sharded_log",
+}
+LOG_METHODS = ("log_factored", "log_quadratic", "sharded_log",
+               "accelerated")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveredSolve:
+    """Outcome of a ladder run: the final result plus the climb record."""
+
+    result: object                       # SinkhornResult
+    health: SolveHealth
+    attempts: int
+    rungs: Tuple[str, ...]               # rungs actually executed, in order
+    history: Tuple[Tuple[str, SolveHealth], ...]   # ("initial"/rung, verdict)
+
+    @property
+    def recovered(self) -> bool:
+        return self.health.finite and self.attempts > 1
+
+
+@dataclasses.dataclass
+class _LadderState:
+    """The cumulative configuration the ladder has degraded to."""
+
+    method: str
+    precision: str
+    use_pallas: Optional[bool]
+    inner_steps: Optional[int]
+    check_every: Optional[int]
+    schedule: object                     # Optional[EpsSchedule]
+
+
+def apply_rung(state: _LadderState, rung: str, spec,
+               policy: RecoveryPolicy) -> bool:
+    """Mutate ``state`` with one rung's degradation; False = rung does
+    not apply to this configuration (skipped, no attempt consumed)."""
+    from ..core.api import EpsSchedule
+
+    if rung == "log_domain":
+        twin = LOG_TWIN.get(state.method)
+        if twin is None or state.method in LOG_METHODS:
+            return False
+        state.method = twin
+        return True
+    if rung == "precision_f32":
+        if state.precision == "highest":
+            return False
+        state.precision = "highest"
+        return True
+    if rung == "raise_eps":
+        if not spec.geometry.anneal_capable:
+            return False
+        eps_init = float(spec.eps) * policy.eps_scale
+        prev = state.schedule
+        if prev is not None and prev.eps_init >= eps_init:
+            return False
+        state.schedule = EpsSchedule(eps_init=eps_init)
+        return True
+    if rung == "per_iteration":
+        if (state.use_pallas is False and state.inner_steps == 1
+                and state.check_every == 1):
+            return False
+        state.use_pallas = False
+        state.inner_steps = 1
+        state.check_every = 1
+        return True
+    if rung == "cold_restart":
+        # the core surface has no warm-start inputs: every spec solve is
+        # already cold, so a bare re-run of the same configuration cannot
+        # change the outcome — the rung belongs to the serving/streaming
+        # executors, which do hold warm state to discard
+        return False
+    raise ValueError(f"unknown rung {rung!r}")
+
+
+def solve_with_recovery(spec, *, first_attempt=None) -> RecoveredSolve:
+    """Run ``spec`` through its recovery ladder (see module docstring).
+
+    ``first_attempt`` optionally supplies an ALREADY-COMPUTED result of
+    the base configuration (e.g. a failed lane from a batched
+    ``solve_many`` bucket), so the ladder does not pay for re-failing it.
+    """
+    from ..core.api import _auto_method, solve
+
+    policy: Optional[RecoveryPolicy] = spec.recovery
+    if policy is None:
+        policy = RecoveryPolicy()
+    base = spec.replace(recovery=None)
+    t0 = time.monotonic()
+
+    res = solve(base) if first_attempt is None else first_attempt
+    health = classify(res)
+    history: List[Tuple[str, SolveHealth]] = [("initial", health)]
+    attempts = 1
+    rungs_run: List[str] = []
+    if health.verdict in policy.accept:
+        return RecoveredSolve(res, health, attempts, (), tuple(history))
+
+    method = base.method
+    if method == "auto":
+        method = _auto_method(base.problem(), base.policy.mesh)
+    pol = base.policy
+    state = _LadderState(
+        method=method, precision=pol.precision, use_pallas=pol.use_pallas,
+        inner_steps=pol.inner_steps, check_every=pol.check_every,
+        schedule=base.schedule,
+    )
+
+    for rung in policy.ordered_rungs(health.verdict):
+        if attempts >= policy.max_attempts:
+            break
+        if (policy.deadline_s is not None
+                and time.monotonic() - t0 >= policy.deadline_s):
+            break
+        if not apply_rung(state, rung, base, policy):
+            continue
+        attempt_spec = base.replace(
+            method=state.method,
+            schedule=state.schedule,
+            policy=dataclasses.replace(
+                pol, precision=state.precision,
+                use_pallas=state.use_pallas,
+                inner_steps=state.inner_steps,
+                check_every=state.check_every,
+            ),
+        )
+        res = solve(attempt_spec)
+        health = classify(res)
+        attempts += 1
+        rungs_run.append(rung)
+        history.append((rung, health))
+        if health.verdict in policy.accept:
+            break
+    return RecoveredSolve(res, health, attempts, tuple(rungs_run),
+                          tuple(history))

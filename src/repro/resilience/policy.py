@@ -1,0 +1,112 @@
+"""RecoveryPolicy: the ordered, bounded fallback ladder for failed solves.
+
+The classic entropic-OT fix ladder (Cuturi, arXiv 1306.0895) — switch the
+iteration to the log domain, raise eps — extended with the execution
+degradations this stack actually has: precision escalation (bf16 factor
+storage back to f32), dropping the fused megakernel to the per-iteration
+XLA plan, and cold-restarting away from suspect warm potentials. A
+:class:`RecoveryPolicy` names WHICH rungs may run, in WHAT order, and the
+attempt/deadline budget; the executors live in
+:mod:`repro.resilience.ladder` (core ``solve``) and
+:class:`~repro.serving.service.OTService` (pre-planned serving runners).
+
+Rung semantics are CUMULATIVE: each executed rung adds its degradation on
+top of the previous ones (log domain + f32 + ...), so the ladder walks a
+monotone sequence of increasingly conservative configurations rather than
+trying each fix in isolation. Rungs that do not apply to the failing
+solve (already log-domain; geometry pins its kernel to one eps; already
+per-iteration) are skipped without consuming an attempt. Every recovery
+attempt discards warm-start potentials — a retry must never inherit the
+state that may have caused the failure — which makes the dedicated
+``cold_restart`` rung the "retry the SAME configuration, cold" step; the
+executors pull it to the front when the verdict is
+``poisoned_warm_start`` (that failure is BY DEFINITION fixed by
+discarding state, not by changing domain).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from .health import VERDICTS
+
+__all__ = ["RUNGS", "RecoveryPolicy"]
+
+# canonical order: cheapest numerically-targeted fix first, the paper-/
+# Cuturi-classic log-domain switch, then precision, then eps escalation
+# (annealed back down so the answer is still AT the requested eps), then
+# execution-plan conservatism, then a bare cold retry
+RUNGS: Tuple[str, ...] = (
+    "log_domain",       # scaling -> log-domain twin of the method
+    "precision_f32",    # bf16 factor storage -> full f32
+    "raise_eps",        # EpsSchedule from eps*eps_scale, annealed back down
+    "per_iteration",    # drop megakernel/fused plan -> per-iteration XLA
+    "cold_restart",     # same configuration, warm potentials discarded
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """Bounded fallback ladder attached to a :class:`SolveSpec` (and to
+    :class:`~repro.serving.service.OTService`).
+
+    ``rungs``
+        ordered subset of :data:`RUNGS` the executor may climb.
+    ``max_attempts``
+        TOTAL solve attempts including the original one (so
+        ``max_attempts=1`` classifies but never retries).
+    ``deadline_s``
+        optional wall-clock budget for the whole ladder; checked between
+        attempts (an in-flight solve is never interrupted).
+    ``eps_scale``
+        the ``raise_eps`` rung anneals from ``eps * eps_scale`` back down
+        to the requested eps through the standard
+        :class:`~repro.core.api.EpsSchedule` warm-start semantics.
+    ``accept``
+        verdicts treated as terminal success. The default accepts
+        ``maxed_out``: a finite budget-capped partial solve is today's
+        normal ``converged=False`` outcome and climbing further buys
+        convergence speed, not safety. Narrow to ``("ok",)`` to make the
+        ladder chase convergence itself.
+    """
+
+    rungs: Tuple[str, ...] = RUNGS
+    max_attempts: int = 4
+    deadline_s: Optional[float] = None
+    eps_scale: float = 10.0
+    accept: Tuple[str, ...] = ("ok", "maxed_out")
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.eps_scale <= 1.0:
+            raise ValueError(
+                f"eps_scale must be > 1 (raise eps), got {self.eps_scale}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be positive, got {self.deadline_s}")
+        unknown = [r for r in self.rungs if r not in RUNGS]
+        if unknown:
+            raise ValueError(
+                f"unknown recovery rungs {unknown}; expected a subset of "
+                f"{RUNGS}")
+        if len(set(self.rungs)) != len(self.rungs):
+            raise ValueError(f"duplicate rungs in {self.rungs}")
+        bad = [v for v in self.accept if v not in VERDICTS]
+        if bad:
+            raise ValueError(
+                f"accept names unknown verdicts {bad}; expected a subset "
+                f"of {VERDICTS}")
+        if not self.accept:
+            raise ValueError("accept must name at least one verdict")
+
+    def ordered_rungs(self, first_verdict: str) -> Tuple[str, ...]:
+        """The climb order for a failure with ``first_verdict``: a
+        poisoned warm start pulls ``cold_restart`` to the front (discard
+        the suspect state before degrading anything else)."""
+        if (first_verdict == "poisoned_warm_start"
+                and "cold_restart" in self.rungs):
+            rest = tuple(r for r in self.rungs if r != "cold_restart")
+            return ("cold_restart",) + rest
+        return self.rungs

@@ -9,9 +9,9 @@
   streaming    — StreamingOTService: coalesced mutations over paged
                  supports, one warm re-solve per pair per flush
 """
-from .admission import AdmissionQueue
+from .admission import AdmissionQueue, QueueFullError
 from .runner_cache import BucketRunner, RunnerCache
-from .service import OTService, Ticket
+from .service import OTService, QuarantineError, Refusal, Ticket
 from .streaming import MutationTicket, StreamingOTService
 from .traffic import (
     Request,
@@ -28,6 +28,9 @@ __all__ = [
     "BucketRunner",
     "MutationTicket",
     "OTService",
+    "QuarantineError",
+    "QueueFullError",
+    "Refusal",
     "StreamingOTService",
     "Request",
     "RunnerCache",

@@ -16,13 +16,25 @@ FIFO order is preserved within each bucket, so two requests of the same
 shape complete in submission order. The queue is time-driven but owns no
 clock: callers pass ``now`` (the service injects either a wall clock or a
 test-controlled fake).
+
+Depth is BOUNDED when ``max_depth`` is set: a stalled pump (or an
+arrival burst past capacity) sheds load at submit time — ``add`` raises
+:class:`QueueFullError` and counts the shed — instead of growing memory
+without limit. Shedding at admission is the honest failure mode: the
+caller gets an immediate structured refusal while queued requests keep
+their latency budget.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Generic, Hashable, List, Optional, Tuple, TypeVar
 
-__all__ = ["AdmissionQueue"]
+__all__ = ["AdmissionQueue", "QueueFullError"]
+
+
+class QueueFullError(RuntimeError):
+    """Raised by :meth:`AdmissionQueue.add` when depth is at
+    ``max_depth`` — the load-shedding refusal."""
 
 T = TypeVar("T")
 
@@ -38,22 +50,37 @@ class AdmissionQueue(Generic[T]):
     flush policy. Generic over the item payload; keys must be hashable
     (the service keys by ``OTBatchShape``)."""
 
-    def __init__(self, *, max_batch: int = 8, max_wait: float = 0.005):
+    def __init__(self, *, max_batch: int = 8, max_wait: float = 0.005,
+                 max_depth: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait < 0:
             raise ValueError(f"max_wait must be >= 0, got {max_wait}")
+        if max_depth is not None and max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1, got {max_depth}")
         self.max_batch = max_batch
         self.max_wait = max_wait
+        self.max_depth = max_depth
         self._groups: Dict[Hashable, _Group[T]] = {}
         self.admitted = 0
+        self.shed = 0               # submissions refused at the depth bound
         self.flushed_full = 0       # groups flushed because they filled
         self.flushed_aged = 0       # groups flushed on the max_wait deadline
 
     def __len__(self) -> int:
         return sum(len(g.items) for g in self._groups.values())
 
+    @property
+    def full(self) -> bool:
+        return self.max_depth is not None and len(self) >= self.max_depth
+
     def add(self, key: Hashable, item: T, now: float) -> None:
+        if self.full:
+            self.shed += 1
+            raise QueueFullError(
+                f"admission queue at max_depth={self.max_depth} "
+                f"({len(self)} pending) — request shed; retry after a "
+                "pump/drain")
         group = self._groups.get(key)
         if group is None:
             group = self._groups[key] = _Group([], [])

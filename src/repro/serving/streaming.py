@@ -31,7 +31,7 @@ __all__ = ["MutationTicket", "StreamingOTService"]
 class MutationTicket:
     """Handle for one submitted mutation; resolved at the batch flush."""
 
-    __slots__ = ("seq", "pair", "t_submit", "t_done", "result")
+    __slots__ = ("seq", "pair", "t_submit", "t_done", "result", "health")
 
     def __init__(self, seq: int, pair: str, t_submit: float):
         self.seq = seq
@@ -39,6 +39,7 @@ class MutationTicket:
         self.t_submit = t_submit
         self.t_done: Optional[float] = None
         self.result: Optional[SinkhornResult] = None
+        self.health = None      # SolveHealth of the flush that served it
 
     @property
     def done(self) -> bool:
@@ -136,6 +137,7 @@ class StreamingOTService:
             t_done = self.clock() if force or now is None else now
             for ticket, *_ in items:
                 ticket.result = result
+                ticket.health = pair.last_health
                 ticket.t_done = t_done
                 resolved += 1
             self.dispatched += len(items)

@@ -23,6 +23,24 @@ otherwise a NEAR hit (same supports, different weights — the potentials
 are merely a good init; the solve still converges to ITS OWN fixed point
 exactly, just in fewer iterations). Both reduce iterations; only exact
 hits allow serving byte-equal results.
+
+Poisoning defense
+-----------------
+A diverged solve's potentials are NaN — re-serving them as a warm start
+poisons every later request for the same pair (the NaN init propagates
+through the first iteration). The cache therefore validates on BOTH
+sides:
+
+* **put** — ``store`` rejects potentials that are non-finite on any
+  mass-carrying atom (``-inf`` on a zero-weight atom is the log domain's
+  legitimate dead-slot encoding and is SANITIZED to 0, so stored entries
+  are always fully finite). Rejects keep any previously-stored good
+  entry.
+* **get** — ``lookup`` re-validates the stored arrays and EVICTS corrupt
+  entries (a snapshot written by a pre-validation build, bit flips, or a
+  deliberate ``store(..., validate=False)`` in the chaos lane), counting
+  the request as a miss: the caller cold-solves instead of inheriting
+  NaNs.
 """
 from __future__ import annotations
 
@@ -97,6 +115,8 @@ class WarmStartCache:
         self.near_hits = 0
         self.misses = 0
         self.evictions = 0
+        self.poisoned_rejects = 0       # non-finite potentials refused on put
+        self.poisoned_evictions = 0     # corrupt entries evicted on get
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -110,8 +130,16 @@ class WarmStartCache:
         if entry is None:
             self.misses += 1
             return None
-        self._entries.move_to_end(support_key)
         stored_full, f, g = entry
+        # get-side validation: stored entries are sanitized to be fully
+        # finite, so ANY non-finite value marks corruption — evict and
+        # cold-solve rather than re-serve poison
+        if not (np.isfinite(f).all() and np.isfinite(g).all()):
+            del self._entries[support_key]
+            self.poisoned_evictions += 1
+            self.misses += 1
+            return None
+        self._entries.move_to_end(support_key)
         exact = stored_full == full_key
         if exact:
             self.exact_hits += 1
@@ -119,12 +147,37 @@ class WarmStartCache:
             self.near_hits += 1
         return WarmHit(f=f, g=g, exact=exact)
 
-    def store(self, support_key: bytes, full_key: bytes, f, g) -> None:
-        self._entries[support_key] = (full_key, np.asarray(f), np.asarray(g))
+    def store(self, support_key: bytes, full_key: bytes, f, g,
+              a=None, b=None, *, validate: bool = True) -> bool:
+        """Insert converged potentials; returns False when put-side
+        validation refuses them (diverged solve — NaN/+inf anywhere, or
+        ``-inf`` on a mass-carrying atom when weights are supplied).
+        Legitimate ``-inf`` on zero-weight atoms is sanitized to 0 (the
+        cold init for that atom) so stored entries are always fully
+        finite and the get-side check stays a plain ``isfinite``.
+        ``validate=False`` bypasses everything — the chaos/test hook for
+        simulating a corrupted cache."""
+        f = np.asarray(f)
+        g = np.asarray(g)
+        if validate:
+            fin_f, fin_g = np.isfinite(f), np.isfinite(g)
+            dead_f = (np.asarray(a) <= 0) if a is not None \
+                else np.zeros(f.shape, bool)
+            dead_g = (np.asarray(b) <= 0) if b is not None \
+                else np.zeros(g.shape, bool)
+            if not ((fin_f | dead_f).all() and (fin_g | dead_g).all()):
+                self.poisoned_rejects += 1
+                return False
+            if not fin_f.all():
+                f = np.where(fin_f, f, 0.0).astype(f.dtype)
+            if not fin_g.all():
+                g = np.where(fin_g, g, 0.0).astype(g.dtype)
+        self._entries[support_key] = (full_key, f, g)
         self._entries.move_to_end(support_key)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.evictions += 1
+        return True
 
     @property
     def hits(self) -> int:
@@ -139,4 +192,6 @@ class WarmStartCache:
         return dict(size=len(self), capacity=self.capacity,
                     exact_hits=self.exact_hits, near_hits=self.near_hits,
                     misses=self.misses, evictions=self.evictions,
+                    poisoned_rejects=self.poisoned_rejects,
+                    poisoned_evictions=self.poisoned_evictions,
                     hit_rate=self.hit_rate)

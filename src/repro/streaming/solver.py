@@ -41,6 +41,7 @@ from ..core.sinkhorn import (
     sinkhorn_geometry,
     sinkhorn_log_geometry,
 )
+from ..resilience.health import SolveHealth, classify
 from .store import StreamingDistribution
 
 __all__ = ["StreamingPair", "StreamingSolver"]
@@ -55,7 +56,8 @@ class StreamingPair:
     """One tracked OT problem between two streaming distributions, with
     its persisted warm-start potentials (host numpy, full capacity)."""
 
-    __slots__ = ("name", "x", "y", "f", "g", "n_solves", "n_warm")
+    __slots__ = ("name", "x", "y", "f", "g", "n_solves", "n_warm",
+                 "last_health")
 
     def __init__(self, name: str, x: StreamingDistribution,
                  y: StreamingDistribution):
@@ -69,6 +71,7 @@ class StreamingPair:
         self.g: Optional[np.ndarray] = None
         self.n_solves = 0
         self.n_warm = 0
+        self.last_health: Optional[SolveHealth] = None
 
     @property
     def eps(self) -> float:
@@ -76,21 +79,26 @@ class StreamingPair:
 
 
 def _prep_init(saved: Optional[np.ndarray], live: np.ndarray,
-               remap: Optional[np.ndarray], capacity: int) -> np.ndarray:
+               remap: Optional[np.ndarray], capacity: int
+               ) -> Tuple[np.ndarray, int]:
     """Host-side warm-start preparation: remap through a bucket crossing,
-    then reset dead / newly-live / non-finite slots to 0 (cold)."""
+    then reset dead / newly-live / non-finite slots to 0 (cold). Returns
+    ``(f0, n_reset)`` where ``n_reset`` counts LIVE slots whose saved
+    potential was non-finite — the poisoned-warm-state signal the solver's
+    ``warm_resets`` counter aggregates."""
     f0 = np.zeros((capacity,), np.float32)
     if saved is None:
-        return f0
+        return f0, 0
     if remap is not None:
         moved = remap >= 0
         f0[moved] = saved[remap[moved]]
     elif saved.shape[0] == capacity:
         f0[:] = saved
     else:                       # shape drifted without a remap: cold
-        return f0
+        return f0, 0
+    n_reset = int(np.sum(live & ~np.isfinite(f0)))
     f0 = np.where(live & np.isfinite(f0), f0, 0.0).astype(np.float32)
-    return f0
+    return f0, n_reset
 
 
 class StreamingSolver:
@@ -120,6 +128,11 @@ class StreamingSolver:
             collections.OrderedDict()
         self._pairs: Dict[str, StreamingPair] = {}
         self.warmups = 0
+        # resilience accounting (see _solve)
+        self.diverged = 0        # solves that ended non-finite (terminal)
+        self.cold_fallbacks = 0  # warm failures retried cold, same runner
+        self.state_resets = 0    # pairs whose persisted potentials dropped
+        self.warm_resets = 0     # live slots with non-finite saved warm state
 
     # -- pair registry -------------------------------------------------
 
@@ -220,20 +233,44 @@ class StreamingSolver:
         dx, dy = pair.x, pair.y
         remap_x, remap_y = dx.take_remap(), dy.take_remap()
         live_x, live_y = dx.live_mask(), dy.live_mask()
-        if warm and pair.f is not None:
-            f0 = _prep_init(pair.f, live_x, remap_x, dx.capacity)
-            g0 = _prep_init(pair.g, live_y, remap_y, dy.capacity)
+        warm_used = warm and pair.f is not None
+        if warm_used:
+            f0, rf = _prep_init(pair.f, live_x, remap_x, dx.capacity)
+            g0, rg = _prep_init(pair.g, live_y, remap_y, dy.capacity)
+            self.warm_resets += rf + rg
             pair.n_warm += 1
         else:
             f0 = np.zeros((dx.capacity,), np.float32)
             g0 = np.zeros((dy.capacity,), np.float32)
         fn = self._runner(self._key(pair))
-        res = fn(dx.device_features(), dy.device_features(),
-                 dx.page_live(), dy.page_live(),
-                 dx.weights_host(), dy.weights_host(), f0, g0)
+        operands = (dx.device_features(), dy.device_features(),
+                    dx.page_live(), dy.page_live(),
+                    dx.weights_host(), dy.weights_host())
+        res = fn(*operands, f0, g0)
+        health = classify(res)
+        if health.failed and warm_used:
+            # post-mutation warm re-solve went non-finite: the persisted
+            # potentials no longer fit the mutated state (or were subtly
+            # poisoned). Fall back to a COLD solve through the SAME
+            # compiled runner — zero-init operands hit the identical jit
+            # cache entry, so the retry costs iterations, never a retrace.
+            self.cold_fallbacks += 1
+            res = fn(*operands,
+                     np.zeros((dx.capacity,), np.float32),
+                     np.zeros((dy.capacity,), np.float32))
+            health = classify(res)
+        pair.n_solves += 1
+        pair.last_health = health
+        if health.failed:
+            # terminal divergence: drop the persisted potentials so the
+            # NEXT solve starts cold instead of inheriting poison
+            self.diverged += 1
+            if pair.f is not None:
+                self.state_resets += 1
+            pair.f = pair.g = None
+            return res
         pair.f = np.asarray(res.f)
         pair.g = np.asarray(res.g)
-        pair.n_solves += 1
         return res
 
     def re_solve(self, pair: StreamingPair) -> SinkhornResult:
@@ -275,4 +312,8 @@ class StreamingSolver:
             "traces": self.traces,
             "warmups": self.warmups,
             "method": self.method,
+            "diverged": self.diverged,
+            "cold_fallbacks": self.cold_fallbacks,
+            "state_resets": self.state_resets,
+            "warm_resets": self.warm_resets,
         }

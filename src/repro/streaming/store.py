@@ -205,12 +205,17 @@ class PagedFeatureStore:
         if weights.shape != (len(ids),):
             raise ValueError(
                 f"weights shape {weights.shape} != ({len(ids)},)")
-        if np.any(weights <= 0):
-            raise ValueError("weights must be strictly positive "
+        if np.any(weights <= 0) or not np.all(np.isfinite(weights)):
+            raise ValueError("weights must be strictly positive and finite "
                              "(zero weight means dead — use remove)")
-        if np.any(feats <= 0):
-            raise ValueError("feature rows must be strictly positive "
-                             "(linear-space positive-feature invariant)")
+        # NaN slips through a bare `<= 0` comparison (NaN <= 0 is False):
+        # a non-finite row would sit in a LIVE page where weight masking
+        # cannot scrub it (0 * NaN = NaN inside the contractions), so the
+        # invariant is enforced here, at the only write boundary
+        if np.any(feats <= 0) or not np.all(np.isfinite(feats)):
+            raise ValueError("feature rows must be strictly positive and "
+                             "finite (linear-space positive-feature "
+                             "invariant)")
         n_new = sum(1 for i in ids if i not in self._slot)
         if self.n_live + n_new > self.capacity:
             raise ValueError(
